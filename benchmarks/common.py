@@ -1,0 +1,228 @@
+"""Shared benchmark workload: a trained tiny LM + real KV caches + codec.
+
+Every paper-figure benchmark needs (a) a model whose KV caches have *learned*
+structure (the codec's insights are properties of trained models), (b)
+calibration + eval contexts, (c) profiled codec tables.  This module trains
+the tiny smollm config once on the synthetic topic-retrieval corpus
+(~400 steps, CPU-minutes), caches everything under results/bench_assets/,
+and exposes a Workload handle to the individual benchmarks.
+
+TTFT modeling (CPU container, TPU target): transmission times come from the
+trace-driven network simulator; compute times from the v5e cost model
+(197 TFLOP/s bf16, MFU factor) — see ``CostModel``.  Codec decode throughput
+is measured on this host and scaled by a documented constant (the paper's
+GPU AC decodes at GB/s; our lane-parallel rANS maps the same way onto the
+TPU VPU — EXPERIMENTS.md §Perf discusses sensitivity to this constant).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.configs.base import ArchConfig
+from repro.core import codec as kvcodec
+from repro.data.synthetic import MarkovLM, TopicRetrievalTask
+from repro.models import build
+from repro.serving.engine import Engine
+from repro.serving.kv_layout import caches_to_codec_kv
+from repro.training import AdamWConfig, Trainer
+
+ASSET_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench_assets")
+
+# -- cost model -------------------------------------------------------------
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Maps work to seconds on the serving accelerator."""
+
+    n_chips: int = 1
+    mfu: float = 0.45  # achieved fraction of peak during prefill
+    decode_bytes_per_s: float = 4e9  # codec decode throughput (GB/s-class)
+    gpu_share: float = 1.0  # 1/n under n concurrent requests (Fig. 13a)
+
+    def prefill_s(self, engine: Engine, n_tokens: int, prefix: int = 0) -> float:
+        fl = engine.prefill_flops(n_tokens, prefix)
+        return fl / (PEAK_FLOPS * self.n_chips * self.mfu * self.gpu_share)
+
+    def decode_s(self, nbytes: float) -> float:
+        return nbytes / (self.decode_bytes_per_s * self.gpu_share)
+
+
+# -- workload ---------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Workload:
+    cfg: ArchConfig
+    params: Dict
+    engine: Engine
+    task: TopicRetrievalTask
+    lm: MarkovLM
+    ctx_tokens: np.ndarray  # (n_ctx, T) eval contexts
+    ctx_topics: np.ndarray  # (n_ctx,)
+    kv_caches: List[np.ndarray]  # per-context (L, 2, T, C)
+    tables: kvcodec.CodecTables
+    codec_cfg: kvcodec.CodecConfig
+    ctx_len: int
+
+    def kv_fp16_bytes(self) -> int:
+        L, _, T, C = self.kv_caches[0].shape
+        return kvcodec.kv_nbytes_fp16(L, T, C)
+
+
+_CACHED: Dict[str, Workload] = {}
+
+
+def _train_tiny(cfg: ArchConfig, task: TopicRetrievalTask, steps: int, seq: int):
+    model = build(cfg)
+    ck = CheckpointManager(os.path.join(ASSET_DIR, "ckpt-v2"), keep=1)
+
+    def batch_fn(step):
+        rng = np.random.default_rng(7_000 + step)
+        return next(task.training_batches(rng, batch=8, seq=seq))
+
+    tr = Trainer(
+        model=model,
+        opt_cfg=AdamWConfig(lr=3e-3, warmup_steps=30, weight_decay=0.01),
+        batch_fn=batch_fn,
+        ckpt=ck,
+        ckpt_every=100,
+        log_every=100,
+    )
+    state = tr.init_or_restore(0)
+    if int(state.step) < steps:
+        state, _ = tr.run(state, steps)
+    return model, state.params
+
+
+def get_workload(
+    *,
+    arch: str = "smollm-360m",
+    train_steps: int = 400,
+    n_contexts: int = 8,
+    ctx_len: int = 768,
+    n_calib: int = 4,
+    precision: int = 11,
+    group_size: int = 10,
+    refresh: bool = False,
+) -> Workload:
+    """Build (or load) the shared benchmark workload."""
+    key = f"{arch}.{train_steps}.{n_contexts}.{ctx_len}.{precision}.{group_size}"
+    if key in _CACHED and not refresh:
+        return _CACHED[key]
+    os.makedirs(ASSET_DIR, exist_ok=True)
+
+    import dataclasses
+
+    # prerope_kv_cache: serving-layer choice that preserves Insight-1 token
+    # locality for K (RoPE's rotation otherwise scrambles adjacent tokens);
+    # stickiness: the synthetic corpus models natural text's local burstiness.
+    cfg = dataclasses.replace(registry.get(arch).tiny(), prerope_kv_cache=True)
+    lm = MarkovLM(vocab_size=cfg.vocab_size, seed=11, stickiness=0.6)
+    task = TopicRetrievalTask(lm=lm)
+    model, params = _train_tiny(cfg, task, train_steps, seq=256)
+
+    engine = Engine(cfg, params, cache_capacity=ctx_len + 64)
+
+    rng = np.random.default_rng(99)
+    ctxs, topics, kvs = [], [], []
+    for i in range(n_contexts + n_calib):
+        ctx, topic = task.make_context(rng, ctx_len)
+        ctxs.append(ctx)
+        topics.append(topic)
+    ctx_tokens = np.stack(ctxs)
+    for i in range(n_contexts + n_calib):
+        _, caches = engine.calculate_kv({"tokens": jnp.asarray(ctx_tokens[i : i + 1])})
+        kvs.append(caches_to_codec_kv(caches, 0, ctx_len))
+
+    codec_cfg = kvcodec.CodecConfig(group_size=group_size, precision=precision)
+    tables = kvcodec.profile(kvs[n_contexts:], codec_cfg)  # calib = last n_calib
+
+    wl = Workload(
+        cfg=cfg,
+        params=params,
+        engine=engine,
+        task=task,
+        lm=lm,
+        ctx_tokens=ctx_tokens[:n_contexts],
+        ctx_topics=np.asarray(topics[:n_contexts]),
+        kv_caches=kvs[:n_contexts],
+        tables=tables,
+        codec_cfg=codec_cfg,
+        ctx_len=ctx_len,
+    )
+    _CACHED[key] = wl
+    return wl
+
+
+# -- quality measurement ----------------------------------------------------
+
+
+def quality_with_kv(
+    wl: Workload, kv_per_ctx: List[Optional[np.ndarray]], n_gen: int = 3
+) -> Dict[str, float]:
+    """Quality metrics when serving from (possibly lossy) KV caches.
+
+    kv_per_ctx[i] = None means use the exact cache (reference).
+    Returns accuracy (topic retrieval), agreement (greedy tokens vs exact
+    cache), and teacher-forced NLL over the generated span.
+    """
+    from repro.serving.kv_layout import codec_kv_to_caches
+
+    eng = wl.engine
+    n_ok = 0
+    n_agree = 0
+    n_tok = 0
+    nll = 0.0
+    for i in range(len(wl.ctx_tokens)):
+        tokens = wl.ctx_tokens[i : i + 1]
+        # reference: exact prefill
+        logits_ref, caches_ref = eng.calculate_kv({"tokens": jnp.asarray(tokens)})
+        first_ref = jnp.argmax(logits_ref[:, -1], -1).astype(jnp.int32)
+        gen_ref = eng.generate_with_kv(caches_ref, first_ref, n_gen)
+
+        kv = kv_per_ctx[i]
+        if kv is None:
+            gen = gen_ref
+            first = first_ref
+            logits_test = logits_ref
+        else:
+            caches = codec_kv_to_caches(
+                kv, wl.cfg, batch=1, capacity=eng.capacity
+            )
+            # first token must come from the compressed cache: decode the
+            # final context token again through the cache
+            caches_m = caches._replace(length=caches.length - 1)
+            logits_test, caches_m = eng._decode(
+                eng.params, jnp.asarray(tokens[:, -1:], jnp.int32), caches_m
+            )
+            first = jnp.argmax(logits_test[:, -1], -1).astype(jnp.int32)
+            gen = eng.generate_with_kv(caches_m, first, n_gen)
+        topic = wl.ctx_topics[i]
+        if topic in set(np.concatenate([[int(first[0])], gen[0]]).tolist()):
+            n_ok += 1
+        n_agree += int((gen == gen_ref).sum()) + int(int(first[0]) == int(first_ref[0]))
+        n_tok += gen.shape[1] + 1
+        # NLL of the reference generation under the test cache logits
+        p = jax.nn.log_softmax(logits_test[:, -1].astype(jnp.float32))
+        nll += -float(p[0, int(first_ref[0])])
+    n = len(wl.ctx_tokens)
+    return {
+        "accuracy": n_ok / n,
+        "agreement": n_agree / max(n_tok, 1),
+        "first_token_nll": nll / n,
+    }

@@ -1,0 +1,79 @@
+"""Fig. 15: codec overheads, measured (wall time on this host).
+
+(a) decode overhead with/without pipelining (simulation over measured rates)
+(b) encode throughput per chunk (offline cost)
+(c) offline delay breakdown (prefill vs encode)
+(d) storage cost: all pre-encoded levels vs quant8 vs raw fp16
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import codec as kvcodec
+from repro.streaming.storage import KVStore
+
+
+def _time(fn, n=3):
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def run(wl=None) -> List[str]:
+    wl = wl or common.get_workload()
+    rows: List[str] = []
+    kv = wl.kv_caches[0]
+    L, _, T, C = kv.shape
+    n_elem = kv.size
+
+    # (b) encode / decode throughput
+    enc_s = _time(lambda: kvcodec.encode_chunk(kv, wl.tables, 1))
+    blob = kvcodec.encode_chunk(kv, wl.tables, 1)
+    dec_s = _time(lambda: kvcodec.decode_chunk(blob, wl.tables))
+    rows.append(f"fig15.encode_us_per_chunk,{enc_s*1e6:.0f},host_bytes_per_s={len(blob)/enc_s:.3e}")
+    rows.append(f"fig15.decode_us_per_chunk,{dec_s*1e6:.0f},host_bytes_per_s={len(blob)/dec_s:.3e}")
+    rows.append(f"fig15.decode_ns_per_element,,{dec_s/n_elem*1e9:.1f}")
+
+    # (a) pipelined vs serial decode contribution to TTFT, 3 Gbps
+    n_chunks = 6
+    chunk_bytes = len(blob)
+    bw = 3e9 / 8
+    t_net = chunk_bytes / bw
+    serial = n_chunks * (t_net + dec_s)
+    pipelined = t_net + max(t_net, dec_s) * (n_chunks - 1) + dec_s
+    rows.append(
+        f"fig15.pipeline_ttft,,serial={serial:.4f};pipelined={pipelined:.4f};"
+        f"saving={1 - pipelined/serial:.2%}"
+    )
+
+    # (c) offline breakdown: prefill vs encode-all-levels (host-measured)
+    import jax.numpy as jnp
+
+    tokens = wl.ctx_tokens[0:1]
+    prefill_s = _time(lambda: wl.engine.calculate_kv({"tokens": jnp.asarray(tokens)})[0].block_until_ready(), n=2)
+    enc_all_s = _time(lambda: kvcodec.encode_all_levels(kv, wl.tables), n=1)
+    rows.append(f"fig15.offline_prefill_s,,{prefill_s:.3f}")
+    rows.append(f"fig15.offline_encode_all_levels_s,,{enc_all_s:.3f}")
+
+    # (d) storage
+    store = KVStore(wl.tables)
+    store.store_kv("c0", kv, chunk_tokens=max(T // 3, 64))
+    total = store.storage_bytes("c0")
+    fp16 = kvcodec.kv_nbytes_fp16(L, T, C)
+    q8 = kvcodec.kv_nbytes_int8(L, T, C)
+    rows.append(
+        f"fig15.storage_bytes,,all_levels={total};fp16={fp16};quant8={q8};"
+        f"ratio_vs_fp16={total/fp16:.2f}"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,84 @@
+"""Fig. 16: contribution of each encoder idea to the KV size reduction.
+
+Progressively (paper order):
+  base      — uniform 8-bit quantization + ONE global symbol distribution
+  +acgroup  — per-(channel,layer) distributions (Insight 3)
+  +delta    — change-based (anchor/delta) encoding (Insight 1)
+  +layerq   — layer-wise quantization bins (Insight 2; the full CacheGen)
+Sizes are real encoded bytes on the workload's KV caches; quality is the
+agreement metric at the matched configuration.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import codec as kvcodec
+from repro.core import gop, quant, rans, tables
+
+
+def _entropy_code_size(sym: np.ndarray, t_idx: np.ndarray, n_tables: int, A: int, k: int) -> int:
+    counts = tables.histogram_symbols(sym, t_idx, n_tables, A)
+    freqs = tables.normalize_freqs(counts, k)
+    ct = tables.build_coder_tables(freqs, k)
+    w, n, s = rans.encode(jnp.asarray(sym), jnp.asarray(t_idx), ct)
+    return rans.encoded_bytes(n)
+
+
+def run(wl=None) -> List[str]:
+    wl = wl or common.get_workload()
+    rows: List[str] = []
+    kv = wl.kv_caches[0]
+    L, _, T, C = kv.shape
+    k = wl.codec_cfg.precision
+    layout = gop.make_layout(T, wl.codec_cfg.group_size)
+    fp16 = kvcodec.kv_nbytes_fp16(L, T, C)
+
+    # base: uniform 8-bit symbols of raw values, global distribution
+    kvj = jnp.asarray(kv)
+    a_sym, d_sym, scales = quant.lossless_quantize(kvj, layout)
+    # reconstruct a "no-delta" symbolization: quantize raw tokens to 8 bits
+    g_of_t = jnp.asarray(layout.token_group_index)
+    scale_t = jnp.take(jnp.asarray(scales), g_of_t, axis=-1)
+    q_raw = jnp.clip(jnp.round(kvj / scale_t[..., None]), -127, 127) + 128
+    raw_lanes = np.asarray(
+        jnp.transpose(q_raw, (0, 1, 3, 2)).reshape(L * 2 * C, T), np.uint16
+    )
+    t_global = np.zeros(L * 2 * C, np.int32)
+    sz_base = _entropy_code_size(raw_lanes, t_global, 1, 256, k)
+    rows.append(f"fig16.base_uniform8_globalAC,,bytes={sz_base};ratio_fp16={fp16/sz_base:.2f}")
+
+    # +acgroup: per-(channel,layer) distributions
+    t_cl = tables.lane_table_index(L, C)
+    sz_acg = _entropy_code_size(raw_lanes, t_cl, L * 2 * C, 256, k)
+    rows.append(f"fig16.plus_channel_layer_AC,,bytes={sz_acg};ratio_fp16={fp16/sz_acg:.2f}")
+
+    # +delta: anchor/delta in integer space (still 8-bit fidelity)
+    a_lanes = np.asarray(jnp.transpose(a_sym, (0, 1, 3, 2)).reshape(L * 2 * C, -1), np.uint16)
+    d_lanes = np.asarray(jnp.transpose(d_sym, (0, 1, 3, 2)).reshape(L * 2 * C, -1), np.uint16)
+    sz_delta = _entropy_code_size(
+        a_lanes, t_cl, L * 2 * C, quant.ANCHOR_ALPHABET, k
+    ) + _entropy_code_size(d_lanes, t_cl, L * 2 * C, quant.lossless_delta_alphabet(), k)
+    rows.append(f"fig16.plus_delta,,bytes={sz_delta};ratio_fp16={fp16/sz_delta:.2f}")
+
+    # +layerq: full CacheGen lossy level 1
+    blob = kvcodec.encode_chunk(kv, wl.tables, 1)
+    rows.append(f"fig16.plus_layerwise_quant,,bytes={len(blob)};ratio_fp16={fp16/len(blob):.2f}")
+
+    # channel-bucketed tables (table memory vs compression trade-off)
+    for buckets in (8, 32):
+        cfg_b = kvcodec.CodecConfig(
+            group_size=wl.codec_cfg.group_size, precision=k, channel_buckets=buckets
+        )
+        tb = kvcodec.profile(wl.kv_caches[-2:], cfg_b)
+        b = kvcodec.encode_chunk(kv, tb, 1)
+        rows.append(f"fig16.bucketed_tables_{buckets},,bytes={len(b)};ratio_fp16={fp16/len(b):.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,67 @@
+"""Micro-benchmarks: codec stages + kernels, wall time on this host."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gop, quant, rans, tables
+
+
+def _time(fn, n=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def run(wl=None) -> List[str]:
+    rows: List[str] = []
+    rng = np.random.default_rng(0)
+
+    # rANS throughput: lanes x symbols typical of a chunk of a small model
+    n_tables, A, k = 256, 255, 12
+    counts = rng.integers(1, 500, size=(n_tables, A))
+    ct = tables.build_coder_tables(tables.normalize_freqs(counts, k), k)
+    n_lanes, n_sym = 2048, 512
+    t_idx = jnp.asarray(rng.integers(0, n_tables, n_lanes).astype(np.int32))
+    syms = jnp.asarray(rng.integers(0, A, size=(n_lanes, n_sym)).astype(np.uint16))
+    enc = lambda: jax.block_until_ready(rans.encode(syms, t_idx, ct))
+    t_enc = _time(enc)
+    w, nw, st = rans.encode(syms, t_idx, ct)
+    dec = lambda: jax.block_until_ready(rans.decode(w, nw, st, t_idx, ct, n_sym))
+    t_dec = _time(dec)
+    n_bytes = n_lanes * n_sym
+    rows.append(f"micro.rans_encode,{t_enc*1e6:.0f},sym_per_s={n_bytes/t_enc:.3e}")
+    rows.append(f"micro.rans_decode,{t_dec*1e6:.0f},sym_per_s={n_bytes/t_dec:.3e}")
+
+    # quantization stage
+    kv = jnp.asarray(rng.normal(size=(8, 2, 512, 128)).astype(np.float32))
+    layout = gop.make_layout(512, 10)
+    qfn = jax.jit(lambda x: quant.lossless_quantize(x, layout))
+    t_q = _time(lambda: jax.block_until_ready(qfn(kv)))
+    rows.append(f"micro.lossless_quantize,{t_q*1e6:.0f},elem_per_s={kv.size/t_q:.3e}")
+
+    # pallas kernels (interpret mode = CPU correctness path)
+    from repro.kernels.kvquant import kv_dequant_pallas
+
+    d_sym = jnp.asarray(rng.integers(0, 255, size=(16, 16, 9, 128)).astype(np.uint16))
+    anchors = jnp.asarray(rng.normal(size=(16, 16, 128)).astype(np.float32))
+    bins = jnp.asarray(rng.uniform(0.1, 0.5, size=(16,)).astype(np.float32))
+    t_dq = _time(
+        lambda: jax.block_until_ready(
+            kv_dequant_pallas(d_sym, anchors, bins, qmax=127, interpret=True)
+        ),
+        n=3,
+    )
+    rows.append(f"micro.kv_dequant_pallas_interpret,{t_dq*1e6:.0f},")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

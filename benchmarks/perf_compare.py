@@ -1,0 +1,54 @@
+"""Compare roofline terms between dry-run variants (the §Perf measure step).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf_compare ARCH SHAPE MESH [TAG ...]
+
+Prints the three roofline terms for the baseline cell and each tagged
+variant, with per-term deltas — the "measure" half of the
+hypothesis -> change -> measure -> validate loop.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.roofline import DRYRUN_DIR, analyze_record
+
+
+def load(arch: str, shape: str, mesh: str, tag: str = "") -> dict:
+    t = f".{tag}" if tag else ""
+    path = os.path.join(DRYRUN_DIR, f"{arch}.{shape}.{mesh}{t}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> None:
+    arch, shape, mesh = sys.argv[1:4]
+    tags = sys.argv[4:]
+    base = analyze_record(load(arch, shape, mesh))
+    rows = [("baseline", base)]
+    for tag in tags:
+        rows.append((tag, analyze_record(load(arch, shape, mesh, tag))))
+    print(f"{'variant':24s} {'compute_s':>12s} {'memory_s':>12s} {'coll_s':>12s} "
+          f"{'dominant':>10s} {'useful':>7s} {'perdev_GB':>10s}")
+    for name, a in rows:
+        if a is None:
+            print(f"{name:24s}  <error/skipped>")
+            continue
+        def delta(v, k):
+            if name == "baseline" or base is None:
+                return f"{v:12.4g}"
+            b = base[k]
+            return f"{v:8.4g}({(v-b)/b*100:+.0f}%)" if b else f"{v:12.4g}"
+        print(
+            f"{name:24s} {delta(a['t_compute_s'], 't_compute_s')} "
+            f"{delta(a['t_memory_s'], 't_memory_s')} "
+            f"{delta(a['t_collective_s'], 't_collective_s')} "
+            f"{a['dominant']:>10s} {a['useful_fraction']:7.3f} "
+            f"{a['per_device_bytes']/1e9:10.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

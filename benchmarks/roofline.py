@@ -1,0 +1,180 @@
+"""Roofline analysis over the dry-run artifacts (assignment §Roofline).
+
+Reads results/dryrun/<arch>.<shape>.<mesh>[.<tag>].json and reports, per
+cell:
+  compute   = HLO_FLOPs / (chips x 197e12)
+  memory    = HLO_bytes / (chips x 819e9)
+  collective= wire_bytes / (chips x 50e9)          [per-link ICI model]
+  dominant term, MODEL_FLOPS = 6-N-D (6-N_active-D for MoE),
+  useful fraction = MODEL_FLOPS / HLO_FLOPs.
+
+HLO_FLOPs/bytes/collectives are the depth-extrapolated values (XLA's
+cost_analysis counts while-loop bodies once; launch/dryrun.py lowers
+unrolled depth-1/2 variants and extrapolates — exact for homogeneous
+stacks).  All extrapolated metrics are per-device; the roofline divides
+global quantities by chips, so global = per-device x chips and the chip
+count cancels: term = per-device quantity / per-chip peak.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import registry
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def n_params(cfg) -> float:
+    """Total and active parameter counts (embedding included once)."""
+    d, V = cfg.d_model, cfg.padded_vocab_size
+    embed = V * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family in ("dense", "moe", "vlm"):
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head + cfg.n_heads * cfg.d_head * d
+        if cfg.family == "moe":
+            mlp_total = cfg.n_experts * 3 * d * cfg.d_ff + cfg.n_shared_experts * 3 * d * cfg.d_ff + d * cfg.n_experts
+            mlp_active = (cfg.moe_topk + cfg.n_shared_experts) * 3 * d * cfg.d_ff + d * cfg.n_experts
+        else:
+            n_mats = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+            mlp_total = mlp_active = n_mats * d * cfg.d_ff
+        per_layer_t = attn + mlp_total
+        per_layer_a = attn + mlp_active
+        total = cfg.n_layers * per_layer_t + embed
+        active = cfg.n_layers * per_layer_a + embed
+        if cfg.family == "vlm":
+            total += cfg.frontend_dim * d
+            active += cfg.frontend_dim * d
+        return total, active
+    if cfg.family == "ssm":
+        d_in = cfg.d_inner
+        per = d * (2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads) + d_in * d
+        total = cfg.n_layers * per + embed
+        return total, total
+    if cfg.family == "hybrid":
+        d_in = cfg.d_inner
+        per = d * (2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads) + d_in * d
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head + cfg.n_heads * cfg.d_head * d
+        n_mats = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        shared = attn + n_mats * d * cfg.d_ff
+        total = cfg.n_layers * per + shared + embed
+        # shared block applied n_apps times -> active compute counts it n_apps x
+        n_apps = cfg.n_layers // cfg.shared_block_every
+        active = cfg.n_layers * per + n_apps * shared + embed
+        return total, active
+    if cfg.family == "encdec":
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head + cfg.n_heads * cfg.d_head * d
+        n_mats = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        mlp = n_mats * d * cfg.d_ff
+        enc = cfg.enc_layers * (attn + mlp)
+        dec = cfg.dec_layers * (2 * attn + mlp)
+        total = enc + dec + embed + cfg.frontend_dim * d
+        return total, total
+    raise ValueError(cfg.family)
+
+
+def model_flops(cfg, shape_info, kind: str) -> float:
+    """6-N-D (training) / 2-N_active-D (inference) global useful FLOPs."""
+    total, active = n_params(cfg)
+    seq, batch = shape_info["seq"], shape_info["batch"]
+    if kind == "train":
+        return 6.0 * active * seq * batch
+    if kind == "prefill":
+        return 2.0 * active * seq * batch
+    # decode: one token per request
+    return 2.0 * active * 1 * batch
+
+
+def analyze_record(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    from repro.launch.specs import SHAPES
+
+    cfg = registry.get(rec["arch"])
+    info = SHAPES[rec["shape"]]
+    chips = 512 if rec["mesh"] == "multi" else 256
+    ex = rec.get("extrapolated", {})
+    if "flops" not in ex:
+        return None
+    flops = ex["flops"]  # per-device
+    bytes_ = ex["bytes"]
+    wire = ex["total_wire_bytes"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = wire / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, info, info["kind"])
+    useful = mf / (flops * chips) if flops else 0.0
+    bound = max(terms.values())
+    frac = t_compute / bound if bound else 0.0  # roofline fraction (compute share)
+    mem = rec.get("memory", {})
+    per_dev_bytes = sum(
+        mem.get(k, 0) for k in ("argument_size_in_bytes", "temp_size_in_bytes")
+    )
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": flops * chips,
+        "useful_fraction": useful,
+        "roofline_fraction": frac,
+        "per_device_bytes": per_dev_bytes,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def load_all(tag: str = "") -> List[dict]:
+    out = []
+    pattern = os.path.join(DRYRUN_DIR, f"*{tag}.json" if tag else "*.json")
+    for path in sorted(glob.glob(pattern)):
+        base = os.path.basename(path)[: -len(".json")]
+        parts = base.split(".")
+        if tag and not base.endswith(tag):
+            continue
+        if not tag and len([p for p in parts if p]) > 0 and base.count(".") > 3:
+            continue  # skip tagged variants in the default view
+        with open(path) as f:
+            rec = json.load(f)
+        a = analyze_record(rec)
+        if a:
+            out.append(a)
+        elif rec.get("status") == "skipped":
+            out.append(
+                {
+                    "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                    "dominant": "skipped", "reason": rec.get("reason", "")[:60],
+                }
+            )
+    return out
+
+
+def run(wl=None) -> List[str]:
+    rows = []
+    for a in load_all():
+        if a["dominant"] == "skipped":
+            rows.append(f"roofline.{a['arch']}.{a['shape']}.{a['mesh']},,skipped")
+            continue
+        rows.append(
+            f"roofline.{a['arch']}.{a['shape']}.{a['mesh']},,"
+            f"compute={a['t_compute_s']:.4g}s;memory={a['t_memory_s']:.4g}s;"
+            f"collective={a['t_collective_s']:.4g}s;dominant={a['dominant']};"
+            f"useful={a['useful_fraction']:.3f};perdev_gb={a['per_device_bytes']/1e9:.2f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Heavy shared setup (training
+the tiny workload model, prefilling eval contexts, profiling codec tables)
+happens once in benchmarks.common.get_workload().
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import common
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    wl = common.get_workload()
+    print(f"setup.workload,{(time.time()-t0)*1e6:.0f},trained_tiny_model+codec_tables")
+
+    modules = [
+        ("insights", "benchmarks.insights"),
+        ("table1", "benchmarks.table1_size_quality"),
+        ("ttft", "benchmarks.ttft"),
+        ("fig14", "benchmarks.fig14_slo"),
+        ("fig15", "benchmarks.fig15_overheads"),
+        ("fig16", "benchmarks.fig16_ablation"),
+        ("micro", "benchmarks.microbench"),
+        ("roofline", "benchmarks.roofline"),
+    ]
+    failures = 0
+    for name, modname in modules:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for row in mod.run(wl):
+                print(row)
+            print(f"{name}.total,{(time.time()-t0)*1e6:.0f},")
+        except Exception as e:
+            failures += 1
+            print(f"{name}.FAILED,,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Table 1 / Fig. 9-11: KV-cache size vs generation quality.
+
+Methods:
+  cachegen[l]      — full codec at level l (delta + layer-wise quant + rANS)
+  quant8 / quant4  — 'default quantization' baseline (uniform, no entropy code)
+  h2o[r]           — heavy-hitter token dropping (keep ratio r), fp16 wire
+  h2o+cachegen     — CacheGen encoding of the H2O-pruned cache
+  lingua[r]        — LLMLingua-style text pruning (keep r), then prefill; the
+                     wire cost is the *pruned* KV (fp16) for comparability
+  lingua+cachegen  — codec on the pruned KV
+
+Reported per method: wire bytes (and ratio vs fp16), accuracy, token
+agreement vs exact cache, first-token NLL.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.baselines.context_compression import h2o_select, llmlingua_select
+from repro.baselines.quantization import uniform_quantize_kv
+from repro.core import codec as kvcodec
+
+
+def _eval_kv_method(wl, make_kv) -> Dict[str, float]:
+    kvs, sizes = [], []
+    for i, kv in enumerate(wl.kv_caches):
+        kv_hat, nbytes = make_kv(i, kv)
+        kvs.append(kv_hat)
+        sizes.append(nbytes)
+    q = common.quality_with_kv(wl, kvs)
+    q["bytes"] = float(np.mean(sizes))
+    return q
+
+
+def _h2o_scores(wl, i):
+    """Idealized H2O: cumulative attention mass from the exact prefill."""
+    kv = wl.kv_caches[i]  # (L,2,T,C)
+    L, _, T, C = kv.shape
+    H, D = wl.cfg.n_kv_heads, wl.cfg.d_head
+    k = kv[:, 0].reshape(L, T, H, D)
+    # proxy queries: use keys as queries (self-similarity heavy hitters)
+    acc = np.zeros(T)
+    scale = 1.0 / np.sqrt(D)
+    for l in range(min(L, 2)):
+        for h in range(H):
+            s = (k[l, :, h] @ k[l, :, h].T) * scale
+            s = np.where(np.tril(np.ones((T, T), bool)), s, -np.inf)
+            p = np.exp(s - s.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            acc += p.sum(0)
+    return acc
+
+
+def run(wl=None) -> List[str]:
+    wl = wl or common.get_workload()
+    fp16 = wl.kv_fp16_bytes()
+    rows: List[str] = [f"table1.kv_fp16_bytes,,{fp16}"]
+
+    results: Dict[str, Dict[str, float]] = {}
+
+    # exact (upper bound)
+    results["exact_fp16"] = dict(
+        common.quality_with_kv(wl, [None] * len(wl.ctx_tokens)), bytes=float(fp16)
+    )
+
+    # cachegen levels
+    for lvl in range(wl.codec_cfg.n_levels):
+        def mk(i, kv, lvl=lvl):
+            blob = kvcodec.encode_chunk(kv, wl.tables, lvl)
+            return np.asarray(kvcodec.decode_chunk(blob, wl.tables)), len(blob)
+
+        results[f"cachegen_l{lvl}"] = _eval_kv_method(wl, mk)
+
+    # uniform quantization baselines
+    for bits in (8, 4):
+        def mk(i, kv, bits=bits):
+            return uniform_quantize_kv(kv, bits=bits)
+
+        results[f"quant{bits}"] = _eval_kv_method(wl, mk)
+
+    # H2O and H2O + CacheGen
+    keep = 0.5
+    h2o_kept = {i: h2o_select(_h2o_scores(wl, i), keep) for i in range(len(wl.kv_caches))}
+
+    def mk_h2o(i, kv):
+        idx = h2o_kept[i]
+        pruned = np.zeros_like(kv)
+        pruned[:, :, idx] = kv[:, :, idx]  # dropped tokens -> zero KV
+        nbytes = kv.shape[0] * 2 * len(idx) * kv.shape[3] * 2
+        return pruned, nbytes
+
+    results["h2o"] = _eval_kv_method(wl, mk_h2o)
+
+    def mk_h2o_cg(i, kv):
+        idx = h2o_kept[i]
+        sub = np.ascontiguousarray(kv[:, :, idx])
+        blob = kvcodec.encode_chunk(sub, wl.tables, 1)
+        dec = np.asarray(kvcodec.decode_chunk(blob, wl.tables))
+        pruned = np.zeros_like(kv)
+        pruned[:, :, idx] = dec
+        return pruned, len(blob)
+
+    results["h2o_cachegen"] = _eval_kv_method(wl, mk_h2o_cg)
+
+    # LLMLingua-style: prune in text space, recompute KV of kept tokens
+    def _lingua_kv(i):
+        tokens = wl.ctx_tokens[i]
+        logits, _ = wl.engine.calculate_kv({"tokens": jnp.asarray(tokens[None])})
+        # per-token logprob under the model (teacher forced, cheap tiny model)
+        full_logits, _ = wl.engine.logits_with_kv(
+            wl.engine.empty_caches(1), tokens[None]
+        )
+        lp = jax.nn.log_softmax(jnp.asarray(full_logits[0, :-1]), axis=-1)
+        tok_lp = np.asarray(
+            jnp.take_along_axis(lp, jnp.asarray(tokens[1:, None]), axis=-1)[:, 0]
+        )
+        tok_lp = np.concatenate([[0.0], tok_lp])
+        idx = llmlingua_select(tok_lp, keep)
+        kept_tokens = tokens[idx][None]
+        _, caches = wl.engine.calculate_kv({"tokens": jnp.asarray(kept_tokens)})
+        from repro.serving.kv_layout import caches_to_codec_kv
+
+        return caches_to_codec_kv(caches, 0, len(idx)), idx
+
+    lingua_cache = {}
+
+    def mk_lingua(i, kv):
+        sub, idx = lingua_cache.setdefault(i, _lingua_kv(i))
+        pruned = np.zeros_like(kv)
+        pruned[:, :, idx] = sub
+        nbytes = kv.shape[0] * 2 * len(idx) * kv.shape[3] * 2
+        return pruned, nbytes
+
+    results["lingua"] = _eval_kv_method(wl, mk_lingua)
+
+    def mk_lingua_cg(i, kv):
+        sub, idx = lingua_cache.setdefault(i, _lingua_kv(i))
+        blob = kvcodec.encode_chunk(np.ascontiguousarray(sub), wl.tables, 1)
+        dec = np.asarray(kvcodec.decode_chunk(blob, wl.tables))
+        pruned = np.zeros_like(kv)
+        pruned[:, :, idx] = dec
+        return pruned, len(blob)
+
+    results["lingua_cachegen"] = _eval_kv_method(wl, mk_lingua_cg)
+
+    for name, q in results.items():
+        rows.append(
+            f"table1.{name},,bytes={q['bytes']:.0f};ratio_fp16={fp16/q['bytes']:.2f};"
+            f"acc={q['accuracy']:.3f};agree={q['agreement']:.3f};nll={q['first_token_nll']:.4f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

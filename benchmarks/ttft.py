@@ -1,0 +1,155 @@
+"""TTFT benchmarks: Fig. 8 (methods @ 3 Gbps), Fig. 12 (bandwidth sweep),
+Fig. 13 (context length + concurrency).
+
+TTFT(method) = network transfer of the method's wire bytes + compute:
+  text      — send raw text (4 B/token), full prefill on the accelerator
+  quant8    — send uniformly-quantized KV, no entropy decode
+  cachegen  — send codec bitstreams, pipelined rANS+dequant decode
+All sizes come from the real codec/baselines measured on the workload's KV
+caches, scaled to the paper's context lengths by bytes/token (the codec is
+linear in tokens); compute times come from benchmarks.common.CostModel
+(TPU v5e constants) — documented in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.baselines.quantization import int8_wire_bytes
+from repro.core import codec as kvcodec
+from repro.streaming.adaptation import AdaptationPolicy
+from repro.streaming.network import BandwidthTrace, NetworkModel
+from repro.streaming.pipeline import simulate_stream
+from repro.streaming.storage import ChunkMeta
+
+
+def _bytes_per_token(wl) -> Dict[str, float]:
+    """Measured wire bytes/token for each method on real KV caches."""
+    out = {}
+    L, _, T, C = wl.kv_caches[0].shape
+    lvl_bytes = {lvl: [] for lvl in range(wl.codec_cfg.n_levels)}
+    for kv in wl.kv_caches[:4]:
+        for lvl in lvl_bytes:
+            lvl_bytes[lvl].append(len(kvcodec.encode_chunk(kv, wl.tables, lvl)))
+    for lvl, v in lvl_bytes.items():
+        out[f"cachegen_l{lvl}"] = float(np.mean(v)) / T
+    out["quant8"] = int8_wire_bytes(L, T, C) / T
+    out["fp16"] = kvcodec.kv_nbytes_fp16(L, T, C) / T
+    out["text"] = 4.0
+    return out
+
+
+def _scale_to_model(bpt: Dict[str, float], wl, target_cfg) -> Dict[str, float]:
+    """Scale bytes/token from the tiny bench model to a target arch by the
+    KV-channel ratio (codec size is linear in L*C; text is constant)."""
+    L0, _, _, C0 = wl.kv_caches[0].shape
+    Lt = target_cfg.n_layers
+    Ct = target_cfg.kv_channels
+    r = (Lt * Ct) / (L0 * C0)
+    return {k: (v * r if k != "text" else v) for k, v in bpt.items()}
+
+
+def _ttft(
+    method: str,
+    bpt: Dict[str, float],
+    n_tokens: int,
+    gbps: float,
+    cm: common.CostModel,
+    engine,
+    chunk_tokens: int = 1536,
+) -> float:
+    trace = BandwidthTrace.constant(gbps)
+    net = NetworkModel(trace)
+    n_chunks = max(1, -(-n_tokens // chunk_tokens))
+    toks = [chunk_tokens] * (n_chunks - 1) + [n_tokens - chunk_tokens * (n_chunks - 1)]
+    if method == "text":
+        # pipelined: fetch chunk i+1 while prefilling chunk i
+        t = 0.0
+        pre = 0
+        compute_end = 0.0
+        for tk in toks:
+            t += net.fetch_time(tk * 4, t)
+            compute_end = max(t, compute_end) + cm.prefill_s(engine, tk, pre)
+            pre += tk
+        return compute_end
+    metas = [
+        ChunkMeta("c", i, 0, t, sizes={0: int(t * bpt[method])}, text_bytes=int(t * 4))
+        for i, t in enumerate(toks)
+    ]
+    policy = AdaptationPolicy([0], slo_s=1e9, default_level=0, prior_throughput_gbps=gbps, allow_text=False)
+    decode_rate = cm.decode_bytes_per_s if method.startswith("cachegen") else 50e9
+    res = simulate_stream(
+        metas, policy, net,
+        decode_bytes_per_s=decode_rate,
+        recompute_s=lambda tk, pre: cm.prefill_s(engine, tk, pre),
+    )
+    return res.ttft_s
+
+
+def run(wl=None) -> List[str]:
+    from repro.configs import registry
+
+    wl = wl or common.get_workload()
+    rows: List[str] = []
+    bpt0 = _bytes_per_token(wl)
+    target = registry.get("qwen1.5-110b")
+    bpt = _scale_to_model(bpt0, wl, target)
+    # serving pool: 8 chips of TP for the 110B target
+    cm = common.CostModel(n_chips=8)
+    eng = wl.engine
+
+    class _E:  # cost-model engine facade for the target arch
+        cfg = target
+        prefill_flops = common.Engine.prefill_flops
+
+    e = _E()
+
+    for k, v in sorted(bpt.items()):
+        rows.append(f"ttft.bytes_per_token.{k},,{v:.1f}")
+
+    # ---- Fig 8: methods at 3 Gbps, 9.6K-token context ----------------------
+    n_tokens = 9600
+    for method in ("text", "quant8", "cachegen_l0", "cachegen_l1", "cachegen_l2"):
+        t = _ttft(method, bpt, n_tokens, 3.0, cm, e)
+        rows.append(f"ttft.fig8_3gbps.{method},,{t:.3f}")
+    t_text = _ttft("text", bpt, n_tokens, 3.0, cm, e)
+    t_q = _ttft("quant8", bpt, n_tokens, 3.0, cm, e)
+    t_cg = _ttft("cachegen_l1", bpt, n_tokens, 3.0, cm, e)
+    t_cg0 = _ttft("cachegen_l0", bpt, n_tokens, 3.0, cm, e)
+    rows.append(f"ttft.fig8_speedup_vs_text,,{t_text/t_cg:.2f}")
+    rows.append(f"ttft.fig8_speedup_vs_quant,,{t_q/t_cg:.2f}")
+    rows.append(f"ttft.fig8_lossless_vs_quant,,{t_q/t_cg0:.2f}")
+
+    # ---- Fig 12: bandwidth sweep -------------------------------------------
+    for gbps in (0.1, 0.3, 1.0, 3.0, 10.0, 30.0, 100.0):
+        tt = {m: _ttft(m, bpt, n_tokens, gbps, cm, e) for m in ("text", "quant8", "cachegen_l1")}
+        best = min(tt, key=tt.get)
+        rows.append(
+            f"ttft.fig12_{gbps}gbps,,text={tt['text']:.3f};quant={tt['quant8']:.3f};"
+            f"cachegen={tt['cachegen_l1']:.3f};best={best}"
+        )
+
+    # ---- Fig 13a: concurrency ----------------------------------------------
+    for n_req in (1, 2, 4, 8):
+        cmn = common.CostModel(n_chips=8, gpu_share=1.0 / n_req)
+        tt = {m: _ttft(m, bpt, n_tokens, 3.0, cmn, e) for m in ("text", "cachegen_l1")}
+        rows.append(
+            f"ttft.fig13a_conc{n_req},,text={tt['text']:.3f};cachegen={tt['cachegen_l1']:.3f}"
+        )
+
+    # ---- Fig 13b: context length -------------------------------------------
+    for n_tok in (100, 1000, 3000, 9600, 15000):
+        tt = {m: _ttft(m, bpt, n_tok, 3.0, cm, e) for m in ("text", "quant8", "cachegen_l1")}
+        best = min(tt, key=tt.get)
+        rows.append(
+            f"ttft.fig13b_ctx{n_tok},,text={tt['text']:.3f};quant={tt['quant8']:.3f};"
+            f"cachegen={tt['cachegen_l1']:.3f};best={best}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

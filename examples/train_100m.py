@@ -1,0 +1,71 @@
+"""End-to-end training driver: a ~100M-parameter llama-family model trained
+for a few hundred steps on the synthetic corpus, with checkpointing and
+preemption recovery.  (Assignment deliverable (b): end-to-end driver.)
+
+The default config is ~100M params (12L x d512 x ff2048, vocab 8192); on this
+CPU container a step takes a few seconds — use --steps to taper.
+
+Usage:
+  PYTHONPATH=src python examples/train_100m.py --steps 200 [--resume]
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.data import MarkovLM
+from repro.models import build
+from repro.training import AdamWConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="results/train_100m")
+    ap.add_argument("--small", action="store_true", help="tiny config (CI)")
+    args = ap.parse_args()
+
+    base = registry.get("smollm-360m")
+    if args.small:
+        cfg = base.tiny()
+    else:
+        cfg = dataclasses.replace(
+            base, name="smollm-100m", n_layers=12, d_model=512, n_heads=8,
+            n_kv_heads=4, d_head=64, d_ff=2048, vocab_size=8192, remat=False,
+        )
+    model = build(cfg)
+    plan_params = sum(
+        int(np.prod(l.shape))
+        for l in __import__("jax").tree_util.tree_leaves(
+            model.param_plan(), is_leaf=lambda x: hasattr(x, "logical")
+        )
+    )
+    print(f"[train] {cfg.name}: ~{plan_params/1e6:.1f}M params")
+
+    lm = MarkovLM(vocab_size=cfg.vocab_size, seed=5)
+
+    def batch_fn(step):
+        rng = np.random.default_rng(10_000 + step)
+        toks = np.stack([lm.sample(rng, args.seq + 1) for _ in range(args.batch)])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    ck = CheckpointManager(args.ckpt_dir, keep=2)
+    tr = Trainer(
+        model=model,
+        opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=50),
+        batch_fn=batch_fn,
+        ckpt=ck,
+        ckpt_every=50,
+        log_every=10,
+    )
+    state = tr.init_or_restore(seed=0)
+    state, hist = tr.run(state, args.steps)
+    print(f"[train] done: loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.baselines.quantization import int8_wire_bytes, uniform_quantize_kv  # noqa: F401
+from repro.baselines.context_compression import h2o_select, llmlingua_select  # noqa: F401

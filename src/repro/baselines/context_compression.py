@@ -1,0 +1,79 @@
+"""Context-compression baselines: H2O and an LLMLingua-style token pruner.
+
+* ``h2o_select`` — Heavy-Hitter Oracle [131]: keep the tokens with the
+  highest cumulative attention scores (plus a recent-token window).  As in
+  the paper's evaluation, this is the *idealized* offline variant: the
+  attention scores come from the full prefill (the paper grants H2O the
+  prompt's query tensors offline; we grant the context's own self-attention
+  scores).
+
+* ``llmlingua_select`` — prompt-compression-style pruning in *text* space:
+  drop the tokens whose next-token log-likelihood under the model is highest
+  (most predictable = least informative), keeping a target fraction.
+  This mirrors LLMLingua's perplexity-based token filtering [67] without the
+  budget controller.
+
+Both return kept-token indices; CacheGen composes with them by encoding the
+*pruned* KV cache (paper §7.2 "CacheGen on H2O/LLMLingua").
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["h2o_select", "llmlingua_select", "attention_scores_for_h2o"]
+
+
+def attention_scores_for_h2o(
+    kv_k: np.ndarray,  # (L, T, H, D) post-rope keys for one request
+    q_all: np.ndarray,  # (L, T, H, D) post-rope queries
+) -> np.ndarray:
+    """Cumulative causal attention mass per token, averaged over layers/heads."""
+    L, T, H, D = kv_k.shape
+    acc = np.zeros(T, np.float64)
+    scale = 1.0 / np.sqrt(D)
+    for l in range(L):
+        for h in range(H):
+            s = (q_all[l, :, h] @ kv_k[l, :, h].T) * scale  # (Tq, Tk)
+            mask = np.tril(np.ones((T, T), bool))
+            s = np.where(mask, s, -np.inf)
+            s = s - s.max(axis=-1, keepdims=True)
+            p = np.exp(s)
+            p /= p.sum(axis=-1, keepdims=True)
+            acc += p.sum(axis=0)  # column mass = how much this token is attended
+    return acc / (L * H)
+
+
+def h2o_select(
+    scores: np.ndarray,  # (T,) cumulative attention mass
+    keep_ratio: float,
+    recent_window: int = 32,
+) -> np.ndarray:
+    """Indices (sorted) of tokens kept by the heavy-hitter policy."""
+    T = scores.shape[0]
+    n_keep = max(int(round(T * keep_ratio)), min(T, recent_window))
+    keep = set(range(max(0, T - recent_window), T))  # always keep recent
+    order = np.argsort(-scores)
+    for idx in order:
+        if len(keep) >= n_keep:
+            break
+        keep.add(int(idx))
+    return np.asarray(sorted(keep), np.int64)
+
+
+def llmlingua_select(
+    token_logprobs: np.ndarray,  # (T,) log p(tok_t | tok_<t)) under the LM
+    keep_ratio: float,
+    protect_last: int = 16,
+) -> np.ndarray:
+    """Keep the least-predictable tokens (lowest logprob = most informative)."""
+    T = token_logprobs.shape[0]
+    n_keep = max(int(round(T * keep_ratio)), min(T, protect_last))
+    keep = set(range(max(0, T - protect_last), T))
+    order = np.argsort(token_logprobs)  # ascending: least predictable first
+    for idx in order:
+        if len(keep) >= n_keep:
+            break
+        keep.add(int(idx))
+    return np.asarray(sorted(keep), np.int64)

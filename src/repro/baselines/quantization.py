@@ -1,0 +1,38 @@
+"""'Default quantization' baseline (paper §7.1, from FlexGen [102]):
+
+uniform per-group 8-bit (or k-bit) quantization of the KV cache with the
+same level for every layer — no deltas, no entropy coding.  Wire size is the
+packed symbols + scales; reconstruction is the dequantized tensor.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["uniform_quantize_kv", "int8_wire_bytes"]
+
+
+def uniform_quantize_kv(
+    kv: np.ndarray, bits: int = 8, group: int = 64
+) -> Tuple[np.ndarray, int]:
+    """kv (L, 2, T, C) -> (dequantized kv, wire_bytes).
+
+    Symmetric per-(L,2,T,group-of-channels) absmax quantization.
+    """
+    L, two, T, C = kv.shape
+    qmax = 2 ** (bits - 1) - 1
+    G = max(C // group, 1)
+    x = kv.reshape(L, two, T, G, -1).astype(np.float32)
+    scale = np.maximum(np.abs(x).max(axis=-1, keepdims=True) / qmax, 1e-12)
+    scale = scale.astype(np.float16).astype(np.float32)
+    q = np.clip(np.round(x / scale), -qmax, qmax)
+    deq = (q * scale).reshape(L, two, T, C)
+    n_sym = L * two * T * C
+    wire = n_sym * bits // 8 + L * two * T * G * 2  # packed symbols + f16 scales
+    return deq, wire
+
+
+def int8_wire_bytes(L: int, T: int, C: int, group: int = 64, bits: int = 8) -> int:
+    G = max(C // group, 1)
+    return L * 2 * T * C * bits // 8 + L * 2 * T * G * 2

@@ -1,0 +1,169 @@
+"""Fault-tolerant checkpointing: atomic, versioned, resharding-aware.
+
+Write protocol (survives kill -9 at any instant):
+  1. serialize the pytree into ``step_<N>.tmp-<nonce>/`` (one .npy per leaf,
+     path-keyed; metadata.json holds the treedef + step);
+  2. fsync files, then atomically ``rename`` the directory to ``step_<N>``;
+  3. update ``LATEST`` via write-temp + rename.
+Restore never sees a partial checkpoint: only renamed directories count.
+
+Resharding/elasticity: leaves are stored as *global* arrays; ``restore``
+device_puts them against whatever shardings the current mesh wants, so a run
+can resume on a different topology (tested in tests/test_checkpoint.py).
+Retention keeps the newest K checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import uuid
+from typing import Any, Dict, List, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+_SEP = "/"
+
+# numpy can't round-trip ml_dtypes (bfloat16, fp8) through np.save reliably;
+# store them as raw byte views and record the logical dtype in the manifest.
+_EXOTIC = {"bfloat16", "float8_e4m3fn", "float8_e5m2"}
+
+
+def _to_storable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXOTIC:
+        return arr.view(np.uint8), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC:
+        return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return arr
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any) -> str:
+        flat = _flatten(tree)
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + f".tmp-{uuid.uuid4().hex[:8]}"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {}
+        for key, arr in flat.items():
+            fname = key.replace(_SEP, "__") + ".npy"
+            path = os.path.join(tmp, fname)
+            storable, dtype_name = _to_storable(arr)
+            with open(path, "wb") as f:
+                np.save(f, storable)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest[key] = {
+                "file": fname,
+                "dtype": dtype_name,
+                "shape": list(arr.shape),
+            }
+        meta = {"step": step, "leaves": manifest}
+        with open(os.path.join(tmp, "metadata.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, final)  # atomic publish
+        self._update_latest(final)
+        self._gc()
+        return final
+
+    def _update_latest(self, final: str) -> None:
+        latest = os.path.join(self.dir, "LATEST")
+        tmp = latest + f".tmp-{uuid.uuid4().hex[:8]}"
+        with open(tmp, "w") as f:
+            f.write(os.path.basename(final))
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, latest)
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and ".tmp-" not in name:
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        latest = os.path.join(self.dir, "LATEST")
+        if os.path.exists(latest):
+            with open(latest) as f:
+                name = f.read().strip()
+            if os.path.isdir(os.path.join(self.dir, name)):
+                return int(name[5:])
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, step: int, target_like: Any, shardings: Any = None
+    ) -> Any:
+        """Restore into the structure of ``target_like``.
+
+        ``shardings``: optional matching pytree of jax.sharding.Sharding —
+        leaves are device_put against them (cross-topology resume).
+        """
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "metadata.json")) as f:
+            meta = json.load(f)
+        flat_target, tdef = jax.tree_util.tree_flatten_with_path(target_like)
+        shard_leaves = None
+        if shardings is not None:
+            shard_leaves = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding)
+            )
+        leaves = []
+        for i, (kpath, like) in enumerate(flat_target):
+            key = _SEP.join(_path_str(p) for p in kpath)
+            info = meta["leaves"][key]
+            arr = _from_storable(np.load(os.path.join(path, info["file"])), info["dtype"])
+            arr = arr.reshape(info["shape"])
+            if tuple(arr.shape) != tuple(like.shape):
+                raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {like.shape}")
+            if shard_leaves is not None:
+                leaves.append(jax.device_put(arr.astype(like.dtype), shard_leaves[i]))
+            else:
+                leaves.append(jax.numpy.asarray(arr, dtype=like.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(target_like), leaves
+        )

@@ -1,0 +1,12 @@
+"""CacheGen core: the paper's KV-cache codec (encode -> stream -> decode)."""
+
+from repro.core.codec import (  # noqa: F401
+    CodecConfig,
+    CodecTables,
+    decode_chunk,
+    encode_all_levels,
+    encode_chunk,
+    profile,
+)
+from repro.core.gop import GroupLayout, make_layout  # noqa: F401
+from repro.core.rans import CoderTables  # noqa: F401

@@ -1,0 +1,148 @@
+"""Exact integer arithmetic coder (Witten–Neal–Cleary), pure Python oracle.
+
+Used only in tests/benchmarks as the ground-truth entropy coder that the
+paper's design names (§5.2 "arithmetic coding").  The production coder is the
+lane-parallel rANS in :mod:`repro.core.rans`; tests assert that rANS lands
+within ~1% of this oracle's compressed size and that both are lossless.
+
+Static model: a frequency table ``freqs`` (all >= 1) summing to ``total``.
+32-bit registers, carry handling via pending-bit counting.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+__all__ = ["ac_encode", "ac_decode", "ac_encoded_bits"]
+
+_CODE_BITS = 32
+_TOP = (1 << _CODE_BITS) - 1
+_HALF = 1 << (_CODE_BITS - 1)
+_QUARTER = 1 << (_CODE_BITS - 2)
+_THREE_Q = _HALF + _QUARTER
+
+
+class _BitWriter:
+    def __init__(self) -> None:
+        self.bits: List[int] = []
+        self.pending = 0
+
+    def write(self, bit: int) -> None:
+        self.bits.append(bit)
+        while self.pending:
+            self.bits.append(1 - bit)
+            self.pending -= 1
+
+    def to_bytes(self) -> bytes:
+        bits = self.bits[:]
+        while len(bits) % 8:
+            bits.append(0)
+        out = bytearray()
+        for i in range(0, len(bits), 8):
+            byte = 0
+            for b in bits[i : i + 8]:
+                byte = (byte << 1) | b
+            out.append(byte)
+        return bytes(out)
+
+
+class _BitReader:
+    def __init__(self, data: bytes) -> None:
+        self.data = data
+        self.pos = 0
+
+    def read(self) -> int:
+        byte_i, bit_i = divmod(self.pos, 8)
+        self.pos += 1
+        if byte_i >= len(self.data):
+            return 0
+        return (self.data[byte_i] >> (7 - bit_i)) & 1
+
+
+def _cums(freqs: Sequence[int]) -> np.ndarray:
+    c = np.zeros(len(freqs) + 1, dtype=np.uint64)
+    c[1:] = np.cumsum(np.asarray(freqs, dtype=np.uint64))
+    return c
+
+
+def ac_encode(symbols: Sequence[int], freqs: Sequence[int]) -> bytes:
+    cums = _cums(freqs)
+    total = int(cums[-1])
+    low, high = 0, _TOP
+    w = _BitWriter()
+    for s in symbols:
+        s = int(s)
+        span = high - low + 1
+        high = low + span * int(cums[s + 1]) // total - 1
+        low = low + span * int(cums[s]) // total
+        while True:
+            if high < _HALF:
+                w.write(0)
+            elif low >= _HALF:
+                w.write(1)
+                low -= _HALF
+                high -= _HALF
+            elif low >= _QUARTER and high < _THREE_Q:
+                w.pending += 1
+                low -= _QUARTER
+                high -= _QUARTER
+            else:
+                break
+            low = low * 2
+            high = high * 2 + 1
+    # flush
+    w.pending += 1
+    if low < _QUARTER:
+        w.write(0)
+    else:
+        w.write(1)
+    return w.to_bytes()
+
+
+def ac_decode(data: bytes, n_sym: int, freqs: Sequence[int]) -> List[int]:
+    cums = _cums(freqs)
+    total = int(cums[-1])
+    r = _BitReader(data)
+    value = 0
+    for _ in range(_CODE_BITS):
+        value = (value << 1) | r.read()
+    low, high = 0, _TOP
+    out: List[int] = []
+    cums_list = [int(x) for x in cums]
+    for _ in range(n_sym):
+        span = high - low + 1
+        scaled = ((value - low + 1) * total - 1) // span
+        # binary search for symbol with cums[s] <= scaled < cums[s+1]
+        lo, hi = 0, len(freqs) - 1
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if cums_list[mid] <= scaled:
+                lo = mid
+            else:
+                hi = mid - 1
+        s = lo
+        out.append(s)
+        high = low + span * cums_list[s + 1] // total - 1
+        low = low + span * cums_list[s] // total
+        while True:
+            if high < _HALF:
+                pass
+            elif low >= _HALF:
+                value -= _HALF
+                low -= _HALF
+                high -= _HALF
+            elif low >= _QUARTER and high < _THREE_Q:
+                value -= _QUARTER
+                low -= _QUARTER
+                high -= _QUARTER
+            else:
+                break
+            low = low * 2
+            high = high * 2 + 1
+            value = (value << 1) | r.read()
+    return out
+
+
+def ac_encoded_bits(symbols: Sequence[int], freqs: Sequence[int]) -> int:
+    return len(ac_encode(symbols, freqs)) * 8

@@ -1,0 +1,87 @@
+"""Wire format for encoded KV chunks.
+
+A chunk payload is a msgpack map: a small header plus named binary arrays.
+rANS streams are stored *packed* — only the valid words of every lane are
+concatenated — because the padded per-lane buffers used during encoding are
+not the wire representation.  ``unpack_stream`` re-pads for the vectorized
+decoder.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import msgpack
+import numpy as np
+
+__all__ = ["pack", "unpack", "pack_stream", "unpack_stream"]
+
+
+def _arr_to_wire(a: np.ndarray) -> dict:
+    a = np.ascontiguousarray(a)
+    return {"d": a.dtype.str, "s": list(a.shape), "b": a.tobytes()}
+
+
+def _arr_from_wire(w: dict) -> np.ndarray:
+    return np.frombuffer(w[b"b"], dtype=np.dtype(w[b"d"].decode())).reshape(w[b"s"])
+
+
+def pack(header: dict, arrays: Dict[str, np.ndarray]) -> bytes:
+    payload = {
+        "h": header,
+        "a": {name: _arr_to_wire(np.asarray(a)) for name, a in arrays.items()},
+    }
+    return msgpack.packb(payload, use_bin_type=True)
+
+
+def unpack(blob: bytes) -> Tuple[dict, Dict[str, np.ndarray]]:
+    payload = msgpack.unpackb(blob, raw=True, strict_map_key=False)
+    header = {
+        k.decode() if isinstance(k, bytes) else k: v for k, v in payload[b"h"].items()
+    }
+    header = {
+        k: (v.decode() if isinstance(v, bytes) else v) for k, v in header.items()
+    }
+    arrays = {
+        (k.decode() if isinstance(k, bytes) else k): _arr_from_wire(v)
+        for k, v in payload[b"a"].items()
+    }
+    return header, arrays
+
+
+def pack_stream(
+    words: np.ndarray, n_words: np.ndarray, state: np.ndarray, prefix: str
+) -> Dict[str, np.ndarray]:
+    """Compact a padded rANS buffer into wire arrays under ``prefix``."""
+    words = np.asarray(words)
+    n_words = np.asarray(n_words, dtype=np.int32)
+    n_lanes, cap = words.shape
+    mask = np.arange(cap)[None, :] < n_words[:, None]
+    payload = words[mask]  # concatenated valid words, lane-major
+    return {
+        f"{prefix}.payload": payload.astype(np.uint16),
+        f"{prefix}.n_words": n_words,
+        f"{prefix}.state": np.asarray(state, dtype=np.uint32),
+    }
+
+
+def unpack_stream(
+    arrays: Dict[str, np.ndarray], prefix: str
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Inverse of :func:`pack_stream`: returns (padded_words, n_words, state)."""
+    payload = arrays[f"{prefix}.payload"]
+    n_words = arrays[f"{prefix}.n_words"].astype(np.int32)
+    state = arrays[f"{prefix}.state"].astype(np.uint32)
+    n_lanes = n_words.shape[0]
+    cap = max(int(n_words.max()) if n_lanes else 0, 1)
+    words = np.zeros((n_lanes, cap), dtype=np.uint16)
+    mask = np.arange(cap)[None, :] < n_words[:, None]
+    words[mask] = payload
+    return words, n_words, state
+
+
+def stream_wire_bytes(arrays: Dict[str, np.ndarray], prefix: str) -> int:
+    return (
+        arrays[f"{prefix}.payload"].nbytes
+        + arrays[f"{prefix}.n_words"].nbytes
+        + arrays[f"{prefix}.state"].nbytes
+    )

@@ -1,0 +1,262 @@
+"""CacheGen KV-cache codec: chunk-level encode/decode at multiple levels.
+
+Pipeline (paper §5.2):
+
+    KV (L, 2, T, C) f32
+      └─ split into token groups of ``group_size``; anchor = first token
+         ├─ anchors: 8-bit vectorwise quantization            (quant.py)
+         ├─ deltas: layer-group binned quantization           (quant.py)
+         └─ symbols → lane-parallel rANS with per-(layer,K/V,channel)
+            static distributions                              (rans.py)
+      → bitstream (bitstream.py)
+
+Encoding levels:
+  * level 0: "lossless-after-8bit" — entropy coding of 8-bit quantized KV
+    (paper's lossless configuration, 1.67–1.81× claim);
+  * level 1..n: lossy, bins scaled by ``level_mults[level-1]``
+    (level 1 finest; higher level = smaller stream, coarser KV).
+
+Tables must be profiled offline per model on calibration KV caches
+(:func:`profile`), matching the paper's offline per-model profiling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitstream, gop, quant, rans, tables
+
+__all__ = [
+    "CodecConfig",
+    "CodecTables",
+    "profile",
+    "encode_chunk",
+    "decode_chunk",
+    "encode_all_levels",
+    "kv_nbytes_fp16",
+    "kv_nbytes_int8",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecConfig:
+    group_size: int = 10
+    layer_group_bins: Tuple[float, float, float] = (0.5, 1.0, 1.5)
+    level_mults: Tuple[float, ...] = (0.5, 1.0, 2.0, 4.0)
+    delta_qmax: int = 127
+    precision: int = 12
+    channel_buckets: Optional[int] = None
+    use_delta_scale: bool = True
+
+    @property
+    def n_levels(self) -> int:
+        return 1 + len(self.level_mults)
+
+    @property
+    def delta_alphabet(self) -> int:
+        return quant.delta_alphabet(self.delta_qmax)
+
+
+class CodecTables(NamedTuple):
+    """Per-model static coder tables (profiled offline)."""
+
+    anchor: rans.CoderTables  # lossy anchors, alphabet 256
+    deltas: Dict[int, rans.CoderTables]  # per lossy level, alphabet 2*qmax+1
+    ll_anchor: rans.CoderTables  # lossless anchors, alphabet 256
+    ll_delta: rans.CoderTables  # lossless integer deltas, alphabet 509
+    table_idx: np.ndarray  # lane -> table
+    delta_scale: Optional[np.ndarray]  # (L, 2) or None
+    config: CodecConfig
+    n_layers: int
+    n_channels: int
+
+
+def _lanes(x: jnp.ndarray) -> jnp.ndarray:
+    """(L, 2, T', C) -> (L*2*C, T') lane-major symbol matrix."""
+    L, two, Tp, C = x.shape
+    return jnp.transpose(x, (0, 1, 3, 2)).reshape(L * two * C, Tp)
+
+
+def _unlanes(x: jnp.ndarray, L: int, C: int) -> jnp.ndarray:
+    n_lanes, Tp = x.shape
+    return jnp.transpose(x.reshape(L, 2, C, Tp), (0, 1, 3, 2))
+
+
+def _bins_for_level(
+    cfg: CodecConfig, L: int, level: int, delta_scale: Optional[np.ndarray]
+) -> np.ndarray:
+    mult = cfg.level_mults[level - 1]
+    ds = delta_scale if cfg.use_delta_scale else None
+    return quant.effective_bins(L, cfg.layer_group_bins, mult, ds)
+
+
+def _symbolize(
+    kv: jnp.ndarray,
+    cfg: CodecConfig,
+    level: int,
+    delta_scale: Optional[np.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, gop.GroupLayout]:
+    """KV -> (anchor_symbols_lanes, delta_symbols_lanes, scales, layout)."""
+    L, two, T, C = kv.shape
+    layout = gop.make_layout(T, cfg.group_size)
+    if level == 0:
+        a_sym, d_sym, scales = quant.lossless_quantize(kv, layout)
+    else:
+        anchors, deltas = gop.split_anchors_deltas(kv, layout)
+        a_sym, scales = quant.quantize_anchors(anchors)
+        bins = jnp.asarray(_bins_for_level(cfg, L, level, delta_scale))
+        d_sym = quant.quantize_deltas(deltas, bins, cfg.delta_qmax)
+    return _lanes(a_sym), _lanes(d_sym), scales, layout
+
+
+def profile(
+    kv_samples: Sequence[np.ndarray],
+    cfg: CodecConfig = CodecConfig(),
+) -> CodecTables:
+    """Offline table profiling from calibration KV caches (paper §5.2).
+
+    kv_samples: list of (L, 2, T, C) arrays from representative contexts.
+    """
+    if not kv_samples:
+        raise ValueError("need at least one calibration KV cache")
+    L, two, _, C = kv_samples[0].shape
+    n_t = tables.n_tables_for(L, C, cfg.channel_buckets)
+    t_idx = tables.lane_table_index(L, C, cfg.channel_buckets)
+
+    delta_scale = None
+    if cfg.use_delta_scale:
+        acc = np.zeros((L, 2), np.float64)
+        n = 0
+        for kv in kv_samples:
+            layout = gop.make_layout(kv.shape[2], cfg.group_size)
+            _, deltas = gop.split_anchors_deltas(jnp.asarray(kv, jnp.float32), layout)
+            acc += np.asarray(jnp.mean(deltas.astype(jnp.float32) ** 2, axis=(2, 3)))
+            n += 1
+        delta_scale = np.sqrt(acc / n).astype(np.float32)
+        delta_scale = np.maximum(delta_scale, 1e-6)
+
+    a_counts = np.zeros((n_t, quant.ANCHOR_ALPHABET), np.int64)
+    lla_counts = np.zeros((n_t, quant.ANCHOR_ALPHABET), np.int64)
+    lld_counts = np.zeros((n_t, quant.lossless_delta_alphabet()), np.int64)
+    d_counts = {
+        lvl: np.zeros((n_t, cfg.delta_alphabet), np.int64)
+        for lvl in range(1, cfg.n_levels)
+    }
+    for kv in kv_samples:
+        kvj = jnp.asarray(kv, jnp.float32)
+        a, d, _, _ = _symbolize(kvj, cfg, 0, delta_scale)
+        lla_counts += tables.histogram_symbols(np.asarray(a), t_idx, n_t, quant.ANCHOR_ALPHABET)
+        lld_counts += tables.histogram_symbols(
+            np.asarray(d), t_idx, n_t, quant.lossless_delta_alphabet()
+        )
+        for lvl in range(1, cfg.n_levels):
+            a, d, _, _ = _symbolize(kvj, cfg, lvl, delta_scale)
+            if lvl == 1:
+                a_counts += tables.histogram_symbols(
+                    np.asarray(a), t_idx, n_t, quant.ANCHOR_ALPHABET
+                )
+            d_counts[lvl] += tables.histogram_symbols(
+                np.asarray(d), t_idx, n_t, cfg.delta_alphabet
+            )
+
+    def _mk(counts):
+        return tables.build_coder_tables(
+            tables.normalize_freqs(counts, cfg.precision), cfg.precision
+        )
+
+    return CodecTables(
+        anchor=_mk(a_counts),
+        deltas={lvl: _mk(d_counts[lvl]) for lvl in d_counts},
+        ll_anchor=_mk(lla_counts),
+        ll_delta=_mk(lld_counts),
+        table_idx=t_idx,
+        delta_scale=delta_scale,
+        config=cfg,
+        n_layers=L,
+        n_channels=C,
+    )
+
+
+def encode_chunk(
+    kv: np.ndarray | jnp.ndarray, ct: CodecTables, level: int
+) -> bytes:
+    """Encode one chunk's KV (L, 2, T, C) at ``level`` into a bitstream."""
+    cfg = ct.config
+    kv = jnp.asarray(kv, jnp.float32)
+    L, two, T, C = kv.shape
+    if L != ct.n_layers or C != ct.n_channels:
+        raise ValueError(
+            f"KV shape {kv.shape} does not match profiled tables "
+            f"(L={ct.n_layers}, C={ct.n_channels})"
+        )
+    a_sym, d_sym, scales, layout = _symbolize(kv, cfg, level, ct.delta_scale)
+    a_tab = ct.ll_anchor if level == 0 else ct.anchor
+    d_tab = ct.ll_delta if level == 0 else ct.deltas[level]
+    t_idx = jnp.asarray(ct.table_idx)
+    aw, an, ax = rans.encode(a_sym, t_idx, a_tab)
+    dw, dn, dx = rans.encode(d_sym, t_idx, d_tab)
+    arrays = {}
+    arrays.update(bitstream.pack_stream(np.asarray(aw), np.asarray(an), np.asarray(ax), "a"))
+    arrays.update(bitstream.pack_stream(np.asarray(dw), np.asarray(dn), np.asarray(dx), "d"))
+    arrays["scales"] = np.asarray(scales, np.float16)
+    header = {
+        "v": 1,
+        "level": int(level),
+        "n_tokens": int(T),
+        "n_layers": int(L),
+        "n_channels": int(C),
+        "group_size": int(cfg.group_size),
+    }
+    return bitstream.pack(header, arrays)
+
+
+def decode_chunk(blob: bytes, ct: CodecTables) -> jnp.ndarray:
+    """Decode a chunk bitstream back to KV (L, 2, T, C) float32."""
+    cfg = ct.config
+    header, arrays = bitstream.unpack(blob)
+    level = int(header["level"])
+    T = int(header["n_tokens"])
+    L = int(header["n_layers"])
+    C = int(header["n_channels"])
+    layout = gop.make_layout(T, int(header["group_size"]))
+    t_idx = jnp.asarray(ct.table_idx)
+    a_tab = ct.ll_anchor if level == 0 else ct.anchor
+    d_tab = ct.ll_delta if level == 0 else ct.deltas[level]
+    aw, an, ax = bitstream.unpack_stream(arrays, "a")
+    dw, dn, dx = bitstream.unpack_stream(arrays, "d")
+    a_sym = rans.decode(
+        jnp.asarray(aw), jnp.asarray(an), jnp.asarray(ax), t_idx, a_tab, layout.n_anchors
+    )
+    d_sym = rans.decode(
+        jnp.asarray(dw), jnp.asarray(dn), jnp.asarray(dx), t_idx, d_tab, layout.n_deltas
+    )
+    a_sym = _unlanes(a_sym, L, C)
+    d_sym = _unlanes(d_sym, L, C)
+    scales = jnp.asarray(arrays["scales"].astype(np.float32))
+    if level == 0:
+        return quant.lossless_reconstruct(a_sym, d_sym, scales, layout)
+    anchors = quant.dequantize_anchors(a_sym, scales)
+    bins = jnp.asarray(_bins_for_level(cfg, L, level, ct.delta_scale))
+    deltas = quant.dequantize_deltas(d_sym, bins, cfg.delta_qmax)
+    return gop.merge_anchors_deltas(anchors, deltas, layout)
+
+
+def encode_all_levels(
+    kv: np.ndarray | jnp.ndarray, ct: CodecTables
+) -> Dict[int, bytes]:
+    """Offline pre-encoding of every streaming level (paper §5.3)."""
+    return {lvl: encode_chunk(kv, ct, lvl) for lvl in range(ct.config.n_levels)}
+
+
+def kv_nbytes_fp16(L: int, T: int, C: int) -> int:
+    """Baseline 'raw fp16 tensors' wire size for a chunk."""
+    return L * 2 * T * C * 2
+
+
+def kv_nbytes_int8(L: int, T: int, C: int, group_size: int = 10) -> int:
+    """Baseline '8-bit uniform quantization' wire size (symbols + scales)."""
+    n_groups = -(-T // group_size)
+    return L * 2 * T * C + L * 2 * n_groups * 2

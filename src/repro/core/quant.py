@@ -1,0 +1,185 @@
+"""Quantization for the CacheGen KV codec.
+
+Implements the paper's §5.2 quantization stage:
+
+* **Anchors** (first token of each group) are kept at high precision:
+  8-bit *vectorwise* quantization (per-anchor-token absmax over the channel
+  vector), following LLM.int8-style vectorwise scaling.
+* **Deltas** are quantized with *layer-group bin widths*: the transformer
+  layers are split into three equal groups and the bin width grows from the
+  earliest group to the last (paper §C.2 defaults 0.5 / 1.0 / 1.5), reflecting
+  Insight 2 (early layers are more loss-sensitive).  The streaming *encoding
+  level* scales all three bins by ``level_mult``.
+* **Level 0 ("lossless-after-8bit")** reproduces the paper's lossless result:
+  the KV is 8-bit quantized with a shared per-(layer, kv, group) scale and the
+  *integer* symbol deltas are entropy coded — reconstruction is bit-exact with
+  respect to the 8-bit quantization.
+
+KV tensors are ``(L, 2, T, C)`` float32: layers × {K,V} × tokens × channels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gop
+
+__all__ = [
+    "ANCHOR_ALPHABET",
+    "lossless_delta_alphabet",
+    "delta_alphabet",
+    "layer_group_ids",
+    "effective_bins",
+    "quantize_anchors",
+    "dequantize_anchors",
+    "quantize_deltas",
+    "dequantize_deltas",
+    "lossless_quantize",
+    "lossless_reconstruct",
+]
+
+ANCHOR_ALPHABET = 256  # 8-bit anchors / 8-bit lossless base symbols
+
+
+def delta_alphabet(qmax: int) -> int:
+    return 2 * qmax + 1
+
+
+def lossless_delta_alphabet() -> int:
+    # int8 symbols are in [-127, 127]; integer deltas span [-254, 254].
+    return 2 * 254 + 1
+
+
+def layer_group_ids(n_layers: int, n_groups: int = 3) -> np.ndarray:
+    """Paper §5.2: split layers into three equal-distance groups."""
+    edges = np.linspace(0, n_layers, n_groups + 1)
+    ids = np.searchsorted(edges[1:-1], np.arange(n_layers), side="right")
+    return ids.astype(np.int32)
+
+
+def effective_bins(
+    n_layers: int,
+    layer_group_bins: Tuple[float, float, float],
+    level_mult: float,
+    delta_scale: np.ndarray | None = None,
+) -> np.ndarray:
+    """Per-(layer, kv) effective bin width, shape (L, 2) float32.
+
+    ``delta_scale`` is an optional per-(layer, kv) calibration (std of deltas
+    measured offline) making the paper's absolute bin widths model-agnostic;
+    ``None`` means raw value space (paper default).
+    """
+    gids = layer_group_ids(n_layers)
+    base = np.asarray(layer_group_bins, dtype=np.float32)[gids]  # (L,)
+    bins = np.broadcast_to(base[:, None], (n_layers, 2)).astype(np.float32)
+    bins = bins * np.float32(level_mult)
+    if delta_scale is not None:
+        bins = bins * np.asarray(delta_scale, dtype=np.float32)
+    return np.ascontiguousarray(bins)
+
+
+# ---------------------------------------------------------------------------
+# Lossy path: 8-bit vectorwise anchors + binned deltas
+# ---------------------------------------------------------------------------
+
+
+def quantize_anchors(anchors: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorwise 8-bit quantization of anchor tokens.
+
+    anchors: (L, 2, G, C) f32 -> symbols (L, 2, G, C) uint16 in [0, 256),
+    scales (L, 2, G) f32.
+    """
+    absmax = jnp.max(jnp.abs(anchors), axis=-1)  # (L, 2, G)
+    scale = jnp.maximum(absmax / 127.0, 1e-7)
+    # Round to the wire precision (f16) *before* quantizing so that the
+    # decoder, which only sees f16 scales, reconstructs exactly.
+    scale = scale.astype(jnp.float16).astype(jnp.float32)
+    q = jnp.clip(jnp.round(anchors / scale[..., None]), -127, 127)
+    symbols = (q + 128).astype(jnp.uint16)  # [1, 255]
+    return symbols, scale
+
+
+def dequantize_anchors(symbols: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    q = symbols.astype(jnp.float32) - 128.0
+    return q * scales[..., None]
+
+
+def quantize_deltas(
+    deltas: jnp.ndarray, bins_lkv: jnp.ndarray, qmax: int
+) -> jnp.ndarray:
+    """Binned symmetric quantization of delta tensors.
+
+    deltas: (L, 2, D, C) f32; bins_lkv: (L, 2) f32 bin widths.
+    Returns symbols (L, 2, D, C) uint16 in [0, 2*qmax].
+    """
+    b = bins_lkv[..., None, None]
+    q = jnp.clip(jnp.round(deltas / b), -qmax, qmax)
+    return (q + qmax).astype(jnp.uint16)
+
+
+def dequantize_deltas(
+    symbols: jnp.ndarray, bins_lkv: jnp.ndarray, qmax: int
+) -> jnp.ndarray:
+    b = bins_lkv[..., None, None]
+    return (symbols.astype(jnp.float32) - qmax) * b
+
+
+# ---------------------------------------------------------------------------
+# Level 0: lossless after 8-bit quantization
+# ---------------------------------------------------------------------------
+
+
+def lossless_quantize(
+    kv: jnp.ndarray, layout: gop.GroupLayout
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """8-bit quantize with per-(layer, kv, group) shared scale, then take
+    integer deltas within each group.
+
+    Returns (anchor_symbols (L,2,G,C) uint16 in [0,255),
+             delta_symbols (L,2,T-G,C) uint16 in [0, 509),
+             scales (L,2,G) f32).
+    Reconstruction via :func:`lossless_reconstruct` is bit-exact w.r.t. the
+    8-bit quantization.
+    """
+    L, two, T, C = kv.shape
+    g_of_t = jnp.asarray(layout.token_group_index)  # (T,)
+    # per-group absmax over tokens-in-group x channels
+    n_groups = layout.n_groups
+    absmax_tok = jnp.max(jnp.abs(kv), axis=-1)  # (L,2,T)
+    seg = jnp.zeros((L, two, n_groups), kv.dtype)
+    seg = seg.at[..., g_of_t].max(absmax_tok)
+    scale = jnp.maximum(seg / 127.0, 1e-7)  # (L,2,G)
+    scale = scale.astype(jnp.float16).astype(jnp.float32)  # wire precision
+    scale_t = jnp.take(scale, g_of_t, axis=-1)  # (L,2,T)
+    q = jnp.clip(jnp.round(kv / scale_t[..., None]), -127, 127).astype(jnp.int32)
+    a_pos = jnp.asarray(layout.anchor_positions)
+    d_pos = jnp.asarray(layout.delta_positions)
+    g_idx = jnp.asarray(layout.delta_group_index)
+    q_anchor = jnp.take(q, a_pos, axis=-2)  # (L,2,G,C)
+    q_delta = jnp.take(q, d_pos, axis=-2) - jnp.take(q_anchor, g_idx, axis=-2)
+    anchor_symbols = (q_anchor + 128).astype(jnp.uint16)  # [1,255]
+    delta_symbols = (q_delta + 254).astype(jnp.uint16)  # [0,508]
+    return anchor_symbols, delta_symbols, scale
+
+
+def lossless_reconstruct(
+    anchor_symbols: jnp.ndarray,
+    delta_symbols: jnp.ndarray,
+    scales: jnp.ndarray,
+    layout: gop.GroupLayout,
+) -> jnp.ndarray:
+    """Exact inverse of :func:`lossless_quantize` back to dequantized floats."""
+    q_anchor = anchor_symbols.astype(jnp.int32) - 128
+    g_idx = jnp.asarray(layout.delta_group_index)
+    q_delta = delta_symbols.astype(jnp.int32) - 254
+    q_other = q_delta + jnp.take(q_anchor, g_idx, axis=-2)
+    L, two, G, C = q_anchor.shape
+    q = jnp.zeros((L, two, layout.n_tokens, C), jnp.int32)
+    q = q.at[..., jnp.asarray(layout.anchor_positions), :].set(q_anchor)
+    q = q.at[..., jnp.asarray(layout.delta_positions), :].set(q_other)
+    g_of_t = jnp.asarray(layout.token_group_index)
+    scale_t = jnp.take(scales, g_of_t, axis=-1)  # (L,2,T)
+    return q.astype(jnp.float32) * scale_t[..., None]

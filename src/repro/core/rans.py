@@ -1,0 +1,206 @@
+"""Lane-parallel static-table rANS entropy coder, as a JAX program.
+
+This is the TPU-native adaptation of CacheGen's GPU arithmetic coder: the
+paper runs one CUDA thread per token's bitstream; on TPU the analogue of
+"thousands of independent sequential coders" is a vectorized ``lax.scan``
+where every *lane* carries its own 32-bit coder state.  Lanes map to
+(layer, K/V, channel) streams so that each lane uses exactly one static
+symbol distribution (paper Insight 3: per-channel-per-layer distributions),
+which keeps table gathers uniform.
+
+rANS (range asymmetric numeral systems) is in the same entropy-coding family
+as arithmetic coding — both approach the entropy bound; we verify in tests
+that compressed sizes match an exact arithmetic-coding oracle within ~1%.
+rANS is chosen over a bit-level AC port because it is table-driven and
+carry-free: the inner loop is a handful of integer ops + gathers, exactly the
+shape of computation TPU vector units (and XLA:CPU) run well; CUDA-style
+bit/carry manipulation has no TPU analogue.
+
+Variant: 32-bit state, 16-bit word renormalization (ryg_rans "rans_word").
+With precision ``k <= 14`` and all frequencies >= 1 (< 2^k), each symbol
+emits/consumes at most one 16-bit word, so the scan does fixed work per step.
+
+Wire format per call: ``words (n_lanes, n_sym) uint16`` buffer of which the
+first ``n_words[lane]`` entries are valid, plus the 4-byte final state per
+lane.  The decoder reads words in reverse emission order (rANS is LIFO).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CoderTables", "encode", "decode", "encoded_bytes"]
+
+RANS_L = jnp.uint32(1 << 16)  # lower bound of the normalized state interval
+_U32_ONE = jnp.uint32(1)
+
+
+class CoderTables(NamedTuple):
+    """Static rANS tables for ``n_tables`` distributions over alphabet A.
+
+    freqs: (n_tables, A) uint32, each row sums to 2**precision, all >= 1
+    cums:  (n_tables, A + 1) uint32 exclusive prefix sums
+    slot2sym: (n_tables, 2**precision) uint16
+    precision: int (static)
+    """
+
+    freqs: jnp.ndarray
+    cums: jnp.ndarray
+    slot2sym: jnp.ndarray
+    precision: int
+
+    @property
+    def alphabet(self) -> int:
+        return self.freqs.shape[-1]
+
+    @property
+    def n_tables(self) -> int:
+        return self.freqs.shape[0]
+
+
+@functools.partial(jax.jit, static_argnames=("precision",))
+def _encode_impl(
+    symbols: jnp.ndarray,  # (n_lanes, n_sym) uint16/int32
+    table_idx: jnp.ndarray,  # (n_lanes,) int32
+    freqs: jnp.ndarray,
+    cums: jnp.ndarray,
+    precision: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    n_lanes, n_sym = symbols.shape
+    A = freqs.shape[-1]
+    freqs_flat = freqs.reshape(-1)
+    cums_flat = cums.reshape(-1)
+    lane = jnp.arange(n_lanes, dtype=jnp.int32)
+    t_base_f = table_idx.astype(jnp.int32) * A
+    t_base_c = table_idx.astype(jnp.int32) * (A + 1)
+    k = jnp.uint32(precision)
+    shift16 = jnp.uint32(16)
+
+    # rANS encodes in reverse symbol order so the decoder runs forward.
+    xs = jnp.flip(symbols.astype(jnp.int32).T, axis=0)  # (n_sym, n_lanes)
+
+    def step(carry, s):
+        x, ptr, buf = carry
+        f = freqs_flat[t_base_f + s]
+        c = cums_flat[t_base_c + s]
+        # renormalize: emit one 16-bit word if x would overflow
+        x_max = ((RANS_L >> k) << shift16) * f
+        emit = x >= x_max
+        word = (x & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+        buf = buf.at[lane, ptr].set(word)
+        ptr = ptr + emit.astype(jnp.int32)
+        x = jnp.where(emit, x >> shift16, x)
+        # C(s, x) = (x // f) << k + (x % f) + c
+        q = x // f
+        r = x - q * f
+        x = (q << k) + r + c
+        return (x, ptr, buf), None
+
+    x0 = jnp.full((n_lanes,), RANS_L, dtype=jnp.uint32)
+    ptr0 = jnp.zeros((n_lanes,), dtype=jnp.int32)
+    buf0 = jnp.zeros((n_lanes, n_sym), dtype=jnp.uint16)
+    (x, ptr, buf), _ = jax.lax.scan(step, (x0, ptr0, buf0), xs)
+    return buf, ptr, x
+
+
+@functools.partial(jax.jit, static_argnames=("precision", "n_sym"))
+def _decode_impl(
+    words: jnp.ndarray,  # (n_lanes, cap) uint16
+    n_words: jnp.ndarray,  # (n_lanes,) int32
+    state: jnp.ndarray,  # (n_lanes,) uint32
+    table_idx: jnp.ndarray,  # (n_lanes,) int32
+    freqs: jnp.ndarray,
+    cums: jnp.ndarray,
+    slot2sym: jnp.ndarray,
+    precision: int,
+    n_sym: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    n_lanes = words.shape[0]
+    A = freqs.shape[-1]
+    M = 1 << precision
+    freqs_flat = freqs.reshape(-1)
+    cums_flat = cums.reshape(-1)
+    s2s_flat = slot2sym.reshape(-1)
+    lane = jnp.arange(n_lanes, dtype=jnp.int32)
+    t_base_f = table_idx.astype(jnp.int32) * A
+    t_base_c = table_idx.astype(jnp.int32) * (A + 1)
+    t_base_m = table_idx.astype(jnp.int32) * M
+    k = jnp.uint32(precision)
+    mask = jnp.uint32(M - 1)
+    shift16 = jnp.uint32(16)
+
+    def step(carry, _):
+        x, ptr = carry
+        slot = (x & mask).astype(jnp.int32)
+        s = s2s_flat[t_base_m + slot].astype(jnp.int32)
+        f = freqs_flat[t_base_f + s]
+        c = cums_flat[t_base_c + s]
+        x = f * (x >> k) + slot.astype(jnp.uint32) - c
+        need = x < RANS_L
+        word = words[lane, jnp.maximum(ptr, 0)].astype(jnp.uint32)
+        x = jnp.where(need, (x << shift16) | word, x)
+        ptr = ptr - need.astype(jnp.int32)
+        return (x, ptr), s.astype(jnp.uint16)
+
+    x0 = state.astype(jnp.uint32)
+    ptr0 = n_words.astype(jnp.int32) - 1
+    (x, ptr), syms = jax.lax.scan(step, (x0, ptr0), None, length=n_sym)
+    return syms.T, x, ptr  # symbols (n_lanes, n_sym) in forward order
+
+
+def encode(
+    symbols: jnp.ndarray,
+    table_idx: jnp.ndarray,
+    tables: CoderTables,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Encode ``symbols[(lane, t)]`` -> (words, n_words, final_state)."""
+    if symbols.ndim != 2:
+        raise ValueError(f"symbols must be (n_lanes, n_sym), got {symbols.shape}")
+    return _encode_impl(
+        jnp.asarray(symbols),
+        jnp.asarray(table_idx, dtype=jnp.int32),
+        tables.freqs,
+        tables.cums,
+        tables.precision,
+    )
+
+
+def decode(
+    words: jnp.ndarray,
+    n_words: jnp.ndarray,
+    state: jnp.ndarray,
+    table_idx: jnp.ndarray,
+    tables: CoderTables,
+    n_sym: int,
+    check: bool = False,
+) -> jnp.ndarray:
+    """Decode ``n_sym`` symbols per lane.  Exact inverse of :func:`encode`."""
+    syms, x, ptr = _decode_impl(
+        jnp.asarray(words),
+        jnp.asarray(n_words, dtype=jnp.int32),
+        jnp.asarray(state),
+        jnp.asarray(table_idx, dtype=jnp.int32),
+        tables.freqs,
+        tables.cums,
+        tables.slot2sym,
+        tables.precision,
+        n_sym,
+    )
+    if check:
+        x = np.asarray(x)
+        ptr = np.asarray(ptr)
+        if not (x == np.uint32(1 << 16)).all() or not (ptr == -1).all():
+            raise ValueError(
+                "rANS stream corrupt: decoder did not return to initial state"
+            )
+    return syms
+
+
+def encoded_bytes(n_words: jnp.ndarray) -> int:
+    """Wire size: valid 16-bit words + 4-byte final state per lane."""
+    n_words = np.asarray(n_words)
+    return int(n_words.sum()) * 2 + 4 * n_words.shape[0]

@@ -1,0 +1,1 @@
+from repro.data.synthetic import MarkovLM, TopicRetrievalTask, sample_lengths  # noqa: F401

@@ -1,0 +1,134 @@
+"""Pallas TPU decode attention (single new token vs. a long KV cache).
+
+This is the `generate_with_kv` hot loop (paper §6): once CacheGen has decoded
+the fetched KV bitstreams into the cache, every generated token runs one
+attention pass of a 1-token query against the full context KV.  At 32K-500K
+context this is purely HBM-bandwidth-bound, so the kernel's job is to stream
+K and V through VMEM exactly once with online-softmax accumulation
+(FlashDecoding-style; the split-KV "K" axis here is the sequential minor grid
+dimension, with cross-device sequence sharding handled one level up in
+serving/kv_layout.py via a (max, sumexp) psum combine).
+
+Grid = (B * Hq, S / Bs).  Blocks: K/V (Bs, D); accumulators in VMEM scratch.
+Supports GQA via index-map head folding and ragged kv_len masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref,  # (1, 1, D)
+    k_ref,  # (1, 1, Bs, D)
+    v_ref,  # (1, 1, Bs, D)
+    len_ref,  # (1,)
+    o_ref,  # (1, 1, D)
+    m_scr,  # (1, 1)
+    l_scr,  # (1, 1)
+    acc_scr,  # (1, D)
+    *,
+    scale: float,
+    block_s: int,
+):
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[0]
+    s_start = si * block_s
+
+    @pl.when(s_start < kv_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (Bs, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (1, Bs)
+        pos = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)  # (Bs, D)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "interpret", "scale")
+)
+def decode_attention_pallas(
+    q: jnp.ndarray,  # (B, Hq, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    kv_len: jnp.ndarray | None = None,  # (B,) valid lengths
+    *,
+    scale: float | None = None,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    rep = Hq // Hkv
+    bs = min(block_s, S)
+    if S % bs:
+        raise ValueError(f"S={S} not divisible by block_s={bs}")
+    if scale is None:
+        scale = float(1.0 / np.sqrt(D))
+    if kv_len is None:
+        kv_len = jnp.full((B,), S, jnp.int32)
+
+    qf = q.reshape(B * Hq, 1, D)
+    grid = (B * Hq, S // bs)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_s=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, bs, D),
+                lambda h, j, rep=rep, Hq=Hq: (h // Hq, (h % Hq) // rep, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bs, D),
+                lambda h, j, rep=rep, Hq=Hq: (h // Hq, (h % Hq) // rep, j, 0),
+            ),
+            pl.BlockSpec((1,), lambda h, j, Hq=Hq: (h // Hq,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, k, v, jnp.asarray(kv_len, jnp.int32))
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,173 @@
+"""Pallas TPU flash attention (prefill) with causal / prefix-LM masks and GQA.
+
+Used by the serving engine's prefill path — including CacheGen's
+*text-recompute fallback* (paper §5.3: when bandwidth is too low, the chunk
+is sent as text and its KV is recomputed, which runs this kernel).
+
+Design (TPU-adapted FlashAttention):
+  grid = (B * Hq, Tq / Bq, Tk / Bk); the key/value axis is the *minor* grid
+  dimension, so for a fixed query block the kernel walks KV blocks
+  sequentially, maintaining the online-softmax running (max, sum, acc) in
+  VMEM scratch.  Block shapes are (Bq, D) x (Bk, D) with D the full head
+  dim — MXU-aligned for D in {64, 128, 256}.  Causal masking skips
+  fully-masked KV blocks via `pl.when` on block indices.
+
+GQA is handled by mapping query head h to KV head h // (Hq // Hkv) in the
+index maps — no jnp.repeat materialization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    plen_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    tk: int,
+    tq: int,
+    use_prefix: bool,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # token offsets (decoder offset: queries start at tk - tq)
+    q_start = qi * block_q + (tk - tq)
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (Bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (Bq, Bk)
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = k_pos <= q_pos
+            if use_prefix:
+                mask = mask | (k_pos < plen_ref[0])
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]  # (Bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal and not use_prefix:
+        # skip KV blocks that are entirely in the future of this q block
+        q_block_end = q_start + block_q - 1
+        pl.when(k_start <= q_block_end)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret", "scale"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, Hq, Tq, D)
+    k: jnp.ndarray,  # (B, Hkv, Tk, D)
+    v: jnp.ndarray,  # (B, Hkv, Tk, D)
+    prefix_len: jnp.ndarray | None = None,  # (B,) int32 — prefix-LM bidir region
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    rep = Hq // Hkv
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    if Tq % bq or Tk % bk:
+        raise ValueError(f"Tq={Tq}/Tk={Tk} not divisible by blocks ({bq},{bk})")
+    if scale is None:
+        scale = float(1.0 / np.sqrt(D))
+    use_prefix = prefix_len is not None
+    if prefix_len is None:
+        prefix_len = jnp.zeros((B,), jnp.int32)
+
+    qf = q.reshape(B * Hq, Tq, D)
+    grid = (B * Hq, Tq // bq, Tk // bk)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=bq,
+        block_k=bk,
+        tk=Tk,
+        tq=Tq,
+        use_prefix=use_prefix,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, D),
+                lambda h, i, j, rep=rep, Hq=Hq: (h // Hq, (h % Hq) // rep, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, D),
+                lambda h, i, j, rep=rep, Hq=Hq: (h // Hq, (h % Hq) // rep, j, 0),
+            ),
+            pl.BlockSpec((1,), lambda h, i, j, Hq=Hq: (h // Hq,)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running max
+            pltpu.VMEM((bq, 1), jnp.float32),  # running sum
+            pltpu.VMEM((bq, D), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, k, v, prefix_len)
+    return out.reshape(B, Hq, Tq, D)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: fused KV delta-(de)quantization (CacheGen decode hot path).
+
+The paper's serving node spends its codec time in (a) entropy decode and
+(b) tensor reconstruction (dequantize deltas, add anchors, cast).  (a) is the
+lane-parallel rANS scan (core/rans.py); (b) is a memory-bound elementwise+
+broadcast op over the full KV tensor — the natural Pallas kernel.  On TPU the
+win is fusing dequant + anchor-broadcast-add + dtype cast into one pass so
+the KV tensor is written to HBM exactly once, in the layout the attention
+kernel wants.
+
+Layout: the chunk's tokens are *grouped* (group_size g): deltas are
+``(G, g-1, C)`` and anchors ``(G, C)``; out[i, j, :] = d[i, j, :] * bin +
+anchor[i, :].  Grid = (L2, G/Bg); each block holds Bg whole groups with the
+full channel width so the anchor broadcast never crosses blocks.
+
+Encode-side fusion (delta + scale + round + clip) is the mirror image and is
+provided for the offline ``store_kv`` path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["kv_dequant_pallas", "kv_quant_pallas"]
+
+
+def _dequant_kernel(d_sym_ref, anchors_ref, bins_ref, out_ref, *, qmax: int):
+    # d_sym: (1, Bg, gm1, C) uint16 | anchors: (1, Bg, C) f32 | bins: (1, 1) f32
+    d = d_sym_ref[0].astype(jnp.float32) - float(qmax)
+    b = bins_ref[0, 0]
+    anchor = anchors_ref[0][:, None, :]  # (Bg, 1, C)
+    out_ref[0] = (d * b + anchor).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("qmax", "block_groups", "out_dtype", "interpret")
+)
+def kv_dequant_pallas(
+    d_sym: jnp.ndarray,  # (L2, G, g-1, C) uint16 delta symbols
+    anchors: jnp.ndarray,  # (L2, G, C) f32 dequantized anchors
+    bins: jnp.ndarray,  # (L2,) f32 per-(layer,kv) effective bin width
+    *,
+    qmax: int,
+    block_groups: int = 8,
+    out_dtype=jnp.bfloat16,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused (dequant + anchor add + cast): returns (L2, G, g-1, C)."""
+    L2, G, gm1, C = d_sym.shape
+    Bg = min(block_groups, G)
+    if G % Bg:
+        raise ValueError(f"G={G} not divisible by block_groups={Bg}")
+    grid = (L2, G // Bg)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Bg, gm1, C), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, Bg, C), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Bg, gm1, C), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((L2, G, gm1, C), out_dtype),
+        interpret=interpret,
+    )(d_sym, anchors, bins.reshape(L2, 1).astype(jnp.float32))
+
+
+def _quant_kernel(kv_ref, bins_ref, sym_ref, *, qmax: int, gm1: int):
+    # kv: (1, Bg, g, C) f32 grouped tokens; out symbols for the g-1 deltas
+    kv = kv_ref[0].astype(jnp.float32)  # (Bg, g, C)
+    anchor = kv[:, :1, :]
+    delta = kv[:, 1:, :] - anchor  # (Bg, g-1, C)
+    b = bins_ref[0, 0]
+    q = jnp.clip(jnp.round(delta / b), -qmax, qmax) + qmax
+    sym_ref[0] = q.astype(jnp.uint16)
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "block_groups", "interpret"))
+def kv_quant_pallas(
+    kv_grouped: jnp.ndarray,  # (L2, G, g, C) f32 tokens grouped by anchor
+    bins: jnp.ndarray,  # (L2,) f32
+    *,
+    qmax: int,
+    block_groups: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused (delta + scale + round + clip) encode: returns (L2, G, g-1, C)."""
+    L2, G, g, C = kv_grouped.shape
+    Bg = min(block_groups, G)
+    if G % Bg:
+        raise ValueError(f"G={G} not divisible by block_groups={Bg}")
+    grid = (L2, G // Bg)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, qmax=qmax, gm1=g - 1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Bg, g, C), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Bg, g - 1, C), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((L2, G, g - 1, C), jnp.uint16),
+        interpret=interpret,
+    )(kv_grouped, bins.reshape(L2, 1).astype(jnp.float32))

@@ -1,0 +1,127 @@
+"""Jit'd public wrappers for the Pallas kernels with implementation dispatch.
+
+Every op takes ``impl``:
+  * ``"pallas"``            — the TPU kernel (real hardware target)
+  * ``"pallas_interpret"``  — kernel body interpreted on CPU (tests)
+  * ``"xla"``               — pure-jnp path (dry-run lowering / roofline; the
+                              memory-bounded chunked prefill attention lives
+                              in models/attention.py)
+
+The serving engine and codec call through here so the implementation is a
+config switch, never a code change (MaxText-style `attention=...` knob).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.kvquant import kv_dequant_pallas, kv_quant_pallas
+
+__all__ = ["mha", "decode_attention", "kv_dequant", "kv_quant"]
+
+_IMPLS = ("pallas", "pallas_interpret", "xla")
+
+
+def _check(impl: str) -> None:
+    if impl not in _IMPLS:
+        raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+
+
+def mha(
+    q,
+    k,
+    v,
+    prefix_len=None,
+    *,
+    causal: bool = True,
+    impl: str = "xla",
+    block_q: int = 128,
+    block_k: int = 128,
+):
+    """Multi-head (GQA) attention, prefill shapes (B,Hq,Tq,D)x(B,Hkv,Tk,D)."""
+    _check(impl)
+    if impl == "xla":
+        return ref.mha_ref(q, k, v, causal=causal, prefix_len=prefix_len)
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        prefix_len,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+def decode_attention(
+    q,
+    k,
+    v,
+    kv_len=None,
+    *,
+    impl: str = "xla",
+    block_s: int = 512,
+):
+    """One-token decode attention (B,Hq,D) x (B,Hkv,S,D)."""
+    _check(impl)
+    if impl == "xla":
+        return ref.decode_attention_ref(q, k, v, kv_len=kv_len)
+    return decode_attention_pallas(
+        q,
+        k,
+        v,
+        kv_len,
+        block_s=block_s,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+def kv_dequant(
+    d_sym,
+    anchors,
+    bins,
+    *,
+    qmax: int,
+    out_dtype=jnp.bfloat16,
+    impl: str = "xla",
+    block_groups: int = 8,
+):
+    """Fused delta-dequant + anchor add + cast: (L2,G,g-1,C) -> tokens."""
+    _check(impl)
+    if impl == "xla":
+        return ref.kv_dequant_ref(d_sym, anchors, bins, qmax=qmax, out_dtype=out_dtype)
+    return kv_dequant_pallas(
+        d_sym,
+        anchors,
+        bins,
+        qmax=qmax,
+        block_groups=block_groups,
+        out_dtype=out_dtype,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+def kv_quant(
+    kv_grouped,
+    bins,
+    *,
+    qmax: int,
+    impl: str = "xla",
+    block_groups: int = 8,
+):
+    """Fused delta + binned quantization: (L2,G,g,C) -> (L2,G,g-1,C) symbols."""
+    _check(impl)
+    if impl == "xla":
+        return ref.kv_quant_ref(kv_grouped, bins, qmax=qmax)
+    return kv_quant_pallas(
+        kv_grouped,
+        bins,
+        qmax=qmax,
+        block_groups=block_groups,
+        interpret=(impl == "pallas_interpret"),
+    )

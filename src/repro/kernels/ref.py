@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "kv_dequant_ref",
+    "kv_quant_ref",
+    "mha_ref",
+    "decode_attention_ref",
+    "ssd_ref",
+]
+
+
+def kv_dequant_ref(d_sym, anchors, bins, *, qmax, out_dtype=jnp.bfloat16):
+    """(L2, G, g-1, C) symbols + (L2, G, C) anchors -> dequantized tokens."""
+    d = d_sym.astype(jnp.float32) - float(qmax)
+    out = d * bins[:, None, None, None] + anchors[:, :, None, :]
+    return out.astype(out_dtype)
+
+
+def kv_quant_ref(kv_grouped, bins, *, qmax):
+    anchor = kv_grouped[:, :, :1, :]
+    delta = kv_grouped[:, :, 1:, :].astype(jnp.float32) - anchor
+    q = jnp.clip(jnp.round(delta / bins[:, None, None, None]), -qmax, qmax)
+    return (q + qmax).astype(jnp.uint16)
+
+
+def mha_ref(q, k, v, *, causal: bool, prefix_len=None, scale=None):
+    """Reference attention.
+
+    q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D) with Hq % Hkv == 0 (GQA).
+    ``prefix_len``: optional (B,) — positions < prefix_len attend
+    bidirectionally (prefix-LM); requires causal=True.
+    """
+    B, Hq, Tq, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    Tk = k.shape[2]
+    if causal:
+        q_pos = jnp.arange(Tq)[:, None] + (Tk - Tq)
+        k_pos = jnp.arange(Tk)[None, :]
+        mask = k_pos <= q_pos  # (Tq, Tk)
+        if prefix_len is not None:
+            bidir = k_pos < prefix_len[:, None, None]  # (B, 1, Tk) per batch
+            mask = mask[None] | bidir
+            mask = mask[:, None]  # (B, 1, Tq, Tk)
+        else:
+            mask = mask[None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, *, kv_len=None, scale=None):
+    """Single-step decode attention.
+
+    q: (B, Hq, D); k, v: (B, Hkv, S, D); kv_len: optional (B,) valid lengths.
+    """
+    B, Hq, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhd,bhsd->bhs", q, k).astype(jnp.float32) * scale
+    if kv_len is not None:
+        S = k.shape[2]
+        mask = jnp.arange(S)[None, None, :] < kv_len[:, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits - m)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bhsd->bhd", w.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, D=None, *, initial_state=None):
+    """Mamba-2 SSD (state-space duality) sequential-scan oracle.
+
+    Computes the exact SSM recurrence (naive O(T) scan over tokens):
+      h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+      y_t = C_t^T h_t (+ D * x_t)
+
+    x:  (B, T, H, P)    heads x headdim
+    dt: (B, T, H)       positive step sizes
+    A:  (H,)            negative scalars (per head, Mamba-2 scalar A)
+    B:  (B, T, G, N)    groups x state
+    C:  (B, T, G, N)
+    D:  (H,) skip or None
+    Returns y (B, T, H, P), final_state (B, H, P, N).
+    """
+    Bb, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)  # (B,T,H,N)
+    Ch = jnp.repeat(C, rep, axis=2)
+    decay = jnp.exp(dt * A[None, None, :])  # (B,T,H)
+
+    def step(h, inp):
+        x_t, dt_t, dec_t, B_t, C_t = inp
+        # h: (B, H, P, N)
+        h = h * dec_t[:, :, None, None] + (dt_t[:, :, None] * x_t)[..., None] * B_t[
+            :, :, None, :
+        ]
+        y_t = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+        return h, y_t
+
+    h0 = (
+        jnp.zeros((Bb, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(decay.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bh.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Ch.astype(jnp.float32), 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,T,H,P)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), h

@@ -1,0 +1,317 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for the
+single-pod (16 data x 16 model = 256 chips) and multi-pod (2 pods x 16 x 16
+= 512 chips) meshes, each cell's step function must lower and compile under
+GSPMD; we record memory_analysis (fits?), cost_analysis (FLOPs/bytes for
+§Roofline) and the collective traffic parsed from the optimized HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --jobs 4 --mesh both --out results/dryrun
+Each --all child runs in its own process (fresh XLA, isolated failures).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+
+def _reduced_pair(cfg):
+    """Two reduced-depth *unrolled* configs + (k1, k2, K) in layer units.
+
+    XLA cost_analysis counts while-loop bodies once, so per-layer costs come
+    from unrolled depth-1 / depth-2 compiles and linear extrapolation
+    F(K) = F(k1) + (F(k2) - F(k1)) * (K - k1) / (k2 - k1), which is exact for
+    homogeneous stacks (all of ours are, per segment/stack).
+    """
+    import dataclasses
+
+    if cfg.family == "hybrid":
+        e = cfg.shared_block_every
+        c1 = dataclasses.replace(cfg, n_layers=e, scan_unroll=True)
+        c2 = dataclasses.replace(cfg, n_layers=2 * e, scan_unroll=True)
+        return c1, c2, (1, 2, cfg.n_layers // e)
+    if cfg.family == "encdec":
+        c1 = dataclasses.replace(
+            cfg, n_layers=2, enc_layers=1, dec_layers=1, scan_unroll=True
+        )
+        c2 = dataclasses.replace(
+            cfg, n_layers=4, enc_layers=2, dec_layers=2, scan_unroll=True
+        )
+        return c1, c2, (1, 2, cfg.enc_layers)
+    import dataclasses as dc
+
+    c1 = dc.replace(cfg, n_layers=1, scan_unroll=True)
+    c2 = dc.replace(cfg, n_layers=2, scan_unroll=True)
+    return c1, c2, (1, 2, cfg.n_layers)
+
+
+def _cell_metrics(cfg, shape, mesh, overrides, n_chips, donate=False):
+    """Lower+compile one config; return (flops, transcendentals, bytes, coll)."""
+    import jax
+
+    from repro.launch import hlo_stats
+    from repro.launch.specs import make_cell
+    from repro.models import sharding as shlib
+
+    cell = make_cell(cfg, shape, mesh, overrides)
+    with mesh, shlib.use_rules(mesh, cell.rules):
+        compiled = (
+            jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate if donate else (),
+            )
+            .lower(*cell.inputs)
+            .compile()
+        )
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    st = hlo_stats.collective_stats(compiled.as_text(), n_chips)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "wire_bytes": dict(st.wire_bytes),
+        "counts": dict(st.counts),
+    }
+
+
+def _extrapolate(m1, m2, k1, k2, K):
+    def lin(a, b):
+        return a + (b - a) * (K - k1) / (k2 - k1)
+
+    out = {
+        "flops": lin(m1["flops"], m2["flops"]),
+        "transcendentals": lin(m1["transcendentals"], m2["transcendentals"]),
+        "bytes": lin(m1["bytes"], m2["bytes"]),
+        "wire_bytes": {
+            k: lin(m1["wire_bytes"][k], m2["wire_bytes"][k]) for k in m1["wire_bytes"]
+        },
+        "counts": {
+            k: lin(m1["counts"][k], m2["counts"][k]) for k in m1["counts"]
+        },
+    }
+    out["total_wire_bytes"] = float(sum(out["wire_bytes"].values()))
+    return out
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    mesh_kind: str,
+    rules_json: str = "",
+    save_hlo: str = "",
+    cfg_json: str = "",
+    donate: bool = False,
+) -> dict:
+    import dataclasses
+
+    import jax
+
+    from repro.configs import registry
+    from repro.launch import hlo_stats
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import cell_applicable, make_cell
+    from repro.models import sharding as shlib
+
+    cfg = registry.get(arch)
+    if cfg_json:
+        cfg = dataclasses.replace(cfg, **json.loads(cfg_json))
+    ok, why = cell_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    overrides = json.loads(rules_json) if rules_json else {}
+    overrides = {k: (tuple(v) if isinstance(v, list) else v) for k, v in overrides.items()}
+    try:
+        cell = make_cell(cfg, shape, mesh, overrides)
+        t0 = time.time()
+        with mesh, shlib.use_rules(mesh, cell.rules):
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate if donate else (),
+            )
+            lowered = jitted.lower(*cell.inputs)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+
+        # ---- memory analysis (proves it fits) ----
+        try:
+            ma = compiled.memory_analysis()
+            mem = {}
+            for attr in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            ):
+                if hasattr(ma, attr):
+                    mem[attr] = int(getattr(ma, attr))
+            if not mem:
+                mem["repr"] = str(ma)
+            rec["memory"] = mem
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+
+        # ---- cost analysis (FLOPs / bytes for the roofline) ----
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["cost"] = {
+                k: float(v)
+                for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "transcendentals", "optimal_seconds")
+                    or k.startswith("bytes accessed")
+                )
+            }
+        except Exception as e:  # pragma: no cover
+            rec["cost"] = {"error": str(e)}
+
+        # ---- collectives from optimized HLO ----
+        hlo = compiled.as_text()
+        st = hlo_stats.collective_stats(hlo, n_chips)
+        rec["collectives"] = {
+            "counts": st.counts,
+            "result_bytes": st.result_bytes,
+            "wire_bytes": st.wire_bytes,
+            "total_wire_bytes": st.total_wire_bytes,
+        }
+        rec["hlo_lines"] = hlo.count("\n")
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+
+        # ---- depth-extrapolated metrics (scan bodies counted once by XLA;
+        #      see _reduced_pair) ----
+        try:
+            c1, c2, (k1, k2, K) = _reduced_pair(cfg)
+            m1 = _cell_metrics(c1, shape, mesh, overrides, n_chips, donate)
+            m2 = _cell_metrics(c2, shape, mesh, overrides, n_chips, donate)
+            rec["extrapolated"] = _extrapolate(m1, m2, k1, k2, K)
+            rec["extrapolated"]["points"] = {"k1": k1, "k2": k2, "K": K, "m1": m1, "m2": m2}
+        except Exception as e:
+            rec["extrapolated"] = {"error": f"{type(e).__name__}: {e}"}
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--rules", default="", help="JSON logical-rule overrides")
+    ap.add_argument("--cfg", default="", help="JSON ArchConfig field overrides")
+    ap.add_argument("--donate", action="store_true", help="donate state/cache buffers")
+    ap.add_argument("--tag", default="", help="suffix for the output file name")
+    ap.add_argument("--save-hlo", default="", help="dump optimized HLO to file")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if not args.all:
+        assert args.arch and args.shape, "--arch and --shape required"
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        for mk in meshes:
+            rec = run_cell(
+                args.arch, args.shape, mk, args.rules, args.save_hlo, args.cfg,
+                donate=args.donate,
+            )
+            tag = f".{args.tag}" if args.tag else ""
+            fname = f"{args.arch}.{args.shape}.{mk}{tag}.json"
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(rec, f, indent=1)
+            brief = {
+                k: rec.get(k)
+                for k in ("arch", "shape", "mesh", "status", "error", "compile_s")
+            }
+            print(json.dumps(brief))
+        return
+
+    # --all: spawn one subprocess per cell
+    from repro.launch.specs import all_cells
+
+    jobs = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for arch, shape, (ok, why) in all_cells():
+        for mk in meshes:
+            jobs.append((arch, shape, mk, ok, why))
+
+    running = []
+    results = []
+
+    def _drain(block: bool):
+        while running and (block or any(p.poll() is not None for p, *_ in running)):
+            for item in list(running):
+                p, arch, shape, mk = item
+                if p.poll() is not None:
+                    running.remove(item)
+                    results.append((arch, shape, mk, p.returncode))
+                    print(f"[dryrun] done {arch} {shape} {mk} rc={p.returncode}")
+            if running and block:
+                time.sleep(2.0)
+            elif not block:
+                break
+
+    for arch, shape, mk, ok, why in jobs:
+        if not ok:
+            rec = {"arch": arch, "shape": shape, "mesh": mk, "status": "skipped", "reason": why}
+            fname = f"{arch}.{shape}.{mk}.json"
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"[dryrun] skip {arch} {shape} {mk}: {why[:60]}")
+            continue
+        while len(running) >= args.jobs:
+            _drain(block=True)
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--mesh", mk, "--out", args.out,
+        ]
+        if args.rules:
+            cmd += ["--rules", args.rules]
+        if args.cfg:
+            cmd += ["--cfg", args.cfg]
+        if args.donate:
+            cmd += ["--donate"]
+        if args.tag:
+            cmd += ["--tag", args.tag]
+        p = subprocess.Popen(cmd, env=os.environ.copy())
+        running.append((p, arch, shape, mk))
+    _drain(block=True)
+    n_fail = sum(1 for *_, rc in results if rc != 0)
+    print(f"[dryrun] all done: {len(results)} ran, {n_fail} subprocess failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Parse collective traffic out of optimized (post-SPMD) HLO text.
+
+``cost_analysis()`` does not expose collective bytes, so the roofline's
+collective term comes from summing the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction in ``compiled.as_text()`` (per-device program -> per-device
+bytes).
+
+Wire-byte model (ring algorithms, group size n):
+  all-gather          result_bytes * (n-1)/n        (result = gathered)
+  all-reduce          2 * result_bytes * (n-1)/n    (reduce-scatter + all-gather)
+  reduce-scatter      result_bytes * (n-1)          (operand = result * n)
+  all-to-all          result_bytes * (n-1)/n
+  collective-permute  result_bytes
+Group size is parsed from replica_groups; defaults to the mesh size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+__all__ = ["CollectiveStats", "collective_stats"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %ar = bf16[8,128]{1,0} all-reduce(...)  or tuple results
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[\w\[\]{},\/#: ]+?)\s+"
+    r"(" + "|".join(k.replace("-", r"\-") for k in _COLL_KINDS) + r")"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# replica_groups={{0,1},{2,3}} or replica_groups=[8,32]<=[256]...
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        first = m.group(1)
+        return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, int]  # per-device result bytes per kind
+    wire_bytes: Dict[str, float]  # modeled per-device wire bytes per kind
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    @property
+    def total_result_bytes(self) -> int:
+        return int(sum(self.result_bytes.values()))
+
+
+def collective_stats(hlo_text: str, mesh_size: int) -> CollectiveStats:
+    counts = {k: 0 for k in _COLL_KINDS}
+    rbytes = {k: 0 for k in _COLL_KINDS}
+    wbytes = {k: 0.0 for k in _COLL_KINDS}
+    seen_started: set = set()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # avoid double counting async pairs (count the -start)
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        n = _group_size(line, mesh_size)
+        counts[kind] += 1
+        rbytes[kind] += b
+        if kind == "all-reduce":
+            w = 2.0 * b * (n - 1) / max(n, 1)
+        elif kind == "all-gather":
+            w = b * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            w = float(b) * (n - 1)
+        elif kind == "all-to-all":
+            w = b * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            w = float(b)
+        wbytes[kind] += w
+    del seen_started
+    return CollectiveStats(counts=counts, result_bytes=rbytes, wire_bytes=wbytes)

@@ -1,0 +1,43 @@
+"""Production mesh construction (assignment-mandated shapes).
+
+Defined as functions so importing this module never touches jax device
+state (device count is locked on first jax init — the dry-run sets
+XLA_FLAGS before importing anything).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} "
+            "(dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import)"
+        )
+    try:
+        return jax.make_mesh(shape, axes, devices=devices[:n])
+    except TypeError:  # older signature without devices kwarg
+        if len(devices) == n:
+            return jax.make_mesh(shape, axes)
+        arr = np.asarray(devices[:n]).reshape(shape)
+        return Mesh(arr, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2) -> Mesh:
+    """Small mesh for multi-device tests (8 host devices)."""
+    n = data * model
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    arr = np.asarray(devices[:n]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))

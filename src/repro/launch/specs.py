@@ -1,0 +1,335 @@
+"""Per-(arch x shape) dry-run cell definitions: input ShapeDtypeStructs,
+sharding rules, and the step function to lower.
+
+The four assigned input shapes (LM-family: seq_len x global_batch):
+  train_4k     seq 4,096   batch 256   -> train_step
+  prefill_32k  seq 32,768  batch 32    -> prefill
+  decode_32k   seq 32,768  batch 128   -> serve_step (1 token + KV cache)
+  long_500k    seq 524,288 batch 1     -> serve_step; sub-quadratic archs only
+
+Family mapping (DESIGN.md §4): enc-dec splits seq into src/tgt halves; VLM
+reserves ``n_prefix_tokens`` of the sequence for the (stubbed) image patch
+embeddings; SSM/hybrid decode cells carry recurrent states instead of /
+alongside KV caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as encdec_lib
+from repro.models import lm as lm_lib
+from repro.models import sharding
+from repro.models.common import Leaf
+from repro.models.lm import Caches
+from repro.training import optimizer as opt_lib
+from repro.training.trainer import TrainState, make_train_step
+from repro.models.model import build as build_model
+
+__all__ = ["SHAPES", "Cell", "make_cell", "cell_applicable", "all_cells"]
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+_SDS = jax.ShapeDtypeStruct
+
+
+def cell_applicable(cfg: ArchConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "full quadratic attention at 524K tokens — skipped per assignment "
+            "(sub-quadratic archs only); see DESIGN.md §4"
+        )
+    return True, ""
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ArchConfig
+    shape_name: str
+    kind: str
+    fn: Callable  # function to jit
+    inputs: Tuple[Any, ...]  # ShapeDtypeStruct pytrees (positional)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    rules: Dict[str, Any]  # logical rule overrides used
+    donate: Tuple[int, ...] = ()  # argnums donated (in-place state/caches)
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+
+def _batch_specs(cfg: ArchConfig, seq: int, batch: int, train: bool) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        s = seq // 2
+        out["src_embeds"] = _SDS((batch, s, cfg.frontend_dim), jnp.bfloat16)
+        out["tokens"] = _SDS((batch, s), jnp.int32)
+        if train:
+            out["labels"] = _SDS((batch, s), jnp.int32)
+        return out
+    if cfg.family == "vlm":
+        t = seq - cfg.n_prefix_tokens
+        out["patch_embeds"] = _SDS(
+            (batch, cfg.n_prefix_tokens, cfg.frontend_dim), jnp.bfloat16
+        )
+        out["tokens"] = _SDS((batch, t), jnp.int32)
+        if train:
+            out["labels"] = _SDS((batch, t), jnp.int32)
+        return out
+    out["tokens"] = _SDS((batch, seq), jnp.int32)
+    if train:
+        out["labels"] = _SDS((batch, seq), jnp.int32)
+    return out
+
+
+def _batch_shardings(batch_specs: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch_specs.items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = sharding.named_sharding(logical)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+
+def _lm_cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    """(ShapeDtypeStruct caches, logical caches) for decode cells."""
+    sds: Dict[str, Any] = dict(
+        kv_k=None, kv_v=None, length=None, mamba_conv=None, mamba_ssm=None,
+        shared_k=None, shared_v=None,
+    )
+    log: Dict[str, Any] = dict(sds)
+    kv_logical = ("layers", "batch", "kv_seq_decode", "kv_heads", "head_dim")
+    if cfg.family in ("dense", "moe", "vlm"):
+        shp = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.d_head)
+        sds["kv_k"] = _SDS(shp, jnp.bfloat16)
+        sds["kv_v"] = _SDS(shp, jnp.bfloat16)
+        log["kv_k"] = kv_logical
+        log["kv_v"] = kv_logical
+    if cfg.family in ("ssm", "hybrid"):
+        d_in = cfg.d_inner
+        conv_ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+        sds["mamba_conv"] = _SDS(
+            (cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch), jnp.bfloat16
+        )
+        sds["mamba_ssm"] = _SDS(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+            jnp.float32,
+        )
+        log["mamba_conv"] = ("layers", "batch", None, "ssm_inner")
+        log["mamba_ssm"] = ("layers", "batch", "ssm_heads", None, "state")
+    if cfg.family == "hybrid":
+        n_apps = cfg.n_layers // cfg.shared_block_every
+        shp = (n_apps, batch, seq, cfg.n_kv_heads, cfg.d_head)
+        sds["shared_k"] = _SDS(shp, jnp.bfloat16)
+        sds["shared_v"] = _SDS(shp, jnp.bfloat16)
+        log["shared_k"] = kv_logical
+        log["shared_v"] = kv_logical
+    sds["length"] = _SDS((batch,), jnp.int32)
+    log["length"] = ("batch",)
+    caches = Caches(**sds)
+    shardings = Caches(
+        **{
+            k: (sharding.named_sharding(v) if v is not None else None)
+            for k, v in log.items()
+        }
+    )
+    return caches, shardings
+
+
+def _encdec_cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    s_dec = seq // 2
+    s_src = seq // 2
+    shp_self = (cfg.dec_layers, batch, s_dec, cfg.n_kv_heads, cfg.d_head)
+    shp_cross = (cfg.dec_layers, batch, s_src, cfg.n_kv_heads, cfg.d_head)
+    kv_logical = ("layers", "batch", "kv_seq_decode", "kv_heads", "head_dim")
+    sds = encdec_lib.EncDecCaches(
+        self_k=_SDS(shp_self, jnp.bfloat16),
+        self_v=_SDS(shp_self, jnp.bfloat16),
+        cross_k=_SDS(shp_cross, jnp.bfloat16),
+        cross_v=_SDS(shp_cross, jnp.bfloat16),
+        src_len=_SDS((batch,), jnp.int32),
+        length=_SDS((batch,), jnp.int32),
+    )
+    ns = sharding.named_sharding
+    shardings = encdec_lib.EncDecCaches(
+        self_k=ns(kv_logical),
+        self_v=ns(kv_logical),
+        cross_k=ns(kv_logical),
+        cross_v=ns(kv_logical),
+        src_len=ns(("batch",)),
+        length=ns(("batch",)),
+    )
+    return sds, shardings
+
+
+# ---------------------------------------------------------------------------
+# param/opt specs
+# ---------------------------------------------------------------------------
+
+
+def _param_sds_and_shardings(cfg: ArchConfig):
+    mod = encdec_lib if cfg.family == "encdec" else lm_lib
+    plan = mod.param_plan(cfg)
+    dtype = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    is_leaf = lambda x: isinstance(x, Leaf)
+    sds = jax.tree_util.tree_map(
+        lambda l: _SDS(l.shape, dtype), plan, is_leaf=is_leaf
+    )
+    shardings = jax.tree_util.tree_map(
+        lambda l: sharding.named_sharding(l.logical), plan, is_leaf=is_leaf
+    )
+    return sds, shardings
+
+
+def _train_state_specs(cfg: ArchConfig):
+    p_sds, p_sh = _param_sds_and_shardings(cfg)
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda s: _SDS(s.shape, jnp.float32), t
+    )
+    state_sds = TrainState(
+        params=p_sds,
+        opt=opt_lib.OptState(mu=f32(p_sds), nu=f32(p_sds), step=_SDS((), jnp.int32)),
+        ef_error=None,
+        step=_SDS((), jnp.int32),
+    )
+    rep = sharding.named_sharding(())
+    state_sh = TrainState(
+        params=p_sh,
+        opt=opt_lib.OptState(mu=p_sh, nu=p_sh, step=rep),
+        ef_error=None,
+        step=rep,
+    )
+    return state_sds, state_sh
+
+
+# ---------------------------------------------------------------------------
+# rule overrides per cell
+# ---------------------------------------------------------------------------
+
+
+def rules_for(cfg: ArchConfig, shape_name: str) -> Dict[str, Any]:
+    rules: Dict[str, Any] = {}
+    if shape_name == "long_500k":
+        # batch=1: nothing to shard on dp -> shard sequence/state instead
+        rules["batch"] = None
+        rules["expert_cap"] = None
+        rules["kv_seq_decode"] = ("data", "model")
+        rules["state"] = "data"
+    if cfg.family == "encdec" and shape_name in ("decode_32k",):
+        rules["kv_seq_decode"] = "model"
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# cell builder
+# ---------------------------------------------------------------------------
+
+
+def make_cell(
+    cfg: ArchConfig,
+    shape_name: str,
+    mesh,
+    rule_overrides: Optional[Dict[str, Any]] = None,
+) -> Cell:
+    info = SHAPES[shape_name]
+    kind, seq, batch = info["kind"], info["seq"], info["batch"]
+    rules = rules_for(cfg, shape_name)
+    rules.update(rule_overrides or {})
+    model = build_model(cfg)
+
+    with sharding.use_rules(mesh, rules):
+        if kind == "train":
+            state_sds, state_sh = _train_state_specs(cfg)
+            b_sds = _batch_specs(cfg, seq, batch, train=True)
+            b_sh = _batch_shardings(b_sds)
+            step = make_train_step(model, opt_lib.AdamWConfig())
+            rep = sharding.named_sharding(())
+            metrics_sh = {
+                k: rep for k in ("ce", "aux", "loss", "grad_norm", "lr")
+            }
+            return Cell(
+                cfg=cfg,
+                shape_name=shape_name,
+                kind=kind,
+                fn=step,
+                inputs=(state_sds, b_sds),
+                in_shardings=(state_sh, b_sh),
+                out_shardings=(state_sh, metrics_sh),
+                rules=rules,
+                donate=(0,),  # train state updated in place
+            )
+
+        if kind == "prefill":
+            p_sds, p_sh = _param_sds_and_shardings(cfg)
+            b_sds = _batch_specs(cfg, seq, batch, train=False)
+            b_sh = _batch_shardings(b_sds)
+            if cfg.family == "encdec":
+                cache_sds, cache_sh = _encdec_cache_specs(cfg, batch, seq)
+            else:
+                cache_sds, cache_sh = _lm_cache_specs(cfg, batch, seq)
+            logits_sh = sharding.named_sharding(("batch", None, "act_vocab"))
+
+            def prefill_fn(params, b):
+                return model.prefill(params, b)
+
+            return Cell(
+                cfg=cfg,
+                shape_name=shape_name,
+                kind=kind,
+                fn=prefill_fn,
+                inputs=(p_sds, b_sds),
+                in_shardings=(p_sh, b_sh),
+                out_shardings=(logits_sh, cache_sh),
+                rules=rules,
+            )
+
+        # decode
+        p_sds, p_sh = _param_sds_and_shardings(cfg)
+        tok_sds = _SDS((batch, 1), jnp.int32)
+        tok_sh = sharding.named_sharding(("batch", None))
+        if cfg.family == "encdec":
+            cache_sds, cache_sh = _encdec_cache_specs(cfg, batch, seq)
+        else:
+            cache_sds, cache_sh = _lm_cache_specs(cfg, batch, seq)
+        logits_sh = sharding.named_sharding(("batch", None, "act_vocab"))
+
+        def decode_fn(params, tokens, caches):
+            return model.decode_step(params, tokens, caches)
+
+        return Cell(
+            cfg=cfg,
+            shape_name=shape_name,
+            kind=kind,
+            fn=decode_fn,
+            inputs=(p_sds, tok_sds, cache_sds),
+            in_shardings=(p_sh, tok_sh, cache_sh),
+            out_shardings=(logits_sh, cache_sh),
+            rules=rules,
+            donate=(2,),  # KV caches / recurrent states updated in place
+        )
+
+
+def all_cells():
+    from repro.configs import registry
+
+    for name in registry.names():
+        cfg = registry.get(name)
+        for shape_name in SHAPES:
+            yield name, shape_name, cell_applicable(cfg, shape_name)

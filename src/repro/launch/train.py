@@ -1,0 +1,69 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the selected architecture's *reduced* config on local devices (this
+container: 1 CPU core) or lowers the full config against the production mesh
+with ``--dryrun``.  The full-scale path is exercised by launch/dryrun.py;
+this driver is the runnable end-to-end loop (checkpointed, preemption-safe).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import registry
+    from repro.data import MarkovLM
+    from repro.models import build
+    from repro.training import AdamWConfig, Trainer
+
+    cfg = registry.get(args.arch)
+    if args.tiny:
+        cfg = cfg.tiny()
+    model = build(cfg)
+    lm = MarkovLM(vocab_size=cfg.vocab_size, seed=0)
+
+    def batch_fn(step):
+        rng = np.random.default_rng(31_337 + step)
+        toks = np.stack([lm.sample(rng, args.seq + 1) for _ in range(args.batch)])
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.family == "encdec":
+            batch["src_embeds"] = rng.normal(
+                size=(args.batch, args.seq, cfg.frontend_dim)
+            ).astype(np.float32)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = rng.normal(
+                size=(args.batch, cfg.n_prefix_tokens, cfg.frontend_dim)
+            ).astype(np.float32)
+        return batch
+
+    ck = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
+    tr = Trainer(
+        model=model,
+        opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1)),
+        batch_fn=batch_fn,
+        ckpt=ck,
+        ckpt_every=max(args.steps // 4, 1),
+        grad_compression=args.grad_compression,
+        log_every=10,
+    )
+    state = tr.init_or_restore(0)
+    state, hist = tr.run(state, args.steps)
+    print(f"[launch.train] {cfg.name}: loss {hist['loss'][0]:.4f} -> {hist['loss'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Shared model building blocks: norms, RoPE, MLPs, param plans.
+
+Parameters are plain pytrees (nested dicts of arrays).  A *plan* is the
+single source of truth for each parameter's shape, logical sharding axes and
+init scale; :func:`init_from_plan` materializes values and
+:func:`specs_from_plan` derives the matching sharding-spec tree, so the two
+can never drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Leaf",
+    "init_from_plan",
+    "specs_from_plan",
+    "abstract_from_plan",
+    "rmsnorm",
+    "layernorm",
+    "apply_norm",
+    "norm_plan",
+    "rope",
+    "mlp_plan",
+    "mlp_apply",
+    "softmax_cross_entropy",
+    "maybe_scan",
+]
+
+
+def maybe_scan(body, carry, xs, unroll: bool = False):
+    """lax.scan, or a python-unrolled equivalent when ``unroll``.
+
+    The unrolled form exists because XLA's cost_analysis counts while-loop
+    bodies once; the dry-run lowers reduced-depth unrolled variants to get
+    exact per-layer FLOPs/bytes/collectives (launch/dryrun.py).
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if all(jax.tree_util.tree_leaves(y) == [] for y in ys):
+        return carry, None
+    stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a, 0), *ys)
+    return carry, stacked
+
+
+@dataclasses.dataclass(frozen=True)
+class Leaf:
+    """One parameter's plan: shape, logical axes, init."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    scale: Optional[float] = None  # stddev override
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(f"plan leaf rank mismatch: {self.shape} vs {self.logical}")
+
+
+def _init_leaf(leaf: Leaf, key, dtype) -> jnp.ndarray:
+    if leaf.init == "zeros":
+        return jnp.zeros(leaf.shape, dtype)
+    if leaf.init == "ones":
+        return jnp.ones(leaf.shape, dtype)
+    fan_in = leaf.shape[-2] if len(leaf.shape) >= 2 else leaf.shape[-1]
+    std = leaf.scale if leaf.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, leaf.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_from_plan(plan: Dict[str, Any], key, dtype=jnp.float32) -> Dict[str, Any]:
+    flat, treedef = jax.tree_util.tree_flatten(
+        plan, is_leaf=lambda x: isinstance(x, Leaf)
+    )
+    keys = jax.random.split(key, len(flat))
+    vals = [_init_leaf(leaf, k, dtype) for leaf, k in zip(flat, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def specs_from_plan(plan: Dict[str, Any]) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda leaf: leaf.logical, plan, is_leaf=lambda x: isinstance(x, Leaf)
+    )
+
+
+def abstract_from_plan(plan: Dict[str, Any], dtype=jnp.float32) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.ShapeDtypeStruct(leaf.shape, dtype),
+        plan,
+        is_leaf=lambda x: isinstance(x, Leaf),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, gamma: Optional[jnp.ndarray], eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if gamma is not None:
+        y = y * gamma.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(
+    x: jnp.ndarray,
+    gamma: Optional[jnp.ndarray],
+    beta: Optional[jnp.ndarray],
+    eps: float = 1e-5,
+):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if gamma is not None:
+        y = y * gamma.astype(jnp.float32)
+    if beta is not None:
+        y = y + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_plan(kind: str, d: int) -> Dict[str, Leaf]:
+    if kind == "rmsnorm":
+        return {"gamma": Leaf((d,), ("embed",), "ones")}
+    if kind == "layernorm":
+        return {"gamma": Leaf((d,), ("embed",), "ones"), "beta": Leaf((d,), ("embed",), "zeros")}
+    if kind == "nonparam_ln":  # OLMo: LN without affine params
+        return {}
+    raise ValueError(f"unknown norm {kind}")
+
+
+def apply_norm(kind: str, p: Dict[str, jnp.ndarray], x: jnp.ndarray):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["gamma"])
+    if kind == "layernorm":
+        return layernorm(x, p["gamma"], p["beta"])
+    if kind == "nonparam_ln":
+        return layernorm(x, None, None)
+    raise ValueError(f"unknown norm {kind}")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., T, H, D); positions: (..., T)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_plan(kind: str, d: int, ff: int, bias: bool, prefix_axes=()) -> Dict[str, Leaf]:
+    pa = tuple(prefix_axes)
+    pshape = tuple(1 for _ in pa)  # caller overrides leading dims via stack
+
+    def leaf(shape, logical, init="normal"):
+        return Leaf(shape, logical, init)
+
+    p: Dict[str, Leaf] = {}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = leaf((d, ff), ("embed", "mlp"))
+        p["w_up"] = leaf((d, ff), ("embed", "mlp"))
+        p["w_down"] = leaf((ff, d), ("mlp", "embed"))
+        if bias:
+            p["b_gate"] = leaf((ff,), ("mlp",), "zeros")
+            p["b_up"] = leaf((ff,), ("mlp",), "zeros")
+            p["b_down"] = leaf((d,), ("embed",), "zeros")
+    elif kind == "gelu":
+        p["w_up"] = leaf((d, ff), ("embed", "mlp"))
+        p["w_down"] = leaf((ff, d), ("mlp", "embed"))
+        if bias:
+            p["b_up"] = leaf((ff,), ("mlp",), "zeros")
+            p["b_down"] = leaf((d,), ("embed",), "zeros")
+    else:
+        raise ValueError(f"unknown mlp {kind}")
+    del pshape, pa
+    return p
+
+
+def mlp_apply(kind: str, p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    from repro.models.sharding import constrain
+
+    def maybe_bias(y, name):
+        return y + p[name] if name in p else y
+
+    if kind in ("swiglu", "geglu"):
+        g = maybe_bias(x @ p["w_gate"], "b_gate")
+        u = maybe_bias(x @ p["w_up"], "b_up")
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+        if h.ndim == 3:
+            h = constrain(h, "batch", "seq", "act_mlp")
+        return maybe_bias(h @ p["w_down"], "b_down")
+    if kind == "gelu":
+        h = jax.nn.gelu(maybe_bias(x @ p["w_up"], "b_up"))
+        if h.ndim == 3:
+            h = constrain(h, "batch", "seq", "act_mlp")
+        return maybe_bias(h @ p["w_down"], "b_down")
+    raise ValueError(f"unknown mlp {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
+    """Mean CE over masked positions.  logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

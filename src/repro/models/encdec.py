@@ -1,0 +1,204 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2 text/unit model).
+
+The speech frontend is stubbed per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_src, frontend_dim).  Decoder layers are
+self-attn (causal) + cross-attn (encoder memory) + FFN, post-norm-free
+pre-LN like the rest of the repo.
+
+Serving: ``prefill`` runs the encoder once, projects per-layer cross KV, and
+prefills the decoder prompt; ``decode_step`` appends one token (cross KV is
+static).  CacheGen streams both the decoder self-KV of a reusable prompt and
+the per-layer cross-KV of reusable source audio (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import sharding
+from repro.models.attention import (
+    attn_decode,
+    attn_plan,
+    attn_prefill,
+    cross_attn_prefill,
+    memory_kv,
+)
+from repro.models.common import (
+    Leaf,
+    apply_norm,
+    init_from_plan,
+    maybe_scan,
+    mlp_apply,
+    mlp_plan,
+    norm_plan,
+    softmax_cross_entropy,
+    specs_from_plan,
+)
+from repro.models.lm import _remat, _stack_plan  # shared helpers
+
+__all__ = ["EncDecCaches", "param_plan", "init_params", "loss_fn", "prefill", "decode_step"]
+
+
+class EncDecCaches(NamedTuple):
+    self_k: jnp.ndarray  # (Ld, B, S_dec, Hkv, Dh)
+    self_v: jnp.ndarray
+    cross_k: jnp.ndarray  # (Ld, B, S_src, Hkv, Dh)
+    cross_v: jnp.ndarray
+    src_len: jnp.ndarray  # (B,)
+    length: jnp.ndarray  # (B,) decoder tokens so far
+
+
+def _enc_layer_plan(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": norm_plan(cfg.norm, cfg.d_model),
+        "attn": attn_plan(cfg),
+        "ln2": norm_plan(cfg.norm, cfg.d_model),
+        "mlp": mlp_plan(cfg.mlp, cfg.d_model, cfg.d_ff, cfg.mlp_bias),
+    }
+
+
+def _dec_layer_plan(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": norm_plan(cfg.norm, cfg.d_model),
+        "self_attn": attn_plan(cfg),
+        "ln_x": norm_plan(cfg.norm, cfg.d_model),
+        "cross_attn": attn_plan(cfg),
+        "ln2": norm_plan(cfg.norm, cfg.d_model),
+        "mlp": mlp_plan(cfg.mlp, cfg.d_model, cfg.d_ff, cfg.mlp_bias),
+    }
+
+
+def param_plan(cfg: ArchConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.padded_vocab_size
+    return {
+        "embed": Leaf((V, d), ("vocab", "embed"), scale=0.02),
+        "frontend_proj": Leaf((cfg.frontend_dim, d), ("frontend", "embed")),
+        "enc_layers": _stack_plan(_enc_layer_plan(cfg), cfg.enc_layers),
+        "enc_norm": norm_plan(cfg.norm, d),
+        "dec_layers": _stack_plan(_dec_layer_plan(cfg), cfg.dec_layers),
+        "final_norm": norm_plan(cfg.norm, d),
+        "head": Leaf((d, V), ("embed", "vocab")),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dtype = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    return init_from_plan(param_plan(cfg), key, dtype)
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return specs_from_plan(param_plan(cfg))
+
+
+def encode(cfg: ArchConfig, params, src_embeds: jnp.ndarray) -> jnp.ndarray:
+    """src_embeds (B, S, frontend_dim) -> encoder memory (B, S, d)."""
+    proj = params["frontend_proj"]
+    x = (src_embeds.astype(proj.dtype) @ proj).astype(proj.dtype)
+    x = sharding.constrain(x, "batch", "seq", "act_embed")
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(h, p_l):
+        hn = apply_norm(cfg.norm, p_l["ln1"], h)
+        attn_out, _ = attn_prefill(cfg, p_l["attn"], hn, positions, causal=False)
+        h = h + attn_out
+        hn2 = apply_norm(cfg.norm, p_l["ln2"], h)
+        return h + mlp_apply(cfg.mlp, p_l["mlp"], hn2), None
+
+    body_fn = _remat(cfg, body)
+    x, _ = maybe_scan(body_fn, x, params["enc_layers"], cfg.scan_unroll)
+    return apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _decoder_prefill(cfg, params, memory, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = sharding.constrain(x, "batch", "seq", "act_embed")
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def body(h, p_l):
+        hn = apply_norm(cfg.norm, p_l["ln1"], h)
+        attn_out, self_kv = attn_prefill(cfg, p_l["self_attn"], hn, positions)
+        h = h + attn_out
+        hx = apply_norm(cfg.norm, p_l["ln_x"], h)
+        mem_kv = memory_kv(cfg, p_l["cross_attn"], memory)
+        h = h + cross_attn_prefill(cfg, p_l["cross_attn"], hx, mem_kv)
+        hn2 = apply_norm(cfg.norm, p_l["ln2"], h)
+        h = h + mlp_apply(cfg.mlp, p_l["mlp"], hn2)
+        return h, (self_kv, mem_kv)
+
+    body_fn = _remat(cfg, body)
+    x, ((sk, sv), (ck, cv)) = maybe_scan(body_fn, x, params["dec_layers"], cfg.scan_unroll)
+    return x, (sk, sv), (ck, cv)
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    memory = encode(cfg, params, batch["src_embeds"])
+    x, _, _ = _decoder_prefill(cfg, params, memory, batch["tokens"])
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = x @ params["head"]
+    logits = sharding.constrain(logits, "batch", "seq", "act_vocab")
+    loss = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+def prefill(cfg: ArchConfig, params, batch, *, pad_to: Optional[int] = None):
+    memory = encode(cfg, params, batch["src_embeds"])
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x, (sk, sv), (ck, cv) = _decoder_prefill(cfg, params, memory, tokens)
+    x = apply_norm(cfg.norm, params["final_norm"], x[:, -1:])
+    logits = x @ params["head"]
+    cap = pad_to or T
+    pad = cap - T
+    if pad:
+        pw = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        sk, sv = jnp.pad(sk, pw), jnp.pad(sv, pw)
+    S_src = memory.shape[1]
+    caches = EncDecCaches(
+        self_k=sk,
+        self_v=sv,
+        cross_k=ck,
+        cross_v=cv,
+        src_len=jnp.full((B,), S_src, jnp.int32),
+        length=jnp.full((B,), T, jnp.int32),
+    )
+    return logits, caches
+
+
+def decode_step(cfg: ArchConfig, params, tokens, caches: EncDecCaches):
+    from repro.models.attention import _decode_mha_plain  # reuse
+
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    cache_len = caches.length
+
+    def body(h, xs):
+        p_l, sk, sv, ck, cv = xs
+        hn = apply_norm(cfg.norm, p_l["ln1"], h)
+        attn_out, (sk, sv) = attn_decode(cfg, p_l["self_attn"], hn, (sk, sv), cache_len)
+        h = h + attn_out
+        hx = apply_norm(cfg.norm, p_l["ln_x"], h)
+        q = (hx[:, 0] @ p_l["cross_attn"]["wq"]).reshape(
+            B, cfg.n_heads, cfg.d_head
+        )
+        if cfg.qkv_bias:
+            q = q + p_l["cross_attn"]["bq"].reshape(cfg.n_heads, cfg.d_head)
+        o = _decode_mha_plain(q, ck, cv, caches.src_len)
+        h = h + (o.reshape(B, 1, cfg.n_heads * cfg.d_head) @ p_l["cross_attn"]["wo"])
+        hn2 = apply_norm(cfg.norm, p_l["ln2"], h)
+        h = h + mlp_apply(cfg.mlp, p_l["mlp"], hn2)
+        return h, (sk, sv)
+
+    x, (sk, sv) = maybe_scan(
+        body,
+        x,
+        (params["dec_layers"], caches.self_k, caches.self_v, caches.cross_k, caches.cross_v),
+        cfg.scan_unroll,
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = x @ params["head"]
+    return logits, caches._replace(self_k=sk, self_v=sv, length=cache_len + 1)

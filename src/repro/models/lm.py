@@ -1,0 +1,549 @@
+"""Unified decoder LM covering dense / moe / ssm / hybrid / vlm families.
+
+Scan-over-layers with optional remat (keeps HLO small at 80 layers and
+controls activation memory); hybrid (zamba2) runs segment loops: scan over
+``shared_block_every`` Mamba2 layers, then the weight-shared attention block.
+
+Public entry points (used by trainer, serving engine, and the dry-run):
+  * param_plan / init_params
+  * loss_fn(params, batch)                      — train step target
+  * prefill(params, batch)                      — returns logits + caches
+  * decode_step(params, tokens, caches)         — one-token serve step
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import sharding
+from repro.models.attention import attn_decode, attn_plan, attn_prefill
+from repro.models.common import (
+    Leaf,
+    apply_norm,
+    init_from_plan,
+    maybe_scan,
+    mlp_apply,
+    mlp_plan,
+    norm_plan,
+    softmax_cross_entropy,
+    specs_from_plan,
+)
+from repro.models.mamba2 import (
+    Mamba2State,
+    mamba2_decode,
+    mamba2_plan,
+    mamba2_prefill,
+)
+from repro.models.moe import moe_apply, moe_plan
+
+__all__ = ["Caches", "param_plan", "init_params", "loss_fn", "prefill", "decode_step"]
+
+
+class Caches(NamedTuple):
+    """Serving caches; unused fields are None per family."""
+
+    kv_k: Optional[jnp.ndarray]  # (L, B, S, Hkv, Dh)
+    kv_v: Optional[jnp.ndarray]
+    length: Optional[jnp.ndarray]  # (B,)
+    mamba_conv: Optional[jnp.ndarray]  # (L, B, K-1, C)
+    mamba_ssm: Optional[jnp.ndarray]  # (L, B, H, P, N)
+    shared_k: Optional[jnp.ndarray]  # (n_apps, B, S, Hkv, Dh)  [zamba2]
+    shared_v: Optional[jnp.ndarray]
+
+
+def _empty_caches(**kw) -> Caches:
+    base = dict(
+        kv_k=None, kv_v=None, length=None, mamba_conv=None, mamba_ssm=None,
+        shared_k=None, shared_v=None,
+    )
+    base.update(kw)
+    return Caches(**base)
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+
+
+def _stack_plan(plan: Dict[str, Any], n: int) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda leaf: Leaf((n,) + leaf.shape, ("layers",) + leaf.logical, leaf.init, leaf.scale),
+        plan,
+        is_leaf=lambda x: isinstance(x, Leaf),
+    )
+
+
+def _dense_layer_plan(cfg: ArchConfig) -> Dict[str, Any]:
+    p: Dict[str, Any] = {"ln1": norm_plan(cfg.norm, cfg.d_model), "attn": attn_plan(cfg)}
+    if not cfg.parallel_block:
+        p["ln2"] = norm_plan(cfg.norm, cfg.d_model)
+    if cfg.family == "moe":
+        p["moe"] = moe_plan(cfg)
+    else:
+        p["mlp"] = mlp_plan(cfg.mlp, cfg.d_model, cfg.d_ff, cfg.mlp_bias)
+    return p
+
+
+def _shared_block_plan(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": norm_plan("rmsnorm", cfg.d_model),
+        "attn": attn_plan(cfg),
+        "ln2": norm_plan("rmsnorm", cfg.d_model),
+        "mlp": mlp_plan(cfg.mlp, cfg.d_model, cfg.d_ff, cfg.mlp_bias),
+    }
+
+
+def param_plan(cfg: ArchConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.padded_vocab_size
+    plan: Dict[str, Any] = {
+        "embed": Leaf((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": norm_plan(cfg.norm, d),
+    }
+    if not cfg.tie_embeddings:
+        plan["head"] = Leaf((d, V), ("embed", "vocab"))
+    if cfg.family in ("dense", "moe", "vlm"):
+        plan["layers"] = _stack_plan(_dense_layer_plan(cfg), cfg.n_layers)
+    elif cfg.family == "ssm":
+        lp = {"ln1": norm_plan(cfg.norm, d), "mamba": mamba2_plan(cfg)}
+        plan["layers"] = _stack_plan(lp, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        lp = {"ln1": norm_plan(cfg.norm, d), "mamba": mamba2_plan(cfg)}
+        plan["layers"] = _stack_plan(lp, cfg.n_layers)
+        plan["shared_block"] = _shared_block_plan(cfg)
+    else:
+        raise ValueError(f"lm.py does not build family {cfg.family}")
+    if cfg.family == "vlm":
+        plan["frontend_proj"] = Leaf((cfg.frontend_dim, d), ("frontend", "embed"))
+    return plan
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dtype = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    return init_from_plan(param_plan(cfg), key, dtype)
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return specs_from_plan(param_plan(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _dense_block_prefill(cfg, p, x, positions, prefix_len):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    attn_out, kv = attn_prefill(cfg, p["attn"], h, positions, prefix_len=prefix_len)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        mlp_out = mlp_apply(cfg.mlp, p["mlp"], h)
+        x = x + attn_out + mlp_out
+    else:
+        x = x + attn_out
+        h2 = apply_norm(cfg.norm, p["ln2"], x)
+        if cfg.family == "moe":
+            mo, aux = moe_apply(cfg, p["moe"], h2)
+            x = x + mo
+        else:
+            x = x + mlp_apply(cfg.mlp, p["mlp"], h2)
+    return x, kv, aux
+
+
+def _dense_block_decode(cfg, p, x, kc, vc, cache_len):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    attn_out, (kc, vc) = attn_decode(cfg, p["attn"], h, (kc, vc), cache_len)
+    if cfg.parallel_block:
+        x = x + attn_out + mlp_apply(cfg.mlp, p["mlp"], h)
+    else:
+        x = x + attn_out
+        h2 = apply_norm(cfg.norm, p["ln2"], x)
+        if cfg.family == "moe":
+            mo, _ = moe_apply(cfg, p["moe"], h2)
+            x = x + mo
+        else:
+            x = x + mlp_apply(cfg.mlp, p["mlp"], h2)
+    return x, kc, vc
+
+
+def _shared_block_prefill(cfg, p, x, positions):
+    h = apply_norm("rmsnorm", p["ln1"], x)
+    attn_out, kv = attn_prefill(cfg, p["attn"], h, positions)
+    x = x + attn_out
+    h2 = apply_norm("rmsnorm", p["ln2"], x)
+    x = x + mlp_apply(cfg.mlp, p["mlp"], h2)
+    return x, kv
+
+
+def _shared_block_decode(cfg, p, x, kc, vc, cache_len):
+    h = apply_norm("rmsnorm", p["ln1"], x)
+    attn_out, (kc, vc) = attn_decode(cfg, p["attn"], h, (kc, vc), cache_len)
+    x = x + attn_out
+    h2 = apply_norm("rmsnorm", p["ln2"], x)
+    x = x + mlp_apply(cfg.mlp, p["mlp"], h2)
+    return x, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return sharding.constrain(x, "batch", "seq", "act_embed")
+
+
+def _logits(cfg, params, x):
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ w
+    if logits.ndim == 3:
+        logits = sharding.constrain(logits, "batch", "seq", "act_vocab")
+    return logits
+
+
+def _assemble_input(cfg, params, batch):
+    """Token (+ optional multimodal prefix) embedding.
+
+    Returns (x, positions, prefix_len or None, n_prefix).
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = _embed_tokens(cfg, params, tokens)
+    n_prefix = 0
+    prefix_len = None
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"]  # (B, n_img, frontend_dim)
+        px = patches @ params["frontend_proj"]
+        x = jnp.concatenate([px.astype(x.dtype), x], axis=1)
+        n_prefix = patches.shape[1]
+        prefix_len = jnp.full((B,), n_prefix, jnp.int32)
+    T = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    return x, positions, prefix_len, n_prefix
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+
+
+def _remat(cfg, fn):
+    """jax.checkpoint with the config-selected policy (perf hillclimb knob)."""
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+def _run_layers_prefill(cfg, params, x, positions, prefix_len, initial: Optional[Caches] = None):
+    """Returns (x, caches-without-length, aux)."""
+    dtype = x.dtype
+
+    if cfg.family in ("dense", "moe", "vlm"):
+
+        def body(carry, p_l):
+            h, aux = carry
+            h, kv, aux_l = _dense_block_prefill(cfg, p_l, h, positions, prefix_len)
+            return (h, aux + aux_l), kv
+
+        body_fn = _remat(cfg, body)
+        (x, aux), (ks, vs) = maybe_scan(
+            body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"], cfg.scan_unroll
+        )
+        return x, _empty_caches(kv_k=ks, kv_v=vs), aux
+
+    if cfg.family == "ssm":
+
+        def body(carry, inp):
+            h = carry
+            p_l = inp[0]
+            init_l = None
+            if initial is not None:
+                init_l = Mamba2State(conv=inp[1], ssm=inp[2])
+            hn = apply_norm(cfg.norm, p_l["ln1"], h)
+            out, st = mamba2_prefill(cfg, p_l["mamba"], hn, init_l)
+            return h + out, (st.conv, st.ssm)
+
+        body_fn = _remat(cfg, body)
+        xs = (params["layers"],)
+        if initial is not None:
+            xs = (params["layers"], initial.mamba_conv, initial.mamba_ssm)
+        x, (convs, ssms) = maybe_scan(body_fn, x, xs, cfg.scan_unroll)
+        return x, _empty_caches(mamba_conv=convs, mamba_ssm=ssms), jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        every = cfg.shared_block_every
+        L = cfg.n_layers
+        n_segs, rem = divmod(L, every)
+        sb = params["shared_block"]
+
+        def mamba_body(carry, p_l):
+            h = carry
+            hn = apply_norm(cfg.norm, p_l["ln1"], h)
+            out, st = mamba2_prefill(cfg, p_l["mamba"], hn, None)
+            return h + out, (st.conv, st.ssm)
+
+        mamba_fn = _remat(cfg, mamba_body)
+
+        convs, ssms, sks, svs = [], [], [], []
+        layer_tree = params["layers"]
+        for s in range(n_segs):
+            seg = jax.tree_util.tree_map(
+                lambda a: jax.lax.slice_in_dim(a, s * every, (s + 1) * every, axis=0),
+                layer_tree,
+            )
+            x, (cv, sm) = maybe_scan(mamba_fn, x, seg, cfg.scan_unroll)
+            convs.append(cv)
+            ssms.append(sm)
+            x, kv = _shared_block_prefill(cfg, sb, x, positions)
+            sks.append(kv[0])
+            svs.append(kv[1])
+        if rem:
+            seg = jax.tree_util.tree_map(
+                lambda a: jax.lax.slice_in_dim(a, n_segs * every, L, axis=0), layer_tree
+            )
+            x, (cv, sm) = maybe_scan(mamba_fn, x, seg, cfg.scan_unroll)
+            convs.append(cv)
+            ssms.append(sm)
+        caches = _empty_caches(
+            mamba_conv=jnp.concatenate(convs, axis=0),
+            mamba_ssm=jnp.concatenate(ssms, axis=0),
+            shared_k=jnp.stack(sks, axis=0),
+            shared_v=jnp.stack(svs, axis=0),
+        )
+        return x, caches, jnp.zeros((), jnp.float32)
+
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    x, positions, prefix_len, n_prefix = _assemble_input(cfg, params, batch)
+    x, _, aux = _run_layers_prefill(cfg, params, x, positions, prefix_len)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = _logits(cfg, params, x)
+    loss = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+def prefill(cfg: ArchConfig, params, batch, *, pad_to: Optional[int] = None):
+    """Prefill the context; returns (last-token logits, Caches).
+
+    ``pad_to``: allocate KV caches with this sequence capacity (>= T) so the
+    serving engine can decode further tokens in place.
+    """
+    x, positions, prefix_len, n_prefix = _assemble_input(cfg, params, batch)
+    B, T = x.shape[0], x.shape[1]
+    x, caches, _ = _run_layers_prefill(cfg, params, x, positions, prefix_len)
+    logits = _logits(cfg, params, x[:, -1:])
+    length = jnp.full((B,), T, jnp.int32)
+    cap = pad_to or T
+    if caches.kv_k is not None:
+        pad = cap - T
+        if pad:
+            pw = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+            caches = caches._replace(
+                kv_k=jnp.pad(caches.kv_k, pw), kv_v=jnp.pad(caches.kv_v, pw)
+            )
+        caches = caches._replace(
+            kv_k=sharding.constrain(
+                caches.kv_k, "layers", "batch", "kv_seq_decode", "kv_heads", "head_dim"
+            ),
+            kv_v=sharding.constrain(
+                caches.kv_v, "layers", "batch", "kv_seq_decode", "kv_heads", "head_dim"
+            ),
+        )
+    if caches.shared_k is not None:
+        pad = cap - T
+        if pad:
+            pw = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+            caches = caches._replace(
+                shared_k=jnp.pad(caches.shared_k, pw),
+                shared_v=jnp.pad(caches.shared_v, pw),
+            )
+    return logits, caches._replace(length=length)
+
+
+def _extend_mha(q, kc, vc, cache_len, n_new):
+    """Attention of a new chunk's queries vs (cache + itself already written).
+
+    q: (B, Tc, Hq, D); kc/vc: (B, S_cap, Hkv, D) with the chunk already
+    written at [cache_len, cache_len + Tc).  Causal within the chunk,
+    full attention to the cache prefix.
+    """
+    B, Tc, Hq, D = q.shape
+    Hkv = kc.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    kh = jnp.repeat(kc, rep, axis=2)
+    vh = jnp.repeat(vc, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kh).astype(jnp.float32) * scale
+    S = kc.shape[1]
+    k_pos = jnp.arange(S)[None, None, :]
+    q_limit = cache_len[:, None, None] + jnp.arange(Tc)[None, :, None] + 1
+    mask = k_pos < q_limit  # (B, Tc, S)
+    s = jnp.where(mask[:, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(vh.dtype), vh)
+
+
+def prefill_extend(cfg: ArchConfig, params, tokens, caches: Caches):
+    """Compute KV for a text chunk *given* earlier chunks' KV (paper fn. 6:
+    the LLM recomputes a text-format chunk based on the previous chunks'
+    received-and-decoded KV).  Supported for attention families; SSM uses
+    ``prefill`` with an initial state instead.
+
+    tokens: (B, Tc).  Returns (last logits, updated caches).
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"prefill_extend not supported for family {cfg.family}")
+    from repro.models.attention import _project_qkv
+
+    B, Tc = tokens.shape
+    cache_len = caches.length
+    x = _embed_tokens(cfg, params, tokens)
+    positions = cache_len[:, None] + jnp.arange(Tc, dtype=jnp.int32)[None]
+
+    def body(h, xs):
+        p_l, kc, vc = xs
+        hn = apply_norm(cfg.norm, p_l["ln1"], h)
+        q, k, v, k_pre = _project_qkv(cfg, p_l["attn"], hn, positions)
+        upd = jax.vmap(
+            lambda c, new, i: jax.lax.dynamic_update_slice_in_dim(c, new, i, axis=0)
+        )
+        k_wr = k_pre if cfg.prerope_kv_cache else k
+        kc = upd(kc, k_wr.astype(kc.dtype), cache_len)
+        vc = upd(vc, v.astype(vc.dtype), cache_len)
+        if cfg.prerope_kv_cache:
+            from repro.models.common import rope as _rope
+
+            S = kc.shape[1]
+            pos_grid = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (B, S)
+            )
+            kc_read = _rope(kc, pos_grid, cfg.rope_theta)
+        else:
+            kc_read = kc
+        o = _extend_mha(q, kc_read, vc, cache_len, Tc)
+        attn_out = o.reshape(B, Tc, cfg.n_heads * cfg.d_head) @ p_l["attn"]["wo"]
+        if cfg.parallel_block:
+            h = h + attn_out + mlp_apply(cfg.mlp, p_l["mlp"], hn)
+        else:
+            h = h + attn_out
+            h2 = apply_norm(cfg.norm, p_l["ln2"], h)
+            if cfg.family == "moe":
+                mo, _ = moe_apply(cfg, p_l["moe"], h2)
+                h = h + mo
+            else:
+                h = h + mlp_apply(cfg.mlp, p_l["mlp"], h2)
+        return h, (kc, vc)
+
+    x, (kc, vc) = maybe_scan(
+        body, x, (params["layers"], caches.kv_k, caches.kv_v), cfg.scan_unroll
+    )
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits, caches._replace(kv_k=kc, kv_v=vc, length=cache_len + Tc)
+
+
+def decode_step(cfg: ArchConfig, params, tokens, caches: Caches):
+    """One-token step.  tokens (B, 1) -> (logits (B, 1, V), updated caches)."""
+    B = tokens.shape[0]
+    x = _embed_tokens(cfg, params, tokens)
+    cache_len = caches.length
+
+    if cfg.family in ("dense", "moe", "vlm"):
+
+        def body(h, xs):
+            p_l, kc, vc = xs
+            h, kc, vc = _dense_block_decode(cfg, p_l, h, kc, vc, cache_len)
+            return h, (kc, vc)
+
+        x, (kc, vc) = maybe_scan(
+        body, x, (params["layers"], caches.kv_k, caches.kv_v), cfg.scan_unroll
+    )
+        caches = caches._replace(kv_k=kc, kv_v=vc, length=cache_len + 1)
+
+    elif cfg.family == "ssm":
+
+        def body(h, xs):
+            p_l, conv, ssm = xs
+            hn = apply_norm(cfg.norm, p_l["ln1"], h)
+            out, st = mamba2_decode(cfg, p_l["mamba"], hn, Mamba2State(conv, ssm))
+            return h + out, (st.conv, st.ssm)
+
+        x, (convs, ssms) = maybe_scan(
+            body, x, (params["layers"], caches.mamba_conv, caches.mamba_ssm),
+            cfg.scan_unroll,
+        )
+        caches = caches._replace(
+            mamba_conv=convs, mamba_ssm=ssms, length=cache_len + 1
+        )
+
+    elif cfg.family == "hybrid":
+        every = cfg.shared_block_every
+        L = cfg.n_layers
+        n_segs, rem = divmod(L, every)
+        sb = params["shared_block"]
+
+        def body(h, xs):
+            p_l, conv, ssm = xs
+            hn = apply_norm(cfg.norm, p_l["ln1"], h)
+            out, st = mamba2_decode(cfg, p_l["mamba"], hn, Mamba2State(conv, ssm))
+            return h + out, (st.conv, st.ssm)
+
+        convs, ssms, sks, svs = [], [], [], []
+        for s in range(n_segs):
+            seg = jax.tree_util.tree_map(
+                lambda a: jax.lax.slice_in_dim(a, s * every, (s + 1) * every, axis=0),
+                params["layers"],
+            )
+            seg_conv = jax.lax.slice_in_dim(
+                caches.mamba_conv, s * every, (s + 1) * every, axis=0
+            )
+            seg_ssm = jax.lax.slice_in_dim(
+                caches.mamba_ssm, s * every, (s + 1) * every, axis=0
+            )
+            x, (cv, sm) = maybe_scan(body, x, (seg, seg_conv, seg_ssm), cfg.scan_unroll)
+            convs.append(cv)
+            ssms.append(sm)
+            kc = caches.shared_k[s]
+            vc = caches.shared_v[s]
+            x, kc, vc = _shared_block_decode(cfg, sb, x, kc, vc, cache_len)
+            sks.append(kc)
+            svs.append(vc)
+        if rem:
+            seg = jax.tree_util.tree_map(
+                lambda a: jax.lax.slice_in_dim(a, n_segs * every, L, axis=0),
+                params["layers"],
+            )
+            seg_conv = jax.lax.slice_in_dim(caches.mamba_conv, n_segs * every, L, axis=0)
+            seg_ssm = jax.lax.slice_in_dim(caches.mamba_ssm, n_segs * every, L, axis=0)
+            x, (cv, sm) = maybe_scan(body, x, (seg, seg_conv, seg_ssm), cfg.scan_unroll)
+            convs.append(cv)
+            ssms.append(sm)
+        caches = caches._replace(
+            mamba_conv=jnp.concatenate(convs, 0),
+            mamba_ssm=jnp.concatenate(ssms, 0),
+            shared_k=jnp.stack(sks, 0),
+            shared_v=jnp.stack(svs, 0),
+            length=cache_len + 1,
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits(cfg, params, x)
+    return logits, caches

@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD, state-space duality) block: chunked train/prefill scan +
+O(1)-state decode step.  [arXiv:2405.21060]
+
+The chunked algorithm computes, per chunk of Q tokens:
+  intra-chunk:  Y_intra[i] = sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) dt_j x_j
+  chunk state:  S_c        = sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+  inter-chunk:  h_c = exp(cum_end) h_{c-1} + S_c   (lax.scan over chunks)
+                Y_inter[i] = exp(cum_i) C_i . h_{c-1}
+All decays are <= 1 (A < 0, dt > 0) so every exp() is stable in f32.
+
+Decode carries (conv_state, ssm_state); the ssm update is the exact
+recurrence (kernels/ref.py:ssd_ref is the oracle for both paths).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import sharding
+from repro.models.common import Leaf, rmsnorm
+
+__all__ = ["mamba2_plan", "mamba2_prefill", "mamba2_decode", "Mamba2State", "ssd_chunked"]
+
+
+class Mamba2State(NamedTuple):
+    conv: jnp.ndarray  # (B, conv_w - 1, d_conv_channels)
+    ssm: jnp.ndarray  # (B, H, P, N) f32
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_headdim
+    G = cfg.ssm_groups
+    N = cfg.ssm_state
+    assert H * P == d_in, f"ssm_heads*ssm_headdim {H}x{P} != d_inner {d_in}"
+    conv_ch = d_in + 2 * G * N
+    return d_in, H, P, G, N, conv_ch
+
+
+def mamba2_plan(cfg: ArchConfig) -> Dict[str, Leaf]:
+    d = cfg.d_model
+    d_in, H, P, G, N, conv_ch = _dims(cfg)
+    return {
+        "in_proj": Leaf((d, 2 * d_in + 2 * G * N + H), ("embed", "ssm_inner")),
+        "conv_w": Leaf((cfg.ssm_conv, conv_ch), ("conv", "ssm_inner"), scale=0.5),
+        "conv_b": Leaf((conv_ch,), ("ssm_inner",), "zeros"),
+        "a_log": Leaf((H,), ("ssm_heads",), "zeros"),  # A = -exp(a_log)
+        "dt_bias": Leaf((H,), ("ssm_heads",), "zeros"),
+        "d_skip": Leaf((H,), ("ssm_heads",), "ones"),
+        "norm_gamma": Leaf((d_in,), ("ssm_inner",), "ones"),
+        "out_proj": Leaf((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, T, H, P)
+    dt: jnp.ndarray,  # (B, T, H) positive
+    A: jnp.ndarray,  # (H,) negative
+    Bm: jnp.ndarray,  # (B, T, G, N)
+    Cm: jnp.ndarray,  # (B, T, G, N)
+    chunk: int,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    Bb, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, T)
+    T_orig = T
+    if T % Q:
+        # pad with dt=0 tokens: decay=exp(0)=1 and dt*x=0, so padding is
+        # exactly state-neutral; outputs are truncated below.
+        pad = Q * (-(-T // Q)) - T
+        pw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        x = jnp.pad(x, pw)
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, pw)
+        Cm = jnp.pad(Cm, pw)
+        T = T + pad
+    nc = T // Q
+
+    xf = x.astype(jnp.float32).reshape(Bb, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bb, nc, Q, H)
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32).reshape(Bb, nc, Q, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32).reshape(Bb, nc, Q, H, N)
+
+    a = dtf * A[None, None, None, :]  # (B,nc,Q,H) negative log-decays
+    cum = jnp.cumsum(a, axis=2)  # inclusive
+    cum_end = cum[:, :, -1, :]  # (B,nc,H)
+
+    # intra-chunk (i >= j): scores = (C_i.B_j) * exp(cum_i - cum_j) * dt_j
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)  # (B,nc,H,Q_i,Q_j)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q_i,Q_j,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, None, :, :, None]
+    decay = jnp.where(mask, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    scores = cb * jnp.moveaxis(decay, -1, 2)  # (B,nc,H,Q_i,Q_j)
+    sdt = scores * dtf.transpose(0, 1, 3, 2)[:, :, :, None, :]  # x dt_j
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", sdt, xf)
+
+    # chunk states: S_c = sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    w = jnp.exp(cum_end[:, :, None, :] - cum) * dtf  # (B,nc,Q,H)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w, Bh, xf)
+
+    # inter-chunk recurrence over nc
+    cdecay = jnp.exp(cum_end)  # (B,nc,H)
+
+    def step(h, inp):
+        dec, s_c = inp  # (B,H), (B,H,P,N)
+        h_prev = h
+        h = h * dec[:, :, None, None] + s_c
+        return h, h_prev
+
+    h0 = (
+        jnp.zeros((Bb, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    hT, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(cdecay, 1, 0), jnp.moveaxis(S, 1, 0))
+    )
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,P,N) state before each chunk
+
+    y_inter = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Ch, h_prev, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).reshape(Bb, T, H, P)[:, :T_orig]
+    return y.astype(x.dtype), hT
+
+
+def _split_proj(cfg: ArchConfig, z_x_bc_dt: jnp.ndarray):
+    d_in, H, P, G, N, conv_ch = _dims(cfg)
+    z, xbc, dt = jnp.split(z_x_bc_dt, [d_in, d_in + conv_ch], axis=-1)
+    return z, xbc, dt  # dt: (..., H)
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv1d, window K.  xbc: (B,T,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    T = xbc.shape[1]
+    for i in range(K):
+        out = out + pad[:, i : i + T].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def mamba2_prefill(
+    cfg: ArchConfig,
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # (B, T, d)
+    initial: Optional[Mamba2State] = None,
+) -> Tuple[jnp.ndarray, Mamba2State]:
+    B, T, d = x.shape
+    d_in, H, P, G, N, conv_ch = _dims(cfg)
+    zxd = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxd)
+    conv_in = xbc
+    if initial is not None:
+        conv_ctx = jnp.concatenate([initial.conv.astype(xbc.dtype), xbc], axis=1)
+        conv_out = _causal_conv(conv_ctx, p["conv_w"], p["conv_b"])[:, cfg.ssm_conv - 1 :]
+    else:
+        conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bc, Cc = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, T, H, P)
+    Bc = Bc.reshape(B, T, G, N)
+    Cc = Cc.reshape(B, T, G, N)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, hT = ssd_chunked(xs, dtv, A, Bc, Cc, cfg.ssm_chunk,
+                        None if initial is None else initial.ssm)
+    y = y + xs.astype(jnp.float32).astype(y.dtype) * p["d_skip"].astype(y.dtype)[
+        None, None, :, None
+    ]
+    y = y.reshape(B, T, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_gamma"])
+    out = y @ p["out_proj"]
+    new_conv = (
+        jnp.concatenate([initial.conv.astype(conv_in.dtype), conv_in], axis=1)
+        if initial is not None
+        else conv_in
+    )[:, -(cfg.ssm_conv - 1) :]
+    return out, Mamba2State(conv=new_conv, ssm=hT)
+
+
+def mamba2_decode(
+    cfg: ArchConfig,
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # (B, 1, d)
+    state: Mamba2State,
+) -> Tuple[jnp.ndarray, Mamba2State]:
+    B = x.shape[0]
+    d_in, H, P, G, N, conv_ch = _dims(cfg)
+    zxd = x[:, 0] @ p["in_proj"]  # (B, ...)
+    z, xbc, dt = _split_proj(cfg, zxd)
+    # conv over (state ++ new token)
+    window = jnp.concatenate(
+        [state.conv.astype(xbc.dtype), xbc[:, None, :]], axis=1
+    )  # (B, K, C)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xs, Bc, Cc = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, H, P)
+    Bc = jnp.repeat(Bc.reshape(B, G, N), H // G, axis=1)
+    Cc = jnp.repeat(Cc.reshape(B, G, N), H // G, axis=1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dtv * A[None, :])  # (B,H)
+    h = state.ssm * dec[:, :, None, None] + (dtv[:, :, None] * xs.astype(jnp.float32))[
+        ..., None
+    ] * Bc.astype(jnp.float32)[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h, Cc.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_gamma"])
+    out = (y @ p["out_proj"])[:, None, :]
+    new_conv = window[:, 1:, :]
+    return out, Mamba2State(conv=new_conv, ssm=h)

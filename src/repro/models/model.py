@@ -1,0 +1,41 @@
+"""Family dispatch facade: one object per architecture with a uniform API."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, lm
+
+__all__ = ["Model", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    param_plan: Callable[[], Any]
+    init_params: Callable[[Any], Any]
+    param_specs: Callable[[], Any]
+    loss_fn: Callable[..., Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
+    prefill: Callable[..., Tuple[jnp.ndarray, Any]]
+    decode_step: Callable[..., Tuple[jnp.ndarray, Any]]
+
+
+def build(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        mod = encdec
+    else:
+        mod = lm
+    return Model(
+        cfg=cfg,
+        param_plan=lambda: mod.param_plan(cfg),
+        init_params=lambda key: mod.init_params(cfg, key),
+        param_specs=lambda: mod.param_specs(cfg),
+        loss_fn=lambda params, batch: mod.loss_fn(cfg, params, batch),
+        prefill=lambda params, batch, **kw: mod.prefill(cfg, params, batch, **kw),
+        decode_step=lambda params, tokens, caches: mod.decode_step(
+            cfg, params, tokens, caches
+        ),
+    )

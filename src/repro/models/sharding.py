@@ -1,0 +1,140 @@
+"""Logical-axis sharding: one place that maps model axes onto mesh axes.
+
+Model code names axes logically (``"batch"``, ``"heads"``, ``"mlp"`` ...);
+the launcher installs a rule set for the current mesh via
+:func:`use_rules`.  Outside any rule context every constraint is a no-op, so
+single-device tests run the same code path.
+
+Rule sets are plain dicts and are the main lever of the §Perf hillclimb —
+changing a rule re-lowers the whole model under a different distribution
+without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "use_rules",
+    "constrain",
+    "logical_to_spec",
+    "named_sharding",
+    "current_mesh",
+]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Production rules for the (pod, data, model) / (data, model) meshes.
+# Parameter axes ("embed", "heads", "mlp", ...) and activation axes
+# ("act_*") are distinct so FSDP-style weight sharding over the data axis
+# never leaks onto activations.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv": None,
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "expert_cap": ("pod", "data"),  # MoE dispatch buffer token-capacity dim
+    # caches
+    "kv_seq": None,  # prefill cache seq axis
+    "kv_seq_decode": "model",  # decode cache sharded along sequence (SP)
+    "kv_heads": None,
+    "head_dim": None,
+    "state": None,
+    # parameters
+    "embed": "data",  # FSDP: weights gathered per layer
+    "heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": None,  # expert counts (40/60) don't divide 16; TP via "mlp"
+    "layers": None,
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "conv": None,
+    "frontend": None,
+}
+
+_STATE: dict = {"mesh": None, "rules": None}
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None):
+    """Install (mesh, rules) for model tracing; restores previous on exit."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    # Drop references to mesh axes the mesh doesn't have (e.g. "pod" on the
+    # single-pod mesh).
+    have = set(mesh.axis_names)
+
+    def _filt(v: MeshAxes) -> MeshAxes:
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in have else None
+        kept = tuple(a for a in v if a in have)
+        return kept if kept else None
+
+    rules = {k: _filt(v) for k, v in rules.items()}
+    prev = dict(_STATE)
+    _STATE.update(mesh=mesh, rules=rules)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE["mesh"]
+
+
+def logical_to_spec(logical: Sequence[Optional[str]]) -> P:
+    rules = _STATE["rules"] or {}
+    parts = []
+    for name in logical:
+        if name is None:
+            parts.append(None)
+        else:
+            parts.append(rules.get(name))
+    return P(*parts)
+
+
+def named_sharding(logical: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(logical))
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without rules.
+
+    Axes whose mesh-shard product does not divide the dimension are dropped
+    (replicated) — e.g. 15 attention heads on a 16-way model axis.  The
+    sharding fallbacks taken this way are a §Perf hillclimb topic, not an
+    error.
+    """
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(
+            f"constrain got {len(logical)} axes for rank-{x.ndim} array"
+        )
+    spec = list(logical_to_spec(logical))
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for i, part in enumerate(spec):
+        if part is None:
+            continue
+        names = (part,) if isinstance(part, str) else tuple(part)
+        total = 1
+        for n in names:
+            total *= axis_size[n]
+        if x.shape[i] % total:
+            spec[i] = None
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

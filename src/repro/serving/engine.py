@@ -1,0 +1,119 @@
+"""Serving engine: the paper's two LLM interfaces plus chunked prefill.
+
+Implements (paper §6):
+  * ``calculate_kv(context) -> KVCache``  — prefill without generation;
+  * ``generate_with_kv(KVCache) -> text`` — generation that skips context
+    prefill entirely;
+plus ``prefill_extend`` — compute a text chunk's KV on top of already-loaded
+chunk KV (the streamer's recompute fallback, paper §5.3 fn. 6) — and a
+greedy generation loop used by the examples and quality benchmarks.
+
+All steps are jit-compiled once per (batch, capacity) signature and cached.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.models.lm import Caches
+from repro.serving import kv_layout
+
+__all__ = ["Engine"]
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, cache_capacity: int = 4096):
+        self.cfg = cfg
+        self.params = params
+        self.capacity = cache_capacity
+        self._prefill = jax.jit(
+            functools.partial(lm.prefill, cfg), static_argnames=("pad_to",)
+        )
+        self._decode = jax.jit(functools.partial(lm.decode_step, cfg))
+        if cfg.family in ("dense", "moe", "vlm"):
+            self._extend = jax.jit(functools.partial(lm.prefill_extend, cfg))
+        else:
+            self._extend = None
+
+    # ------------------------------------------------------------------
+    # Paper interfaces
+    # ------------------------------------------------------------------
+
+    def calculate_kv(self, batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Caches]:
+        """Prefill the context; returns (last logits, caches)."""
+        return self._prefill(self.params, batch, pad_to=self.capacity)
+
+    def generate_with_kv(
+        self, caches: Caches, first_token: jnp.ndarray, n_tokens: int
+    ) -> np.ndarray:
+        """Greedy generation from a (possibly codec-decoded) KV cache.
+
+        first_token: (B,) int32.  Returns (B, n_tokens) generated ids.
+        """
+        tok = first_token[:, None].astype(jnp.int32)
+        out = []
+        for _ in range(n_tokens):
+            logits, caches = self._decode(self.params, tok, caches)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            out.append(np.asarray(tok[:, 0]))
+        return np.stack(out, axis=1)
+
+    def logits_with_kv(
+        self, caches: Caches, tokens: np.ndarray
+    ) -> Tuple[np.ndarray, Caches]:
+        """Teacher-forced stepping: returns per-step logits (B, T, V).
+
+        Used by the quality benchmarks (perplexity / argmax-agreement of
+        compressed vs. uncompressed caches).
+        """
+        outs = []
+        for t in range(tokens.shape[1]):
+            logits, caches = self._decode(
+                self.params, jnp.asarray(tokens[:, t : t + 1], jnp.int32), caches
+            )
+            outs.append(np.asarray(logits[:, 0], dtype=np.float32))
+        return np.stack(outs, axis=1), caches
+
+    # ------------------------------------------------------------------
+    # Streamer support
+    # ------------------------------------------------------------------
+
+    def prefill_extend(
+        self, tokens: jnp.ndarray, caches: Caches
+    ) -> Tuple[jnp.ndarray, Caches]:
+        """Text-chunk recompute on top of loaded KV (fallback config)."""
+        if self._extend is None:
+            raise ValueError(f"no chunked prefill for family {self.cfg.family}")
+        return self._extend(self.params, tokens, caches)
+
+    def empty_caches(self, batch: int) -> Caches:
+        return kv_layout.alloc_caches(self.cfg, batch, self.capacity)
+
+    # ------------------------------------------------------------------
+    # Cost model hooks (used by the streaming simulator)
+    # ------------------------------------------------------------------
+
+    def prefill_flops(self, n_tokens: int, kv_prefix: int = 0) -> float:
+        """Approximate forward FLOPs to prefill ``n_tokens`` given a prefix."""
+        cfg = self.cfg
+        L = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+        d, ff = cfg.d_model, cfg.d_ff
+        if cfg.family == "moe":
+            ff_eff = ff * (cfg.moe_topk + cfg.n_shared_experts)
+        else:
+            ff_eff = ff
+        per_tok = 2 * (
+            d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head  # qkv
+            + cfg.n_heads * cfg.d_head * d  # out proj
+            + 3 * d * ff_eff  # gated mlp
+        )
+        attn = 2 * 2 * cfg.n_heads * cfg.d_head * (
+            n_tokens * kv_prefix + n_tokens * (n_tokens + 1) // 2
+        )
+        return float(L) * (per_tok * n_tokens + attn) + 2.0 * n_tokens * d * cfg.vocab_size

@@ -1,0 +1,84 @@
+"""Bridges between the serving engine's KV cache pytrees and the codec's
+(L, 2, T, C) tensor layout, plus cache allocation helpers."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import Caches
+
+__all__ = [
+    "caches_to_codec_kv",
+    "codec_kv_to_caches",
+    "alloc_caches",
+    "kv_cache_bytes",
+]
+
+
+def caches_to_codec_kv(caches: Caches, batch_index: int, n_tokens: int) -> np.ndarray:
+    """Extract one request's KV as (L, 2, T, C) float32 for encoding."""
+    k = np.asarray(caches.kv_k[:, batch_index, :n_tokens], dtype=np.float32)
+    v = np.asarray(caches.kv_v[:, batch_index, :n_tokens], dtype=np.float32)
+    L, T, Hkv, Dh = k.shape
+    k = k.reshape(L, T, Hkv * Dh)
+    v = v.reshape(L, T, Hkv * Dh)
+    return np.stack([k, v], axis=1)  # (L, 2, T, C)
+
+
+def codec_kv_to_caches(
+    kv: np.ndarray,  # (L, 2, T, C)
+    cfg: ArchConfig,
+    *,
+    batch: int = 1,
+    capacity: Optional[int] = None,
+    dtype=jnp.bfloat16,
+) -> Caches:
+    """Materialize decoded KV into a serving cache (single request, replicated
+    across ``batch`` rows for batched generation experiments)."""
+    L, two, T, C = kv.shape
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    assert C == Hkv * Dh, f"C={C} != {Hkv}x{Dh}"
+    cap = capacity or T
+    k = jnp.zeros((L, batch, cap, Hkv, Dh), dtype)
+    v = jnp.zeros((L, batch, cap, Hkv, Dh), dtype)
+    kt = jnp.asarray(kv[:, 0].reshape(L, T, Hkv, Dh), dtype)
+    vt = jnp.asarray(kv[:, 1].reshape(L, T, Hkv, Dh), dtype)
+    k = k.at[:, :, :T].set(kt[:, None])
+    v = v.at[:, :, :T].set(vt[:, None])
+    return Caches(
+        kv_k=k,
+        kv_v=v,
+        length=jnp.full((batch,), T, jnp.int32),
+        mamba_conv=None,
+        mamba_ssm=None,
+        shared_k=None,
+        shared_v=None,
+    )
+
+
+def alloc_caches(cfg: ArchConfig, batch: int, capacity: int, dtype=jnp.bfloat16) -> Caches:
+    """Empty caches for attention families."""
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    return Caches(
+        kv_k=jnp.zeros((L, batch, capacity, Hkv, Dh), dtype),
+        kv_v=jnp.zeros((L, batch, capacity, Hkv, Dh), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+        mamba_conv=None,
+        mamba_ssm=None,
+        shared_k=None,
+        shared_v=None,
+    )
+
+
+def kv_cache_bytes(cfg: ArchConfig, n_tokens: int, dtype_bytes: int = 2) -> int:
+    """Raw KV cache size for one request (the paper's '25 GB for 16K' figure)."""
+    if cfg.family == "hybrid":
+        n_apps = cfg.n_layers // max(cfg.shared_block_every, 1)
+        return n_apps * 2 * n_tokens * cfg.kv_channels * dtype_bytes
+    if not cfg.has_kv_cache:
+        return 0
+    L = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+    return L * 2 * n_tokens * cfg.kv_channels * dtype_bytes

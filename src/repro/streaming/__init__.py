@@ -1,0 +1,5 @@
+from repro.streaming.adaptation import TEXT, AdaptationPolicy  # noqa: F401
+from repro.streaming.network import BandwidthTrace, NetworkModel  # noqa: F401
+from repro.streaming.pipeline import StreamResult, simulate_stream  # noqa: F401
+from repro.streaming.storage import KVStore  # noqa: F401
+from repro.streaming.streamer import CacheGenStreamer  # noqa: F401

@@ -1,0 +1,103 @@
+"""CacheGen streaming adaptation (paper §5.3 + Algorithm 1, §C.1).
+
+Per chunk, choose the *streaming configuration* — text-recompute or one of
+the encoding levels — that has the least compression loss among those whose
+projected completion time (assuming the throughput measured on the previous
+chunk persists and the same configuration is applied to all remaining
+chunks) still meets the TTFT SLO.
+
+Quality ordering (least loss first): TEXT (no loss, but costs GPU prefill
+compute) > level 0 (lossless-after-8bit) > level 1 > ... > level n (coarsest).
+If nothing fits the SLO, the smallest representation is chosen (best effort).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+__all__ = ["StreamConfig", "TEXT", "choose_config", "AdaptationPolicy"]
+
+TEXT = -1  # sentinel streaming configuration: send text + recompute
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Resolved choice for one chunk."""
+
+    config: int  # TEXT or encoding level
+    projected_s: float  # projected completion for all remaining chunks
+
+
+def _projected_delay(
+    remaining_bytes: float,
+    throughput_gbps: float,
+    recompute_s: float = 0.0,
+) -> float:
+    return recompute_s + remaining_bytes * 8.0 / (throughput_gbps * 1e9)
+
+
+def choose_config(
+    *,
+    remaining_sizes: Dict[int, float],  # level -> total bytes of remaining chunks
+    remaining_text_bytes: float,
+    remaining_recompute_s: float,  # GPU time to recompute all remaining chunks
+    throughput_gbps: float,
+    time_left_s: float,
+    levels_quality_order: Sequence[int],
+    allow_text: bool = True,
+) -> StreamConfig:
+    """Algorithm 1 step: pick the best-quality feasible configuration."""
+    candidates: List[StreamConfig] = []
+    if allow_text:
+        proj = _projected_delay(
+            remaining_text_bytes, throughput_gbps, remaining_recompute_s
+        )
+        candidates.append(StreamConfig(TEXT, proj))
+    for lvl in levels_quality_order:
+        proj = _projected_delay(remaining_sizes[lvl], throughput_gbps)
+        candidates.append(StreamConfig(lvl, proj))
+    for c in candidates:  # quality order: first feasible wins
+        if c.projected_s <= time_left_s:
+            return c
+    return min(candidates, key=lambda c: c.projected_s)  # best effort
+
+
+@dataclasses.dataclass
+class AdaptationPolicy:
+    """Stateful per-stream adaptation: carries the throughput estimate.
+
+    ``default_level`` is used for the first chunk when no prior bandwidth
+    knowledge exists (paper: "starts with a default medium encoding level").
+    """
+
+    levels_quality_order: Sequence[int]
+    slo_s: float
+    default_level: int
+    prior_throughput_gbps: Optional[float] = None
+    allow_text: bool = True
+
+    def __post_init__(self):
+        self._throughput = self.prior_throughput_gbps
+
+    def next_config(
+        self,
+        *,
+        elapsed_s: float,
+        remaining_sizes: Dict[int, float],
+        remaining_text_bytes: float,
+        remaining_recompute_s: float,
+    ) -> StreamConfig:
+        if self._throughput is None:
+            return StreamConfig(self.default_level, float("nan"))
+        return choose_config(
+            remaining_sizes=remaining_sizes,
+            remaining_text_bytes=remaining_text_bytes,
+            remaining_recompute_s=remaining_recompute_s,
+            throughput_gbps=self._throughput,
+            time_left_s=self.slo_s - elapsed_s,
+            levels_quality_order=self.levels_quality_order,
+            allow_text=self.allow_text,
+        )
+
+    def observe_throughput(self, gbps: float) -> None:
+        self._throughput = gbps

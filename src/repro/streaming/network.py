@@ -1,0 +1,123 @@
+"""Trace-driven network simulator for KV bitstream streaming.
+
+The paper evaluates under piecewise-constant bandwidth traces (Fig. 7, Fig.
+14: per-chunk bandwidth sampled from 0.1–10 Gbps).  ``BandwidthTrace``
+integrates transfer time for a byte count starting at any instant and
+supports per-fetch latency plus a heavy-tailed straggler model (used by the
+hedged-fetch straggler mitigation tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = ["BandwidthTrace", "NetworkModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthTrace:
+    """Piecewise-constant bandwidth.  times[i] is the start of segment i."""
+
+    times: np.ndarray  # (N,) seconds, increasing, times[0] == 0
+    gbps: np.ndarray  # (N,) bandwidth in Gbit/s for [times[i], times[i+1])
+
+    def __post_init__(self):
+        t = np.asarray(self.times, dtype=np.float64)
+        g = np.asarray(self.gbps, dtype=np.float64)
+        if t.ndim != 1 or t.shape != g.shape or t[0] != 0.0:
+            raise ValueError("bad trace")
+        if (np.diff(t) <= 0).any() or (g <= 0).any():
+            raise ValueError("times must increase; bandwidth must be positive")
+        object.__setattr__(self, "times", t)
+        object.__setattr__(self, "gbps", g)
+
+    @staticmethod
+    def constant(gbps: float) -> "BandwidthTrace":
+        return BandwidthTrace(np.array([0.0]), np.array([float(gbps)]))
+
+    @staticmethod
+    def steps(segment_s: float, gbps: Sequence[float]) -> "BandwidthTrace":
+        g = np.asarray(list(gbps), dtype=np.float64)
+        t = np.arange(len(g)) * float(segment_s)
+        return BandwidthTrace(t, g)
+
+    @staticmethod
+    def sampled(
+        rng: np.random.Generator,
+        n_segments: int,
+        segment_s: float,
+        lo_gbps: float,
+        hi_gbps: float,
+        log_uniform: bool = True,
+    ) -> "BandwidthTrace":
+        """Paper Fig. 14 style: per-segment bandwidth ~ U[lo, hi]."""
+        if log_uniform:
+            g = np.exp(rng.uniform(np.log(lo_gbps), np.log(hi_gbps), n_segments))
+        else:
+            g = rng.uniform(lo_gbps, hi_gbps, n_segments)
+        return BandwidthTrace.steps(segment_s, g)
+
+    def bandwidth_at(self, t: float) -> float:
+        i = int(np.searchsorted(self.times, t, side="right") - 1)
+        return float(self.gbps[max(i, 0)])
+
+    def transmit_time(self, nbytes: float, start_t: float) -> float:
+        """Seconds to push ``nbytes`` starting at ``start_t``."""
+        remaining_bits = float(nbytes) * 8.0
+        t = float(start_t)
+        i = int(np.searchsorted(self.times, t, side="right") - 1)
+        i = max(i, 0)
+        while remaining_bits > 0:
+            rate = self.gbps[i] * 1e9  # bits/s
+            seg_end = self.times[i + 1] if i + 1 < len(self.times) else np.inf
+            dt_seg = seg_end - t
+            bits_seg = rate * dt_seg
+            if bits_seg >= remaining_bits:
+                t += remaining_bits / rate
+                remaining_bits = 0.0
+            else:
+                remaining_bits -= bits_seg
+                t = seg_end
+                i += 1
+        return t - float(start_t)
+
+    def measured_throughput_gbps(self, nbytes: float, start_t: float) -> float:
+        """What a sender would measure for this transfer (paper's estimator)."""
+        dur = self.transmit_time(nbytes, start_t)
+        if dur <= 0:
+            return float(self.gbps[-1])
+        return float(nbytes) * 8.0 / dur / 1e9
+
+
+@dataclasses.dataclass
+class NetworkModel:
+    """Trace + fixed per-fetch latency + optional straggler tail.
+
+    Straggler model: with prob ``straggler_p`` a fetch stalls for an extra
+    Pareto-tailed delay — the mitigation (hedged second fetch after
+    ``hedge_after_s``) lives in streaming/pipeline.py.
+    """
+
+    trace: BandwidthTrace
+    rtt_s: float = 0.0
+    straggler_p: float = 0.0
+    straggler_scale_s: float = 1.0
+    straggler_alpha: float = 1.5
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def straggler_delay(self) -> float:
+        if self.straggler_p <= 0:
+            return 0.0
+        if self._rng.uniform() >= self.straggler_p:
+            return 0.0
+        return float(self.straggler_scale_s * (self._rng.pareto(self.straggler_alpha) + 1.0))
+
+    def fetch_time(self, nbytes: float, start_t: float, straggle: bool = True) -> float:
+        base = self.rtt_s + self.trace.transmit_time(nbytes, start_t + self.rtt_s)
+        extra = self.straggler_delay() if straggle else 0.0
+        return base + extra

@@ -1,0 +1,121 @@
+"""KV bitstream store: chunk_id -> {level -> encoded bytes} (paper §6).
+
+``store_kv`` splits a context's KV along the token axis into chunks
+(default 1.5K tokens, paper §5.3), pre-encodes every chunk at every level
+via the codec, and records per-(chunk, level) sizes; ``get_kv`` returns the
+bitstream for a (chunk, level).  Backends: in-memory dict or a directory of
+files (one per chunk-level, msgpack-framed), both with identical interfaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import codec as kvcodec
+
+__all__ = ["ChunkMeta", "KVStore", "split_chunks", "DEFAULT_CHUNK_TOKENS"]
+
+DEFAULT_CHUNK_TOKENS = 1536  # paper: ~1.5K tokens
+
+
+def split_chunks(n_tokens: int, chunk_tokens: int) -> List[Tuple[int, int]]:
+    """[(start, end)) chunk boundaries."""
+    out = []
+    s = 0
+    while s < n_tokens:
+        out.append((s, min(s + chunk_tokens, n_tokens)))
+        s += chunk_tokens
+    return out
+
+
+@dataclasses.dataclass
+class ChunkMeta:
+    context_id: str
+    chunk_idx: int
+    start: int
+    end: int
+    sizes: Dict[int, int]  # level -> encoded bytes
+    text_bytes: int  # raw text fallback size (~4 B/token)
+
+    @property
+    def n_tokens(self) -> int:
+        return self.end - self.start
+
+
+class KVStore:
+    """Storage server for encoded KV bitstreams."""
+
+    def __init__(self, tables: kvcodec.CodecTables, directory: Optional[str] = None):
+        self.tables = tables
+        self.dir = directory
+        self._mem: Dict[Tuple[str, int, int], bytes] = {}
+        self._meta: Dict[str, List[ChunkMeta]] = {}
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+
+    # -- write path (offline) ------------------------------------------------
+
+    def store_kv(
+        self,
+        context_id: str,
+        kv: np.ndarray,  # (L, 2, T, C)
+        *,
+        chunk_tokens: int = DEFAULT_CHUNK_TOKENS,
+        levels: Optional[List[int]] = None,
+        bytes_per_token_text: int = 4,
+    ) -> List[ChunkMeta]:
+        levels = list(range(self.tables.config.n_levels)) if levels is None else levels
+        T = kv.shape[2]
+        metas = []
+        for ci, (s, e) in enumerate(split_chunks(T, chunk_tokens)):
+            sizes = {}
+            for lvl in levels:
+                blob = kvcodec.encode_chunk(kv[:, :, s:e], self.tables, lvl)
+                self._put(context_id, ci, lvl, blob)
+                sizes[lvl] = len(blob)
+            metas.append(
+                ChunkMeta(
+                    context_id=context_id,
+                    chunk_idx=ci,
+                    start=s,
+                    end=e,
+                    sizes=sizes,
+                    text_bytes=(e - s) * bytes_per_token_text,
+                )
+            )
+        self._meta[context_id] = metas
+        return metas
+
+    def _put(self, cid: str, ci: int, lvl: int, blob: bytes) -> None:
+        if self.dir:
+            with open(self._path(cid, ci, lvl), "wb") as f:
+                f.write(blob)
+        else:
+            self._mem[(cid, ci, lvl)] = blob
+
+    def _path(self, cid: str, ci: int, lvl: int) -> str:
+        return os.path.join(self.dir, f"{cid}.c{ci:04d}.l{lvl}.kvbs")
+
+    # -- read path (online) --------------------------------------------------
+
+    def get_kv(self, context_id: str, chunk_idx: int, level: int) -> bytes:
+        if self.dir:
+            with open(self._path(context_id, chunk_idx, level), "rb") as f:
+                return f.read()
+        return self._mem[(context_id, chunk_idx, level)]
+
+    def meta(self, context_id: str) -> List[ChunkMeta]:
+        return self._meta[context_id]
+
+    def decode(self, blob: bytes) -> np.ndarray:
+        return np.asarray(kvcodec.decode_chunk(blob, self.tables))
+
+    def total_bytes(self, context_id: str, level: int) -> int:
+        return sum(m.sizes[level] for m in self.meta(context_id))
+
+    def storage_bytes(self, context_id: str) -> int:
+        """Total storage across all pre-encoded levels (paper Fig. 15d)."""
+        return sum(sum(m.sizes.values()) for m in self.meta(context_id))

@@ -1,0 +1,151 @@
+"""CacheGen streamer facade: store_kv / stream / materialize.
+
+Ties together the codec (core/), the bitstream store, the bandwidth-adaptive
+scheduler (Algorithm 1) and the serving engine:
+
+  offline:  caches --store_kv--> per-chunk multi-level bitstreams
+  online:   stream()      — simulate fetch under a bandwidth trace, choosing
+                            per-chunk configs against the TTFT SLO;
+            materialize() — actually decode the chosen bitstreams (and
+                            recompute TEXT chunks via the engine) into a
+                            serving KV cache, ready for generate_with_kv.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import Caches
+from repro.serving.engine import Engine
+from repro.serving.kv_layout import caches_to_codec_kv
+from repro.streaming.adaptation import TEXT, AdaptationPolicy
+from repro.streaming.network import NetworkModel
+from repro.streaming.pipeline import StreamResult, simulate_stream
+from repro.streaming.storage import DEFAULT_CHUNK_TOKENS, ChunkMeta, KVStore
+
+__all__ = ["CacheGenStreamer"]
+
+
+@dataclasses.dataclass
+class FetchPlan:
+    context_id: str
+    result: StreamResult
+    metas: List[ChunkMeta]
+
+
+class CacheGenStreamer:
+    def __init__(self, store: KVStore, cfg: ArchConfig):
+        self.store = store
+        self.cfg = cfg
+
+    # -- offline -------------------------------------------------------------
+
+    def store_from_caches(
+        self,
+        context_id: str,
+        caches: Caches,
+        n_tokens: int,
+        *,
+        batch_index: int = 0,
+        chunk_tokens: int = DEFAULT_CHUNK_TOKENS,
+    ) -> List[ChunkMeta]:
+        kv = caches_to_codec_kv(caches, batch_index, n_tokens)
+        return self.store.store_kv(context_id, kv, chunk_tokens=chunk_tokens)
+
+    # -- online --------------------------------------------------------------
+
+    def stream(
+        self,
+        context_id: str,
+        network: NetworkModel,
+        *,
+        slo_s: float,
+        decode_bytes_per_s: float,
+        recompute_s,
+        default_level: Optional[int] = None,
+        prior_throughput_gbps: Optional[float] = None,
+        allow_text: bool = True,
+        adapt: bool = True,
+        fixed_level: Optional[int] = None,
+        hedge_after_s: Optional[float] = None,
+        final_step_s: float = 0.0,
+    ) -> FetchPlan:
+        metas = self.store.meta(context_id)
+        n_levels = self.store.tables.config.n_levels
+        quality_order = list(range(n_levels))  # 0 = least loss
+        if fixed_level is not None or not adapt:
+            lvl = fixed_level if fixed_level is not None else (
+                default_level if default_level is not None else 1
+            )
+            policy = AdaptationPolicy(
+                levels_quality_order=[lvl],
+                slo_s=slo_s,
+                default_level=lvl,
+                prior_throughput_gbps=prior_throughput_gbps,
+                allow_text=False,
+            )
+        else:
+            policy = AdaptationPolicy(
+                levels_quality_order=quality_order,
+                slo_s=slo_s,
+                default_level=default_level
+                if default_level is not None
+                else min(1, n_levels - 1),
+                prior_throughput_gbps=prior_throughput_gbps,
+                allow_text=allow_text,
+            )
+        result = simulate_stream(
+            metas,
+            policy,
+            network,
+            decode_bytes_per_s=decode_bytes_per_s,
+            recompute_s=recompute_s,
+            final_step_s=final_step_s,
+            hedge_after_s=hedge_after_s,
+        )
+        return FetchPlan(context_id=context_id, result=result, metas=metas)
+
+    # -- materialization (real decode) ----------------------------------------
+
+    def materialize(
+        self,
+        plan: FetchPlan,
+        engine: Engine,
+        tokens: np.ndarray,  # (B, T) full context tokens (for TEXT chunks)
+        *,
+        batch: int = 1,
+    ) -> Caches:
+        """Build the serving cache by decoding each chunk at its chosen config."""
+        cfg = self.cfg
+        caches = engine.empty_caches(batch)
+        for meta, config in zip(plan.metas, plan.result.configs):
+            s, e = meta.start, meta.end
+            if config == TEXT:
+                _, caches = engine.prefill_extend(
+                    jnp.asarray(tokens[:, s:e], jnp.int32), caches
+                )
+            else:
+                blob = self.store.get_kv(plan.context_id, meta.chunk_idx, config)
+                kv = self.store.decode(blob)  # (L, 2, Tc, C)
+                caches = _insert_codec_kv(cfg, caches, kv, s, batch)
+        return caches
+
+
+def _insert_codec_kv(
+    cfg: ArchConfig, caches: Caches, kv: np.ndarray, start: int, batch: int
+) -> Caches:
+    L, two, Tc, C = kv.shape
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    kt = jnp.asarray(kv[:, 0].reshape(L, Tc, Hkv, Dh), caches.kv_k.dtype)
+    vt = jnp.asarray(kv[:, 1].reshape(L, Tc, Hkv, Dh), caches.kv_v.dtype)
+    kt = jnp.broadcast_to(kt[:, None], (L, batch, Tc, Hkv, Dh))
+    vt = jnp.broadcast_to(vt[:, None], (L, batch, Tc, Hkv, Dh))
+    return caches._replace(
+        kv_k=caches.kv_k.at[:, :, start : start + Tc].set(kt),
+        kv_v=caches.kv_v.at[:, :, start : start + Tc].set(vt),
+        length=jnp.full((batch,), start + Tc, jnp.int32),
+    )

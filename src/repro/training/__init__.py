@@ -1,0 +1,2 @@
+from repro.training.optimizer import AdamWConfig, apply_updates, init_opt_state  # noqa: F401
+from repro.training.trainer import Trainer, TrainState, make_train_step  # noqa: F401

@@ -1,0 +1,86 @@
+"""AdamW (+ global-norm clipping) on raw pytrees — no optax dependency.
+
+Moments are kept in float32 regardless of param dtype; the update math runs
+in f32 and casts back.  The optimizer state is a plain pytree so the
+launcher can shard it over the data axis (ZeRO-1) with out_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "apply_updates", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+
+def init_opt_state(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def _schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def apply_updates(
+    params, grads, state: OptState, cfg: AdamWConfig
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = _schedule(cfg, state.step)
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / c1
+        nhat = nu / c2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(state.mu)
+    flat_nu = jax.tree_util.tree_leaves(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(mu=new_mu, nu=new_nu, step=step), metrics

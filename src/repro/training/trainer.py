@@ -1,0 +1,111 @@
+"""Training loop: jit'd train step + fault-tolerant outer loop.
+
+The outer loop is preemption-safe: state is checkpointed every
+``ckpt_every`` steps through the atomic CheckpointManager and the loop
+resumes bitwise-identically from LATEST (tests kill and restart it).
+The data iterator is seeded per-step from the global step, so resumption
+regenerates the identical batch sequence without persisting iterator state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.models.model import Model
+from repro.training import optimizer as opt_lib
+from repro.training.grad_compress import ef_compress, ef_init
+
+__all__ = ["TrainState", "make_train_step", "Trainer"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_lib.OptState
+    ef_error: Optional[Any]  # error-feedback residuals (None if disabled)
+    step: jnp.ndarray
+
+
+def init_train_state(model: Model, key, *, grad_compression: bool = False) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(
+        params=params,
+        opt=opt_lib.init_opt_state(params),
+        ef_error=ef_init(params) if grad_compression else None,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    model: Model, opt_cfg: opt_lib.AdamWConfig, *, grad_compression: bool = False
+) -> Callable[[TrainState, Dict[str, jnp.ndarray]], Tuple[TrainState, Dict]]:
+    def train_step(state: TrainState, batch):
+        def lossf(params):
+            loss, metrics = model.loss_fn(params, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(lossf, has_aux=True)(state.params)
+        ef_error = state.ef_error
+        if grad_compression:
+            grads, ef_error = ef_compress(grads, ef_error)
+        params, opt, om = opt_lib.apply_updates(state.params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics, loss=loss, **om)
+        return (
+            TrainState(params=params, opt=opt, ef_error=ef_error, step=state.step + 1),
+            metrics,
+        )
+
+    return train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    model: Model
+    opt_cfg: opt_lib.AdamWConfig
+    batch_fn: Callable[[int], Dict[str, np.ndarray]]  # step -> batch (restart-safe)
+    ckpt: Optional[CheckpointManager] = None
+    ckpt_every: int = 50
+    grad_compression: bool = False
+    log_every: int = 10
+    log_fn: Callable[[str], None] = print
+
+    def init_or_restore(self, seed: int = 0) -> TrainState:
+        state = init_train_state(
+            self.model, jax.random.PRNGKey(seed), grad_compression=self.grad_compression
+        )
+        if self.ckpt is not None:
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                state = self.ckpt.restore(latest, state)
+                self.log_fn(f"[trainer] resumed from step {latest}")
+        return state
+
+    def run(self, state: TrainState, n_steps: int) -> Tuple[TrainState, Dict[str, list]]:
+        step_fn = jax.jit(
+            make_train_step(self.model, self.opt_cfg, grad_compression=self.grad_compression)
+        )
+        history: Dict[str, list] = {"loss": [], "step": []}
+        start = int(state.step)
+        t0 = time.time()
+        for s in range(start, n_steps):
+            batch = {k: jnp.asarray(v) for k, v in self.batch_fn(s).items()}
+            state, metrics = step_fn(state, batch)
+            if (s + 1) % self.log_every == 0 or s == start:
+                loss = float(metrics["loss"])
+                history["loss"].append(loss)
+                history["step"].append(s + 1)
+                rate = (s + 1 - start) / max(time.time() - t0, 1e-9)
+                self.log_fn(
+                    f"[trainer] step {s+1}/{n_steps} loss={loss:.4f} "
+                    f"gnorm={float(metrics['grad_norm']):.2f} ({rate:.1f} it/s)"
+                )
+            if self.ckpt is not None and (s + 1) % self.ckpt_every == 0:
+                self.ckpt.save(s + 1, state)
+        if self.ckpt is not None and int(state.step) > (self.ckpt.latest_step() or -1):
+            self.ckpt.save(int(state.step), state)
+        return state, history

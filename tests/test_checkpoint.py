@@ -1,0 +1,78 @@
+"""Checkpoint manager: atomicity, identity restore, bf16, retention,
+cross-topology (resharded) restore."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(rng):
+    return {
+        "a": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+        "nested": {
+            "b": jnp.asarray(rng.normal(size=(3,)), jnp.bfloat16),
+            "c": jnp.asarray(rng.integers(0, 100, size=(5,)), jnp.int32),
+        },
+    }
+
+
+def test_save_restore_identity(tmp_path):
+    rng = np.random.default_rng(0)
+    ck = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree(rng)
+    ck.save(7, t)
+    assert ck.latest_step() == 7
+    r = ck.restore(7, t)
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(r)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention_keeps_newest(tmp_path):
+    rng = np.random.default_rng(0)
+    ck = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree(rng)
+    for s in (1, 2, 3, 4):
+        ck.save(s, t)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_partial_write_is_invisible(tmp_path):
+    """A .tmp- directory (simulated crash mid-write) is never restored."""
+    rng = np.random.default_rng(0)
+    ck = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree(rng)
+    ck.save(1, t)
+    os.makedirs(os.path.join(str(tmp_path), "step_0000000002.tmp-dead"), exist_ok=True)
+    assert ck.latest_step() == 1
+    assert ck.all_steps() == [1]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    rng = np.random.default_rng(0)
+    ck = CheckpointManager(str(tmp_path))
+    t = _tree(rng)
+    ck.save(1, t)
+    bad = dict(t, a=jnp.zeros((2, 2)))
+    with pytest.raises(ValueError):
+        ck.restore(1, bad)
+
+
+def test_resharded_restore_changes_sharding_not_values(tmp_path):
+    """Elasticity: restore the same checkpoint under a different device
+    layout (1 device here, but exercised through the shardings path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P, Mesh
+
+    rng = np.random.default_rng(0)
+    ck = CheckpointManager(str(tmp_path))
+    t = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)}
+    ck.save(1, t)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    r = ck.restore(1, t, shardings=sh)
+    assert np.array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
+    assert r["w"].sharding == sh["w"]

@@ -1,0 +1,168 @@
+"""Codec correctness: rANS vs AC oracle, round-trips, error bounds."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec, gop, quant, rans, tables
+from repro.core.ac_ref import ac_decode, ac_encode
+
+
+def _random_tables(rng, n_tables, A, k):
+    counts = rng.integers(0, 1000, size=(n_tables, A))
+    freqs = tables.normalize_freqs(counts, k)
+    return freqs, tables.build_coder_tables(freqs, k)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    A=st.integers(2, 300),
+    k=st.sampled_from([9, 10, 12, 14]),
+    n_lanes=st.integers(1, 32),
+    n_sym=st.integers(1, 128),
+)
+def test_rans_roundtrip_property(seed, A, k, n_lanes, n_sym):
+    if A > (1 << k):
+        A = 1 << k
+    rng = np.random.default_rng(seed)
+    freqs, ct = _random_tables(rng, 3, A, k)
+    t_idx = rng.integers(0, 3, n_lanes).astype(np.int32)
+    syms = rng.integers(0, A, size=(n_lanes, n_sym)).astype(np.uint16)
+    w, nw, s = rans.encode(jnp.asarray(syms), jnp.asarray(t_idx), ct)
+    dec = rans.decode(w, nw, s, jnp.asarray(t_idx), ct, n_sym, check=True)
+    assert (np.asarray(dec) == syms).all()
+
+
+def test_rans_matches_ac_oracle_size():
+    """rANS compressed size within ~3% + constant of the exact AC oracle."""
+    rng = np.random.default_rng(0)
+    A, k = 64, 12
+    freqs, ct = _random_tables(rng, 1, A, k)
+    p = freqs[0] / freqs[0].sum()
+    n_sym = 4000
+    syms = rng.choice(A, size=n_sym, p=p).astype(np.uint16)
+    w, nw, s = rans.encode(jnp.asarray(syms[None]), jnp.zeros(1, jnp.int32), ct)
+    rans_bytes = rans.encoded_bytes(nw)
+    ac_bytes = len(ac_encode(syms, freqs[0]))
+    assert ac_decode(ac_encode(syms, freqs[0]), n_sym, freqs[0]) == list(syms)
+    assert rans_bytes <= ac_bytes * 1.03 + 16, (rans_bytes, ac_bytes)
+
+
+def test_rans_near_entropy_bound():
+    rng = np.random.default_rng(1)
+    A, k = 32, 12
+    freqs, ct = _random_tables(rng, 1, A, k)
+    p = freqs[0] / freqs[0].sum()
+    H = -(p * np.log2(p)).sum()
+    n_sym = 8000
+    syms = rng.choice(A, size=n_sym, p=p).astype(np.uint16)
+    w, nw, s = rans.encode(jnp.asarray(syms[None]), jnp.zeros(1, jnp.int32), ct)
+    bits = rans.encoded_bytes(nw) * 8
+    assert bits <= H * n_sym * 1.05 + 64, (bits, H * n_sym)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    T=st.integers(11, 90),
+    group=st.integers(2, 16),
+)
+def test_gop_split_merge_inverse(seed, T, group):
+    rng = np.random.default_rng(seed)
+    layout = gop.make_layout(T, group)
+    kv = jnp.asarray(rng.normal(size=(2, 2, T, 8)), jnp.float32)
+    a, d = gop.split_anchors_deltas(kv, layout)
+    back = gop.merge_anchors_deltas(a, d, layout)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(kv), rtol=0, atol=1e-6)
+
+
+def _toy_kv(rng, L=3, T=47, C=12):
+    kv = rng.normal(size=(L, 2, T, C)).astype(np.float32) * 0.5
+    kv[:] = np.cumsum(kv * 0.3, axis=2) + rng.normal(size=(L, 2, 1, C)) * 0.5
+    return kv
+
+
+@pytest.fixture(scope="module")
+def toy_codec():
+    rng = np.random.default_rng(3)
+    kvs = [_toy_kv(rng) for _ in range(3)]
+    cfg = codec.CodecConfig(precision=10)
+    return kvs, codec.profile(kvs, cfg), cfg
+
+
+def test_codec_level0_bit_exact(toy_codec):
+    kvs, ct, cfg = toy_codec
+    kv = kvs[0]
+    layout = gop.make_layout(kv.shape[2], cfg.group_size)
+    a, d, s = quant.lossless_quantize(jnp.asarray(kv), layout)
+    ref = np.asarray(quant.lossless_reconstruct(a, d, s, layout))
+    got = np.asarray(codec.decode_chunk(codec.encode_chunk(kv, ct, 0), ct))
+    assert np.array_equal(ref, got)
+
+
+def test_codec_levels_monotone_size_and_bounded_error(toy_codec):
+    kvs, ct, cfg = toy_codec
+    kv = kvs[1]
+    sizes, errs = [], []
+    for lvl in range(cfg.n_levels):
+        blob = codec.encode_chunk(kv, ct, lvl)
+        kv_hat = np.asarray(codec.decode_chunk(blob, ct))
+        sizes.append(len(blob))
+        errs.append(np.abs(kv_hat - kv).max())
+    assert all(sizes[i] >= sizes[i + 1] for i in range(1, len(sizes) - 1)), sizes
+    # per-element error <= bin/2 + anchor error; check a loose bound
+    L = kv.shape[0]
+    for lvl in range(1, cfg.n_levels):
+        bins = codec._bins_for_level(cfg, L, lvl, ct.delta_scale)
+        bound = bins.max() / 2 * 1.5 + 0.05
+        blob = codec.encode_chunk(kv, ct, lvl)
+        kv_hat = np.asarray(codec.decode_chunk(blob, ct))
+        assert np.abs(kv_hat - kv).max() <= bound + 0.2, (lvl, np.abs(kv_hat - kv).max(), bound)
+
+
+def test_codec_chunk_independence(toy_codec):
+    """Chunks encoded separately decode to the same result as jointly."""
+    kvs, ct, cfg = toy_codec
+    kv = kvs[2]
+    T = kv.shape[2]
+    cut = (T // 2 // cfg.group_size) * cfg.group_size  # chunk boundary on group
+    whole = np.asarray(codec.decode_chunk(codec.encode_chunk(kv, ct, 1), ct))
+    left = np.asarray(codec.decode_chunk(codec.encode_chunk(kv[:, :, :cut], ct, 1), ct))
+    right = np.asarray(codec.decode_chunk(codec.encode_chunk(kv[:, :, cut:], ct, 1), ct))
+    np.testing.assert_allclose(np.concatenate([left, right], axis=2), whole, atol=2e-2)
+
+
+def test_codec_rejects_mismatched_shape(toy_codec):
+    kvs, ct, cfg = toy_codec
+    bad = np.zeros((kvs[0].shape[0] + 1, 2, 20, kvs[0].shape[3]), np.float32)
+    with pytest.raises(ValueError):
+        codec.encode_chunk(bad, ct, 1)
+
+
+def test_normalize_freqs_invariants():
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        counts = rng.integers(0, 10000, size=(4, 17))
+        counts[rng.integers(0, 4), rng.integers(0, 17)] = 0
+        f = tables.normalize_freqs(counts, 10)
+        assert (f.sum(axis=1) == 1024).all()
+        assert (f >= 1).all() and (f < 1024).all()
+
+
+def test_bitstream_pack_roundtrip():
+    from repro.core import bitstream
+
+    rng = np.random.default_rng(0)
+    words = rng.integers(0, 2**16, size=(5, 9)).astype(np.uint16)
+    n_words = np.asarray([3, 0, 9, 1, 5], np.int32)
+    state = rng.integers(0, 2**32, size=5, dtype=np.uint32)
+    arrays = bitstream.pack_stream(words, n_words, state, "x")
+    w2, n2, s2 = bitstream.unpack_stream(arrays, "x")
+    assert (n2 == n_words).all() and (s2 == state).all()
+    for i in range(5):
+        assert (w2[i, : n2[i]] == words[i, : n_words[i]]).all()
+    blob = bitstream.pack({"a": 1, "s": "x"}, arrays)
+    hdr, arr2 = bitstream.unpack(blob)
+    assert hdr["a"] == 1 and hdr["s"] == "x"
+    assert (arr2["x.n_words"] == n_words).all()

@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.kvquant import kv_dequant_pallas, kv_quant_pallas
+from repro.models.mamba2 import ssd_chunked
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, Hq, Hkv, Tq, Tk, D, causal, dtype, bq, bk)
+    (1, 2, 2, 64, 64, 64, True, jnp.float32, 32, 32),
+    (2, 4, 2, 128, 128, 64, True, jnp.float32, 64, 64),
+    (1, 8, 1, 64, 64, 128, True, jnp.float32, 64, 64),  # MQA
+    (2, 4, 4, 64, 128, 64, True, jnp.float32, 32, 64),  # Tk > Tq (continued)
+    (1, 2, 2, 64, 64, 64, False, jnp.float32, 32, 32),  # bidirectional
+    (1, 2, 2, 128, 128, 64, True, jnp.bfloat16, 64, 64),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_ref(case):
+    B, Hq, Hkv, Tq, Tk, D, causal, dtype, bq, bk = case
+    q = _rand((B, Hq, Tq, D), dtype)
+    k = _rand((B, Hkv, Tk, D), dtype)
+    v = _rand((B, Hkv, Tk, D), dtype)
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, block_q=bq, block_k=bk, interpret=True
+    )
+    expect = ref.mha_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_prefix_lm():
+    B, Hq, Hkv, T, D = 2, 2, 1, 128, 64
+    q = _rand((B, Hq, T, D))
+    k = _rand((B, Hkv, T, D))
+    v = _rand((B, Hkv, T, D))
+    plen = jnp.asarray([32, 96], jnp.int32)
+    out = flash_attention_pallas(
+        q, k, v, plen, causal=True, block_q=64, block_k=64, interpret=True
+    )
+    expect = ref.mha_ref(q, k, v, causal=True, prefix_len=plen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (1, 2, 2, 256, 64, None, jnp.float32, 128),
+    (2, 4, 2, 512, 64, [300, 512], jnp.float32, 128),
+    (2, 8, 1, 256, 128, [17, 256], jnp.float32, 64),
+    (1, 4, 4, 1024, 64, [1000, ], jnp.bfloat16, 256),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_matches_ref(case):
+    B, Hq, Hkv, S, D, lens, dtype, bs = case
+    q = _rand((B, Hq, D), dtype)
+    k = _rand((B, Hkv, S, D), dtype)
+    v = _rand((B, Hkv, S, D), dtype)
+    kv_len = jnp.asarray(lens, jnp.int32) if lens else None
+    out = decode_attention_pallas(q, k, v, kv_len, block_s=bs, interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, kv_len=kv_len)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# kvquant
+# ---------------------------------------------------------------------------
+
+KVQ_CASES = [
+    (4, 8, 10, 64, 127, 4),
+    (8, 16, 10, 128, 127, 8),
+    (2, 32, 4, 256, 63, 16),
+]
+
+
+@pytest.mark.parametrize("case", KVQ_CASES)
+def test_kvquant_roundtrip_matches_ref(case):
+    L2, G, g, C, qmax, bg = case
+    kvg = _rand((L2, G, g, C))
+    bins = jnp.asarray(RNG.uniform(0.05, 0.5, size=(L2,)), jnp.float32)
+    sym = kv_quant_pallas(kvg, bins, qmax=qmax, block_groups=bg, interpret=True)
+    sym_ref = ref.kv_quant_ref(kvg, bins, qmax=qmax)
+    assert (np.asarray(sym) == np.asarray(sym_ref)).all()
+    anchors = kvg[:, :, 0, :]
+    deq = kv_dequant_pallas(
+        sym, anchors, bins, qmax=qmax, block_groups=bg, interpret=True
+    )
+    deq_ref = ref.kv_dequant_ref(sym_ref, anchors, bins, qmax=qmax)
+    # bf16 output: FMA association in the fused kernel may differ from the
+    # ref by 1 ulp on isolated elements
+    np.testing.assert_allclose(
+        np.asarray(deq, np.float32), np.asarray(deq_ref, np.float32),
+        atol=1e-5, rtol=1e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (oracle = sequential recurrence)
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    (1, 32, 2, 8, 1, 8, 8),
+    (2, 64, 4, 8, 2, 16, 16),
+    (1, 128, 8, 4, 2, 8, 32),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_chunked_matches_sequential(case):
+    B, T, H, P, G, N, chunk = case
+    x = _rand((B, T, H, P))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, size=(B, T, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.3, 2.0, size=(H,)), jnp.float32)
+    Bm = _rand((B, T, G, N))
+    Cm = _rand((B, T, G, N))
+    y, h = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    y_ref, h_ref = ref.ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=2e-4, rtol=2e-4)

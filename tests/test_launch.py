@@ -1,0 +1,123 @@
+"""Launch layer: HLO collective parsing, cell specs, dry-run machinery."""
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.launch import hlo_stats
+from repro.launch.specs import SHAPES, cell_applicable, rules_for
+
+
+def test_collective_stats_parses_shapes_and_groups():
+    hlo = """
+  %ag.1 = bf16[16,1024]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[256]T(1,0), dimensions={0}
+  %ar.2 = f32[8,8]{1,0} all-reduce(%y), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%sum
+  %rs.3 = f32[4]{0} reduce-scatter(%z), channel_id=3, replica_groups=[4,64]<=[256]
+  %cp.4 = u8[100]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %notacoll = f32[2,2]{1,0} add(%a, %b)
+"""
+    st = hlo_stats.collective_stats(hlo, mesh_size=256)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    assert st.counts["collective-permute"] == 1
+    assert st.result_bytes["all-gather"] == 16 * 1024 * 2
+    assert st.result_bytes["all-reduce"] == 8 * 8 * 4
+    # all-gather group size 16 -> wire = bytes * 15/16
+    np.testing.assert_allclose(
+        st.wire_bytes["all-gather"], 16 * 1024 * 2 * 15 / 16
+    )
+    # all-reduce group size 4 -> 2 * b * 3/4
+    np.testing.assert_allclose(st.wire_bytes["all-reduce"], 2 * 256 * 3 / 4)
+    # reduce-scatter group 64: result * (n-1)
+    np.testing.assert_allclose(st.wire_bytes["reduce-scatter"], 16 * 63)
+    assert st.wire_bytes["collective-permute"] == 100
+
+
+def test_collective_stats_skips_async_done():
+    hlo = """
+  %ags = bf16[128]{0} all-gather-start(%x), replica_groups={{0,1}}
+  %agd = bf16[128]{0} all-gather-done(%ags)
+"""
+    st = hlo_stats.collective_stats(hlo, 2)
+    assert st.counts["all-gather"] == 1
+
+
+def test_tuple_shape_bytes():
+    assert hlo_stats._shape_bytes("(f32[2,2]{1,0}, bf16[4]{0})") == 16 + 8
+    assert hlo_stats._shape_bytes("pred[8]{0}") == 8
+
+
+def test_shapes_match_assignment():
+    assert SHAPES["train_4k"] == dict(kind="train", seq=4096, batch=256)
+    assert SHAPES["prefill_32k"] == dict(kind="prefill", seq=32768, batch=32)
+    assert SHAPES["decode_32k"] == dict(kind="decode", seq=32768, batch=128)
+    assert SHAPES["long_500k"] == dict(kind="decode", seq=524288, batch=1)
+
+
+def test_long_context_skip_rule():
+    ok, _ = cell_applicable(registry.get("qwen1.5-110b"), "long_500k")
+    assert not ok
+    ok, _ = cell_applicable(registry.get("mamba2-370m"), "long_500k")
+    assert ok
+    ok, _ = cell_applicable(registry.get("zamba2-2.7b"), "long_500k")
+    assert ok
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        for arch in registry.names():
+            ok, _ = cell_applicable(registry.get(arch), shape)
+            assert ok, (arch, shape)
+
+
+def test_long500k_rules_reshard_sequence():
+    r = rules_for(registry.get("zamba2-2.7b"), "long_500k")
+    assert r["batch"] is None
+    assert r["kv_seq_decode"] == ("data", "model")
+
+
+@pytest.mark.slow
+def test_make_cell_lowers_on_test_mesh():
+    """The dry-run cell machinery lowers a tiny arch on an 8-device mesh
+    (same code path as the 512-device production dry-run)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    body = r"""
+import json
+import jax
+from repro.configs import registry
+from repro.launch.specs import make_cell
+from repro.launch import hlo_stats
+from repro.models import sharding as shlib
+from jax.sharding import Mesh
+import numpy as np
+
+cfg = registry.get("olmo-1b").tiny()
+import dataclasses
+cfg = dataclasses.replace(cfg, vocab_size=512)
+mesh = Mesh(np.asarray(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+
+import repro.launch.specs as specs
+specs.SHAPES = dict(specs.SHAPES, tiny_train=dict(kind="train", seq=32, batch=4),
+                    tiny_decode=dict(kind="decode", seq=64, batch=4))
+out = {}
+for shape in ("tiny_train", "tiny_decode"):
+    cell = make_cell(cfg, shape, mesh, {"embed": None})
+    with mesh, shlib.use_rules(mesh, cell.rules):
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings).lower(*cell.inputs).compile()
+    st = hlo_stats.collective_stats(compiled.as_text(), 4)
+    out[shape] = sum(st.counts.values())
+print(json.dumps(out))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    res = subprocess.run(
+        [sys.executable, "-c", body], env=env, capture_output=True, text=True,
+        timeout=900,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["tiny_train"] > 0  # sharded training must communicate
