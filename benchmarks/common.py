@@ -34,6 +34,7 @@ from repro.data.synthetic import MarkovLM, TopicRetrievalTask
 from repro.models import build
 from repro.serving.engine import Engine
 from repro.serving.kv_layout import caches_to_codec_kv
+from repro.streaming.calibration import measured_decode_bytes_per_s
 from repro.training import AdamWConfig, Trainer
 
 ASSET_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench_assets")
@@ -51,7 +52,11 @@ class CostModel:
 
     n_chips: int = 1
     mfu: float = 0.45  # achieved fraction of peak during prefill
-    decode_bytes_per_s: float = 4e9  # codec decode throughput (GB/s-class)
+    # codec decode throughput: this host's measured fused-decode rate
+    # (benchmarks/microbench.py -> BENCH_codec.json), GB/s-class fallback
+    decode_bytes_per_s: float = dataclasses.field(
+        default_factory=lambda: measured_decode_bytes_per_s()
+    )
     gpu_share: float = 1.0  # 1/n under n concurrent requests (Fig. 13a)
 
     def prefill_s(self, engine: Engine, n_tokens: int, prefix: int = 0) -> float:

@@ -23,11 +23,13 @@ def main() -> None:
     modules = [
         ("insights", "benchmarks.insights"),
         ("table1", "benchmarks.table1_size_quality"),
+        # micro first: it writes BENCH_codec.json, whose measured decode
+        # rate the TTFT/SLO simulations below read as their default
+        ("micro", "benchmarks.microbench"),
         ("ttft", "benchmarks.ttft"),
         ("fig14", "benchmarks.fig14_slo"),
         ("fig15", "benchmarks.fig15_overheads"),
         ("fig16", "benchmarks.fig16_ablation"),
-        ("micro", "benchmarks.microbench"),
         ("roofline", "benchmarks.roofline"),
     ]
     failures = 0

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CoderTables", "encode", "decode", "encoded_bytes"]
+__all__ = ["CoderTables", "encode", "decode", "encoded_bytes", "stack_tables"]
 
 RANS_L = jnp.uint32(1 << 16)  # lower bound of the normalized state interval
 _U32_ONE = jnp.uint32(1)
@@ -204,3 +204,59 @@ def encoded_bytes(n_words: jnp.ndarray) -> int:
     """Wire size: valid 16-bit words + 4-byte final state per lane."""
     n_words = np.asarray(n_words)
     return int(n_words.sum()) * 2 + 4 * n_words.shape[0]
+
+
+def stack_tables(
+    tabs: "list[CoderTables] | tuple[CoderTables, ...]",
+    pad_alphabet: bool = False,
+) -> CoderTables:
+    """Concatenate several table sets into one along the table axis.
+
+    This is what makes *batched* multi-stream (de)coding possible: streams
+    that use different table sets (e.g. different lossy levels, or lossless
+    vs lossy anchors) are stacked along the lane axis into one ``encode`` /
+    ``decode`` call, with each lane's ``table_idx`` offset by the cumulative
+    table count of the sets before it.  Requires identical precision; by
+    default also identical alphabets.
+
+    ``pad_alphabet=True`` additionally merges sets with *different*
+    alphabets by zero-padding each ``freqs`` row (and edge-padding ``cums``)
+    to the widest alphabet.  This is sound for **decoding only**: the
+    decoder reads ``freqs[s]``/``cums[s]`` exclusively for symbols ``s``
+    produced by ``slot2sym`` (always < the set's true alphabet), so the
+    padding is never touched.  Padded tables must not be used to encode —
+    a padded symbol id would emit a zero-frequency state transition.
+    """
+    if not tabs:
+        raise ValueError("need at least one CoderTables to stack")
+    precision = tabs[0].precision
+    A = max(t.alphabet for t in tabs)
+    for t in tabs:
+        if t.precision != precision:
+            raise ValueError(
+                f"stack_tables requires identical precision, got "
+                f"{[t.precision for t in tabs]}"
+            )
+        if t.alphabet != A and not pad_alphabet:
+            raise ValueError(
+                "stack_tables requires identical alphabets (or "
+                f"pad_alphabet=True), got {[t.alphabet for t in tabs]}"
+            )
+    if len(tabs) == 1:
+        return tabs[0]
+
+    def _padded(t: CoderTables):
+        if t.alphabet == A:
+            return t.freqs, t.cums
+        pad = A - t.alphabet
+        freqs = jnp.pad(t.freqs, ((0, 0), (0, pad)))
+        cums = jnp.pad(t.cums, ((0, 0), (0, pad)), mode="edge")
+        return freqs, cums
+
+    parts = [_padded(t) for t in tabs]
+    return CoderTables(
+        freqs=jnp.concatenate([f for f, _ in parts], axis=0),
+        cums=jnp.concatenate([c for _, c in parts], axis=0),
+        slot2sym=jnp.concatenate([t.slot2sym for t in tabs], axis=0),
+        precision=precision,
+    )

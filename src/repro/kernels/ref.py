@@ -8,6 +8,8 @@ import numpy as np
 __all__ = [
     "kv_dequant_ref",
     "kv_quant_ref",
+    "kv_dequant_tokens_ref",
+    "kv_lossless_tokens_ref",
     "mha_ref",
     "decode_attention_ref",
     "ssd_ref",
@@ -19,6 +21,33 @@ def kv_dequant_ref(d_sym, anchors, bins, *, qmax, out_dtype=jnp.bfloat16):
     d = d_sym.astype(jnp.float32) - float(qmax)
     out = d * bins[:, None, None, None] + anchors[:, :, None, :]
     return out.astype(out_dtype)
+
+
+def kv_dequant_tokens_ref(d_sym, anchors, bins, *, qmax, out_dtype=jnp.bfloat16):
+    """Oracle for :func:`kvquant.kv_dequant_tokens_pallas`.
+
+    (B, G, g-1, C) symbols + (B, G, C) anchors -> (B, G, g, C) tokens with
+    the anchor in slot 0 of every group.
+    """
+    d = d_sym.astype(jnp.float32) - float(qmax)
+    others = d * bins[:, None, None, None] + anchors[:, :, None, :]
+    tokens = jnp.concatenate([anchors[:, :, None, :], others], axis=2)
+    return tokens.astype(out_dtype)
+
+
+def kv_lossless_tokens_ref(d_sym, a_sym, scales, *, out_dtype=jnp.float32):
+    """Oracle for :func:`kvquant.kv_lossless_tokens_pallas`.
+
+    (B, G, g-1, C) integer-delta symbols (bias 254) + (B, G, C) 8-bit anchor
+    symbols (bias 128) + (B, G) per-group scales -> (B, G, g, C) tokens.
+    """
+    q_a = a_sym.astype(jnp.float32) - 128.0
+    q_d = d_sym.astype(jnp.float32) - 254.0
+    s = scales.astype(jnp.float32)[:, :, None]
+    anchor = q_a * s
+    others = (q_d + q_a[:, :, None, :]) * s[..., None]
+    tokens = jnp.concatenate([anchor[:, :, None, :], others], axis=2)
+    return tokens.astype(out_dtype)
 
 
 def kv_quant_ref(kv_grouped, bins, *, qmax):

@@ -40,6 +40,11 @@ class Engine:
             self._extend = jax.jit(functools.partial(lm.prefill_extend, cfg))
         else:
             self._extend = None
+        # Decoded-run insertion: donate the cache buffers so XLA performs an
+        # in-place dynamic_update_slice instead of copying the whole cache
+        # per insertion (donation is a no-op hint on CPU, where XLA warns).
+        donate = () if jax.default_backend() == "cpu" else (0, 1)
+        self._insert_run = jax.jit(kv_layout.insert_codec_run, donate_argnums=donate)
 
     # ------------------------------------------------------------------
     # Paper interfaces
@@ -94,6 +99,20 @@ class Engine:
 
     def empty_caches(self, batch: int) -> Caches:
         return kv_layout.alloc_caches(self.cfg, batch, self.capacity)
+
+    def decode_to_cache(self, caches: Caches, kv_new, start: int) -> Caches:
+        """Write a decoded codec run ``(L, 2, T, C)`` into the serving cache.
+
+        Fast path for ``streamer.materialize``: one jitted, donated-buffer
+        ``dynamic_update_slice`` per run of decoded chunks — the run tensor
+        (``codec.decode_chunks`` output) never leaves the device and the
+        cache is not copied per chunk.
+        """
+        k, v, ln = self._insert_run(
+            caches.kv_k, caches.kv_v, caches.length, jnp.asarray(kv_new),
+            jnp.int32(start),
+        )
+        return caches._replace(kv_k=k, kv_v=v, length=ln)
 
     # ------------------------------------------------------------------
     # Cost model hooks (used by the streaming simulator)

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -13,9 +14,43 @@ from repro.models.lm import Caches
 __all__ = [
     "caches_to_codec_kv",
     "codec_kv_to_caches",
+    "insert_codec_run",
     "alloc_caches",
     "kv_cache_bytes",
 ]
+
+
+def insert_codec_run(
+    kv_k: jnp.ndarray,  # (L, B, cap, Hkv, Dh) serving cache, donatable
+    kv_v: jnp.ndarray,
+    length: jnp.ndarray,  # (B,) int32
+    kv_new: jnp.ndarray,  # (L, 2, T, C) decoded run (codec.decode_chunks)
+    start: jnp.ndarray,  # scalar int32 token offset
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Write a decoded codec run into the serving cache at ``[start, start+T)``.
+
+    Pure function meant to be jitted with the cache buffers donated
+    (``Engine.decode_to_cache``): the reshape to the attention layout
+    ``(L, B, T, Hkv, Dh)`` is a view, the batch broadcast fuses into the
+    ``dynamic_update_slice`` write, and with donation XLA updates the cache
+    in place instead of copying O(cache_size) per insertion.  ``length``
+    advances monotonically (``maximum``) so interleaved TEXT/bitstream chunk
+    orders can never shrink the cache.
+    """
+    L, B, _, Hkv, Dh = kv_k.shape
+    T = kv_new.shape[2]
+    kt = jnp.broadcast_to(
+        kv_new[:, 0].reshape(L, 1, T, Hkv, Dh).astype(kv_k.dtype), (L, B, T, Hkv, Dh)
+    )
+    vt = jnp.broadcast_to(
+        kv_new[:, 1].reshape(L, 1, T, Hkv, Dh).astype(kv_v.dtype), (L, B, T, Hkv, Dh)
+    )
+    start = start.astype(jnp.int32)
+    zero = jnp.int32(0)
+    kv_k = jax.lax.dynamic_update_slice(kv_k, kt, (zero, zero, start, zero, zero))
+    kv_v = jax.lax.dynamic_update_slice(kv_v, vt, (zero, zero, start, zero, zero))
+    length = jnp.maximum(length, start + T)
+    return kv_k, kv_v, length
 
 
 def caches_to_codec_kv(caches: Caches, batch_index: int, n_tokens: int) -> np.ndarray:

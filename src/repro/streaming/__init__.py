@@ -1,4 +1,5 @@
 from repro.streaming.adaptation import TEXT, AdaptationPolicy  # noqa: F401
+from repro.streaming.calibration import measured_decode_bytes_per_s  # noqa: F401
 from repro.streaming.network import BandwidthTrace, NetworkModel  # noqa: F401
 from repro.streaming.pipeline import StreamResult, simulate_stream  # noqa: F401
 from repro.streaming.storage import KVStore  # noqa: F401

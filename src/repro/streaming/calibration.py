@@ -1,0 +1,82 @@
+"""Measured codec-throughput calibration for the streaming simulator.
+
+The TTFT simulator charges ``nbytes / decode_bytes_per_s`` for every
+bitstream chunk, so the constant directly shapes every simulated TTFT /
+SLO number.  Rather than a hard-coded guess, the default is wired to the
+*measured* fused-decode throughput of this host: ``benchmarks/microbench.py``
+times the batched fused decode path (``codec.decode_chunks``) and writes
+``BENCH_codec.json`` at the repo root; this module reads it back.
+
+Lookup order: ``$CACHEGEN_BENCH_CODEC`` (explicit file), ``BENCH_codec.json``
+in the current working directory, then the repo root next to this package.
+Falls back to :data:`DEFAULT_DECODE_BYTES_PER_S` (GB/s-class, the paper's
+GPU-decoder ballpark) when no measurement exists yet.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+__all__ = [
+    "DEFAULT_DECODE_BYTES_PER_S",
+    "BENCH_CODEC_FILENAME",
+    "bench_codec_candidates",
+    "measured_decode_bytes_per_s",
+]
+
+DEFAULT_DECODE_BYTES_PER_S = 4e9
+BENCH_CODEC_FILENAME = "BENCH_codec.json"
+_ENV_VAR = "CACHEGEN_BENCH_CODEC"
+
+
+def bench_codec_candidates() -> List[str]:
+    """Candidate paths for the microbench's codec throughput report."""
+    cands = []
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        cands.append(env)
+    cands.append(os.path.join(os.getcwd(), BENCH_CODEC_FILENAME))
+    repo_root = os.path.dirname(  # streaming/ -> repro/ -> src/ -> repo
+        os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    )
+    cands.append(os.path.join(repo_root, BENCH_CODEC_FILENAME))
+    return cands
+
+
+_MEMO: dict = {}
+
+
+def measured_decode_bytes_per_s(
+    default: float = DEFAULT_DECODE_BYTES_PER_S,
+    path: Optional[str] = None,
+) -> float:
+    """Fused-decode bytes/s measured by the microbench, else ``default``.
+
+    A report is only trusted when its ``host_backend`` matches the current
+    JAX backend (a committed CPU measurement must not masquerade as a TPU
+    host's decode rate).  Results are memoized per candidate list — figure
+    scripts construct cost models repeatedly and must not re-read files.
+    """
+    import jax  # local: keep module importable without initializing jax
+
+    backend = jax.default_backend()
+    cands = tuple([path] if path else bench_codec_candidates())
+    key = (cands, backend, float(default))
+    if key in _MEMO:
+        return _MEMO[key]
+    value = float(default)
+    for p in cands:
+        try:
+            with open(p) as f:
+                report = json.load(f)
+            if report.get("host_backend") not in (None, backend):
+                continue
+            v = float(report["fused"]["bytes_per_s"])
+            if v > 0:
+                value = v
+                break
+        except (OSError, KeyError, TypeError, ValueError):
+            continue
+    _MEMO[key] = value
+    return value

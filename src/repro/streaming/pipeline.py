@@ -18,6 +18,7 @@ import dataclasses
 from typing import Callable, Dict, List, Optional
 
 from repro.streaming.adaptation import TEXT, AdaptationPolicy
+from repro.streaming.calibration import measured_decode_bytes_per_s
 from repro.streaming.network import NetworkModel
 from repro.streaming.storage import ChunkMeta
 
@@ -57,12 +58,15 @@ def simulate_stream(
     policy: AdaptationPolicy,
     network: NetworkModel,
     *,
-    decode_bytes_per_s: float,
+    decode_bytes_per_s: Optional[float] = None,
     recompute_s: Callable[[int, int], float],  # (chunk_tokens, prefix_tokens) -> s
     final_step_s: float = 0.0,
     hedge_after_s: Optional[float] = None,
     start_t: float = 0.0,
 ) -> StreamResult:
+    # default: this host's measured fused-decode throughput (BENCH_codec.json)
+    if decode_bytes_per_s is None:
+        decode_bytes_per_s = measured_decode_bytes_per_s()
     n = len(metas)
     levels = list(metas[0].sizes.keys()) if n else []
     timelines: List[ChunkTimeline] = []

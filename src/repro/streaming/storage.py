@@ -49,7 +49,9 @@ class KVStore:
     """Storage server for encoded KV bitstreams."""
 
     def __init__(self, tables: kvcodec.CodecTables, directory: Optional[str] = None):
-        self.tables = tables
+        # one-time upgrade: hand-built / unpickled tables may lack the
+        # pre-stacked sets the batched coder calls need on the hot path
+        self.tables = kvcodec.ensure_stacks(tables)
         self.dir = directory
         self._mem: Dict[Tuple[str, int, int], bytes] = {}
         self._meta: Dict[str, List[ChunkMeta]] = {}
@@ -67,13 +69,24 @@ class KVStore:
         levels: Optional[List[int]] = None,
         bytes_per_token_text: int = 4,
     ) -> List[ChunkMeta]:
-        levels = list(range(self.tables.config.n_levels)) if levels is None else levels
+        all_levels = list(range(self.tables.config.n_levels))
+        levels = all_levels if levels is None else levels
+        batch_all = levels == all_levels
         T = kv.shape[2]
         metas = []
         for ci, (s, e) in enumerate(split_chunks(T, chunk_tokens)):
+            if batch_all:
+                # batched: anchors symbolized/coded once, delta levels in one
+                # stacked rANS call (byte-identical to per-level encoding)
+                blobs = kvcodec.encode_all_levels(kv[:, :, s:e], self.tables)
+            else:
+                blobs = {
+                    lvl: kvcodec.encode_chunk(kv[:, :, s:e], self.tables, lvl)
+                    for lvl in levels
+                }
             sizes = {}
             for lvl in levels:
-                blob = kvcodec.encode_chunk(kv[:, :, s:e], self.tables, lvl)
+                blob = blobs[lvl]
                 self._put(context_id, ci, lvl, blob)
                 sizes[lvl] = len(blob)
             metas.append(

@@ -9,6 +9,14 @@ scheduler (Algorithm 1) and the serving engine:
             materialize() — actually decode the chosen bitstreams (and
                             recompute TEXT chunks via the engine) into a
                             serving KV cache, ready for generate_with_kv.
+
+materialize() default (PR 1) is the *fused batched* decode-to-cache
+pipeline: consecutive bitstream chunks form a run, each run is decoded in
+one batched ``codec.decode_chunks`` call (stacked rANS scans + fused dequant
+kernels, mixed levels welcome) and written into the serving cache with one
+donated-buffer ``Engine.decode_to_cache`` update — no per-chunk host
+round-trips and no per-chunk O(cache) copies.  ``fused=False`` keeps the
+seed per-chunk path as the correctness oracle.
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import codec as kvcodec
 from repro.models.lm import Caches
 from repro.serving.engine import Engine
 from repro.serving.kv_layout import caches_to_codec_kv
@@ -64,7 +73,7 @@ class CacheGenStreamer:
         network: NetworkModel,
         *,
         slo_s: float,
-        decode_bytes_per_s: float,
+        decode_bytes_per_s: Optional[float] = None,
         recompute_s,
         default_level: Optional[int] = None,
         prior_throughput_gbps: Optional[float] = None,
@@ -118,10 +127,54 @@ class CacheGenStreamer:
         tokens: np.ndarray,  # (B, T) full context tokens (for TEXT chunks)
         *,
         batch: int = 1,
+        fused: bool = True,
     ) -> Caches:
-        """Build the serving cache by decoding each chunk at its chosen config."""
-        cfg = self.cfg
+        """Build the serving cache by decoding each chunk at its chosen config.
+
+        ``fused=True`` (default): consecutive bitstream chunks are decoded as
+        one batched run (``codec.decode_chunks``) and written with a single
+        donated-buffer cache update per run; TEXT chunks are recomputed in
+        stream order in between.  ``fused=False``: retained per-chunk
+        reference path (decode each blob to host, insert one by one).
+        """
         caches = engine.empty_caches(batch)
+        if not fused or caches.kv_k is None:
+            return self._materialize_reference(plan, engine, tokens, caches, batch)
+        items = list(zip(plan.metas, plan.result.configs))
+        i = 0
+        while i < len(items):
+            meta, config = items[i]
+            if config == TEXT:
+                _, caches = engine.prefill_extend(
+                    jnp.asarray(tokens[:, meta.start : meta.end], jnp.int32), caches
+                )
+                i += 1
+                continue
+            # run of consecutive bitstream chunks -> one batched decode +
+            # one cache insertion
+            blobs = []
+            j = i
+            while j < len(items) and items[j][1] != TEXT:
+                m, lvl = items[j]
+                blobs.append(self.store.get_kv(plan.context_id, m.chunk_idx, lvl))
+                j += 1
+            kv_run = kvcodec.decode_chunks(
+                blobs, self.store.tables, out_dtype=caches.kv_k.dtype
+            )
+            caches = engine.decode_to_cache(caches, kv_run, meta.start)
+            i = j
+        return caches
+
+    def _materialize_reference(
+        self,
+        plan: FetchPlan,
+        engine: Engine,
+        tokens: np.ndarray,
+        caches: Caches,
+        batch: int,
+    ) -> Caches:
+        """Seed per-chunk path: the fused pipeline's correctness oracle."""
+        cfg = self.cfg
         for meta, config in zip(plan.metas, plan.result.configs):
             s, e = meta.start, meta.end
             if config == TEXT:
@@ -147,5 +200,9 @@ def _insert_codec_kv(
     return caches._replace(
         kv_k=caches.kv_k.at[:, :, start : start + Tc].set(kt),
         kv_v=caches.kv_v.at[:, :, start : start + Tc].set(vt),
-        length=jnp.full((batch,), start + Tc, jnp.int32),
+        # monotone: out-of-order / interleaved chunk insertion must never
+        # shrink the valid cache length
+        length=jnp.maximum(
+            caches.length, jnp.full((batch,), start + Tc, jnp.int32)
+        ),
     )

@@ -1,0 +1,71 @@
+"""Hypothesis shim: real property-based testing when ``hypothesis`` is
+installed, a fixed-seed random-sampling fallback when it is not.
+
+The tier-1 suite must collect and run in minimal environments (only jax +
+numpy + msgpack + pytest).  Test modules import ``given``/``settings``/``st``
+from here instead of from ``hypothesis`` directly; the fallback samples each
+strategy from a deterministic RNG for up to ``max_examples`` (capped)
+iterations — no shrinking, but the same assertions run.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by either environment
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_CAP = 20  # keep CI time bounded without shrinking support
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module surface
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def given(**strategies):
+        def deco(fn):
+            # zero-arg wrapper: pytest must not mistake the strategy
+            # parameters for fixtures (no functools.wraps on purpose)
+            def wrapper():
+                n = min(getattr(wrapper, "_max_examples", 10), _FALLBACK_CAP)
+                rng = np.random.default_rng(0xCAC4E)
+                for _ in range(n):
+                    fn(**{k: s.sample(rng) for k, s in strategies.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco

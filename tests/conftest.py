@@ -4,6 +4,7 @@ import sys
 # src-layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))  # tests/_hyp.py shim
 
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # real single CPU device; only launch/dryrun.py forces 512 host devices.

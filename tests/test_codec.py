@@ -1,8 +1,9 @@
 """Codec correctness: rANS vs AC oracle, round-trips, error bounds."""
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or fixed-seed fallback
 
 from repro.core import codec, gop, quant, rans, tables
 from repro.core.ac_ref import ac_decode, ac_encode
@@ -138,6 +139,106 @@ def test_codec_rejects_mismatched_shape(toy_codec):
     bad = np.zeros((kvs[0].shape[0] + 1, 2, 20, kvs[0].shape[3]), np.float32)
     with pytest.raises(ValueError):
         codec.encode_chunk(bad, ct, 1)
+
+
+def test_rans_batched_decode_matches_per_stream():
+    """Stacked-lane decode with stacked tables == independent per-stream
+    decodes (the batched multi-chunk fast path's core property)."""
+    rng = np.random.default_rng(11)
+    A, k, n_lanes, n_sym = 64, 10, 16, 40
+    _, ct1 = _random_tables(rng, 4, A, k)
+    _, ct2 = _random_tables(rng, 4, A, k)
+    stacked = rans.stack_tables([ct1, ct2])
+    t1 = rng.integers(0, 4, n_lanes).astype(np.int32)
+    t2 = rng.integers(0, 4, n_lanes).astype(np.int32)
+    s1 = rng.integers(0, A, size=(n_lanes, n_sym)).astype(np.uint16)
+    s2 = rng.integers(0, A, size=(n_lanes, n_sym - 13)).astype(np.uint16)
+    w1, n1, x1 = rans.encode(jnp.asarray(s1), jnp.asarray(t1), ct1)
+    w2, n2, x2 = rans.encode(jnp.asarray(s2), jnp.asarray(t2), ct2)
+    # pad both streams' word buffers to a common cap and stack lanes
+    cap = max(w1.shape[1], w2.shape[1])
+    words = np.zeros((2 * n_lanes, cap), np.uint16)
+    words[:n_lanes, : w1.shape[1]] = np.asarray(w1)
+    words[n_lanes:, : w2.shape[1]] = np.asarray(w2)
+    n_words = np.concatenate([np.asarray(n1), np.asarray(n2)])
+    state = np.concatenate([np.asarray(x1), np.asarray(x2)])
+    t_idx = np.concatenate([t1, t2 + 4])  # stream 2 offsets into table set 2
+    dec = rans.decode(words, n_words, state, t_idx, stacked, n_sym)
+    assert (np.asarray(dec)[:n_lanes] == s1).all()
+    # shorter stream: valid prefix decodes exactly; tail is don't-care
+    assert (np.asarray(dec)[n_lanes:, : n_sym - 13] == s2).all()
+
+
+def test_stack_tables_rejects_mismatched():
+    rng = np.random.default_rng(0)
+    _, a = _random_tables(rng, 2, 16, 10)
+    _, b = _random_tables(rng, 2, 16, 12)
+    _, c = _random_tables(rng, 2, 32, 10)
+    with pytest.raises(ValueError):
+        rans.stack_tables([a, b])
+    with pytest.raises(ValueError):
+        rans.stack_tables([a, c])
+
+
+def test_encode_all_levels_byte_identical_to_per_level(toy_codec):
+    """Batched encode (anchors hoisted, stacked delta rANS) is a pure
+    optimization: bitstreams match per-level encode_chunk byte for byte."""
+    kvs, ct, cfg = toy_codec
+    kv = kvs[0]
+    batched = codec.encode_all_levels(kv, ct)
+    for lvl in range(cfg.n_levels):
+        assert batched[lvl] == codec.encode_chunk(kv, ct, lvl), lvl
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_decode_chunks_matches_reference(toy_codec, use_pallas):
+    """Fused batched decode == concatenated per-chunk reference decodes:
+    bit-exact at level 0, tolerance-exact at lossy levels.  Mixed levels and
+    ragged chunk lengths share one batch."""
+    kvs, ct, cfg = toy_codec
+    rng = np.random.default_rng(5)
+    chunks = [_toy_kv(rng, T=t) for t in (40, 40, 23, 40)]
+    levels = [1, 0, 2, 0]
+    blobs = [codec.encode_chunk(c, ct, l) for c, l in zip(chunks, levels)]
+    ref = np.concatenate(
+        [np.asarray(codec.decode_chunk(b, ct)) for b in blobs], axis=2
+    )
+    got = np.asarray(
+        codec.decode_chunks(blobs, ct, out_dtype=jnp.float32, use_pallas=use_pallas)
+    )
+    assert got.shape == ref.shape
+    s = 0
+    for c, lvl in zip(chunks, levels):
+        e = s + c.shape[2]
+        if lvl == 0:
+            assert np.array_equal(got[:, :, s:e], ref[:, :, s:e])
+        else:
+            np.testing.assert_allclose(
+                got[:, :, s:e], ref[:, :, s:e], atol=1e-5, rtol=1e-5
+            )
+        s = e
+
+
+def test_decode_chunks_single_and_uniform(toy_codec):
+    kvs, ct, cfg = toy_codec
+    rng = np.random.default_rng(6)
+    chunks = [_toy_kv(rng, T=30) for _ in range(3)]
+    for lvl in range(cfg.n_levels):
+        blobs = [codec.encode_chunk(c, ct, lvl) for c in chunks]
+        got = np.asarray(codec.decode_chunks(blobs, ct, use_pallas=False))
+        ref = np.concatenate(
+            [np.asarray(codec.decode_chunk(b, ct)) for b in blobs], axis=2
+        )
+        tol = 0 if lvl == 0 else 1e-5
+        np.testing.assert_allclose(got, ref, atol=tol, rtol=tol)
+
+
+def test_decode_chunks_bf16_output_stays_on_device(toy_codec):
+    kvs, ct, cfg = toy_codec
+    blob = codec.encode_chunk(kvs[0], ct, 1)
+    out = codec.decode_chunks([blob], ct, out_dtype=jnp.bfloat16)
+    assert out.dtype == jnp.bfloat16
+    assert isinstance(out, jax.Array)
 
 
 def test_normalize_freqs_invariants():

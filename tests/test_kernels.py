@@ -7,7 +7,13 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.kvquant import kv_dequant_pallas, kv_quant_pallas
+from repro.kernels.kvquant import (
+    kv_dequant_pallas,
+    kv_dequant_tokens_pallas,
+    kv_lossless_tokens_pallas,
+    kv_quant_pallas,
+    pick_block_groups,
+)
 from repro.models.mamba2 import ssd_chunked
 
 RNG = np.random.default_rng(7)
@@ -96,7 +102,16 @@ KVQ_CASES = [
     (4, 8, 10, 64, 127, 4),
     (8, 16, 10, 128, 127, 8),
     (2, 32, 4, 256, 63, 16),
+    (4, 12, 6, 64, 127, 8),  # G % block_groups != 0 -> divisor fallback
+    (3, 7, 3, 32, 31, 8),  # prime G -> block of 7
 ]
+
+
+def test_pick_block_groups_divides():
+    for G in (1, 2, 7, 12, 16, 52, 100):
+        for req in (1, 4, 8, 16):
+            bg = pick_block_groups(G, req)
+            assert 1 <= bg <= req and G % bg == 0
 
 
 @pytest.mark.parametrize("case", KVQ_CASES)
@@ -118,6 +133,55 @@ def test_kvquant_roundtrip_matches_ref(case):
         np.asarray(deq, np.float32), np.asarray(deq_ref, np.float32),
         atol=1e-5, rtol=1e-2,
     )
+
+
+@pytest.mark.parametrize("case", KVQ_CASES)
+def test_kv_dequant_tokens_matches_ref(case):
+    """Fused token-group decode kernel (anchor slot 0) vs pure-jnp oracle."""
+    B, G, g, C, qmax, bg = case
+    d_sym = jnp.asarray(
+        RNG.integers(0, 2 * qmax + 1, size=(B, G, g - 1, C)).astype(np.uint16)
+    )
+    anchors = _rand((B, G, C))
+    bins = jnp.asarray(RNG.uniform(0.05, 0.5, size=(B,)), jnp.float32)
+    out = kv_dequant_tokens_pallas(
+        d_sym, anchors, bins, qmax=qmax, block_groups=bg,
+        out_dtype=jnp.float32, interpret=True,
+    )
+    exp = ref.kv_dequant_tokens_ref(d_sym, anchors, bins, qmax=qmax, out_dtype=jnp.float32)
+    assert out.shape == (B, G, g, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6, rtol=1e-6)
+    # anchor slot must be the anchor itself, exactly
+    assert np.array_equal(np.asarray(out[:, :, 0]), np.asarray(anchors))
+
+
+@pytest.mark.parametrize("case", KVQ_CASES)
+def test_kv_lossless_tokens_matches_ref_bit_exact(case):
+    """Level-0 fused kernel is bit-exact (f32) against the oracle."""
+    B, G, g, C, _, bg = case
+    d_sym = jnp.asarray(RNG.integers(0, 509, size=(B, G, g - 1, C)).astype(np.uint16))
+    a_sym = jnp.asarray(RNG.integers(1, 256, size=(B, G, C)).astype(np.uint16))
+    scales = jnp.asarray(RNG.uniform(0.005, 0.1, size=(B, G)), jnp.float32)
+    out = kv_lossless_tokens_pallas(
+        d_sym, a_sym, scales, block_groups=bg, interpret=True
+    )
+    exp = ref.kv_lossless_tokens_ref(d_sym, a_sym, scales)
+    assert np.array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_kv_tokens_bf16_roundtrip_tolerance():
+    """quant -> dequant round trip in bf16 stays within bin/2 + bf16 ulp."""
+    B, G, g, C, qmax = 4, 16, 10, 64, 127
+    kvg = _rand((B, G, g, C), scale=0.5)
+    bins = jnp.asarray(RNG.uniform(0.05, 0.2, size=(B,)), jnp.float32)
+    sym = kv_quant_pallas(kvg, bins, qmax=qmax, interpret=True)
+    anchors = kvg[:, :, 0, :]
+    tok = kv_dequant_tokens_pallas(
+        sym, anchors, bins, qmax=qmax, out_dtype=jnp.bfloat16, interpret=True
+    )
+    err = np.abs(np.asarray(tok, np.float32) - np.asarray(kvg, np.float32))
+    bound = np.asarray(bins)[:, None, None, None] / 2 + 0.05  # bin/2 + bf16 slack
+    assert (err <= bound).all(), err.max()
 
 
 # ---------------------------------------------------------------------------

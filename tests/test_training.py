@@ -2,7 +2,7 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or fixed-seed fallback
 
 from repro.training import AdamWConfig, apply_updates, init_opt_state
 from repro.training.grad_compress import ef_compress, ef_init
