@@ -13,7 +13,7 @@ from typing import Dict, Tuple
 import msgpack
 import numpy as np
 
-__all__ = ["pack", "unpack", "pack_stream", "unpack_stream"]
+__all__ = ["pack", "unpack", "peek_header", "pack_stream", "unpack_stream"]
 
 
 def _arr_to_wire(a: np.ndarray) -> dict:
@@ -46,6 +46,35 @@ def unpack(blob: bytes) -> Tuple[dict, Dict[str, np.ndarray]]:
         for k, v in payload[b"a"].items()
     }
     return header, arrays
+
+
+def peek_header(blob: bytes) -> dict:
+    """Read only the header map of a packed chunk, without materializing the
+    array payload.
+
+    :func:`pack` writes ``{"h": ..., "a": ...}`` in insertion order, so a
+    streaming unpacker can stop right after the header object — O(header)
+    parse instead of O(blob) (serving-layer validation runs this per fetched
+    chunk).  Falls back to a full :func:`unpack` if the first key is not
+    ``"h"`` (foreign producer).
+    """
+    unp = msgpack.Unpacker(raw=True, strict_map_key=False)
+    unp.feed(blob)
+    try:
+        unp.read_map_header()
+        key = unp.unpack()
+        if key in (b"h", "h"):
+            header = unp.unpack()
+            return {
+                (k.decode() if isinstance(k, bytes) else k): (
+                    v.decode() if isinstance(v, bytes) else v
+                )
+                for k, v in header.items()
+            }
+    except (msgpack.UnpackException, ValueError):
+        # non-map top level raises a plain ValueError, not an UnpackException
+        pass
+    return unpack(blob)[0]
 
 
 def pack_stream(

@@ -55,6 +55,7 @@ __all__ = [
     "CodecTables",
     "profile",
     "encode_chunk",
+    "peek_chunk_header",
     "decode_chunk",
     "decode_chunks",
     "encode_all_levels",
@@ -251,9 +252,18 @@ def profile(
     return ensure_stacks(ct)
 
 
-def _chunk_header(cfg: CodecConfig, level: int, T: int, L: int, C: int) -> dict:
-    """Single source of truth for the chunk bitstream header (wire v1)."""
-    return {
+def _chunk_header(
+    cfg: CodecConfig, level: int, T: int, L: int, C: int,
+    chunk_idx: Optional[int] = None,
+) -> dict:
+    """Single source of truth for the chunk bitstream header (wire v1).
+
+    ``chunk_idx`` is the chunk's position in its context (written by the
+    KVStore so serving-layer validation can detect a storage server
+    returning the *wrong chunk*, not just the wrong level); omitted when
+    unknown, keeping standalone encodes byte-identical.
+    """
+    h = {
         "v": 1,
         "level": int(level),
         "n_tokens": int(T),
@@ -261,10 +271,27 @@ def _chunk_header(cfg: CodecConfig, level: int, T: int, L: int, C: int) -> dict:
         "n_channels": int(C),
         "group_size": int(cfg.group_size),
     }
+    if chunk_idx is not None:
+        h["chunk_idx"] = int(chunk_idx)
+    return h
+
+
+def peek_chunk_header(blob: bytes) -> dict:
+    """Parse only a chunk bitstream's header — O(header), the rANS payload
+    is never materialized (``bitstream.peek_header``).
+
+    Serving-layer validation hook: the live ``ServeSession`` checks every
+    fetched blob against its plan entry (chosen level, token count, and —
+    for store-written blobs, which carry ``chunk_idx`` — chunk identity)
+    before spending decode time on it; a storage server returning the wrong
+    bitstream must fail loudly, not corrupt the cache silently.
+    """
+    return bitstream.peek_header(blob)
 
 
 def encode_chunk(
-    kv: np.ndarray | jnp.ndarray, ct: CodecTables, level: int
+    kv: np.ndarray | jnp.ndarray, ct: CodecTables, level: int,
+    chunk_idx: Optional[int] = None,
 ) -> bytes:
     """Encode one chunk's KV (L, 2, T, C) at ``level`` into a bitstream."""
     cfg = ct.config
@@ -285,7 +312,7 @@ def encode_chunk(
     arrays.update(bitstream.pack_stream(np.asarray(aw), np.asarray(an), np.asarray(ax), "a"))
     arrays.update(bitstream.pack_stream(np.asarray(dw), np.asarray(dn), np.asarray(dx), "d"))
     arrays["scales"] = np.asarray(scales, np.float16)
-    return bitstream.pack(_chunk_header(cfg, level, T, L, C), arrays)
+    return bitstream.pack(_chunk_header(cfg, level, T, L, C, chunk_idx), arrays)
 
 
 def decode_chunk(blob: bytes, ct: CodecTables) -> jnp.ndarray:
@@ -578,7 +605,8 @@ def decode_chunks(
 
 
 def encode_all_levels(
-    kv: np.ndarray | jnp.ndarray, ct: CodecTables
+    kv: np.ndarray | jnp.ndarray, ct: CodecTables,
+    chunk_idx: Optional[int] = None,
 ) -> Dict[int, bytes]:
     """Offline pre-encoding of every streaming level (paper §5.3).
 
@@ -596,7 +624,7 @@ def encode_all_levels(
             f"KV shape {kv.shape} does not match profiled tables "
             f"(L={ct.n_layers}, C={ct.n_channels})"
         )
-    out: Dict[int, bytes] = {0: encode_chunk(kv, ct, 0)}
+    out: Dict[int, bytes] = {0: encode_chunk(kv, ct, 0, chunk_idx)}
     lossy = list(range(1, cfg.n_levels))
     if not lossy:
         return out
@@ -635,7 +663,7 @@ def encode_all_levels(
         arrays.update(a_arrays)
         arrays.update(bitstream.pack_stream(dw[sl], dn[sl], dx[sl], "d"))
         arrays["scales"] = scales16
-        out[lvl] = bitstream.pack(_chunk_header(cfg, lvl, T, L, C), arrays)
+        out[lvl] = bitstream.pack(_chunk_header(cfg, lvl, T, L, C, chunk_idx), arrays)
     return out
 
 

@@ -1,9 +1,14 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Brings up the engine for a (reduced) architecture, stores a context pool
-through the CacheGen streamer, then serves a request loop over a simulated
-network — the runnable counterpart of the production serve path whose
-full-scale sharding is proven by launch/dryrun.py.
+through the CacheGen streamer, then serves a request loop — each request is
+a live closed-loop :class:`~repro.serving.session.ServeSession`: per chunk
+it measures realized throughput from the trace-driven fetch, picks the next
+streaming configuration (Algorithm 1), decodes fetched bitstreams through
+the fused batched path and recomputes TEXT chunks for real, then generates.
+``--check-sim`` cross-checks every session's per-chunk decisions against the
+offline simulator on the same trace (the differential invariant that
+tests/test_session.py enforces).
 """
 from __future__ import annotations
 
@@ -19,6 +24,12 @@ def main() -> None:
     ap.add_argument("--ctx-len", type=int, default=300)
     ap.add_argument("--slo-ms", type=float, default=250)
     ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--fixed-level", type=int, default=None,
+                    help="pin one encoding level (no adaptation baseline)")
+    ap.add_argument("--max-run-tokens", type=int, default=None,
+                    help="double-buffer granularity for fetch/decode overlap")
+    ap.add_argument("--check-sim", action="store_true",
+                    help="cross-check session decisions against the simulator")
     args = ap.parse_args()
 
     import jax
@@ -30,6 +41,7 @@ def main() -> None:
     from repro.models import build
     from repro.serving.engine import Engine
     from repro.serving.kv_layout import caches_to_codec_kv
+    from repro.serving.session import ServeSession
     from repro.streaming import (
         BandwidthTrace,
         CacheGenStreamer,
@@ -69,24 +81,45 @@ def main() -> None:
     store.store_kv("ctx", kv, chunk_tokens=max(args.ctx_len // 4, 50))
     print(f"[serve] context stored: {store.storage_bytes('ctx')/1e3:.1f} KB all levels")
 
+    recompute_s = lambda t, p: 0.02 * t / 64  # noqa: E731
+    session = ServeSession(
+        streamer,
+        engine,
+        slo_s=args.slo_ms / 1e3,
+        recompute_s=recompute_s,
+        decode_bytes_per_s=300e6,
+        allow_text=(cfg.family != "vlm"),
+        fixed_level=args.fixed_level,
+        max_run_tokens=args.max_run_tokens,
+    )
+
     names = {TEXT: "TEXT"}
     for r in range(args.requests):
         trace = BandwidthTrace.sampled(rng, 6, 0.05, 0.05, 2.0)
-        net = NetworkModel(trace, rtt_s=0.002)
-        plan = streamer.stream(
-            "ctx", net, slo_s=args.slo_ms / 1e3, decode_bytes_per_s=300e6,
-            recompute_s=lambda t, p: 0.02 * t / 64,
-            prior_throughput_gbps=float(trace.gbps[0]),
-            allow_text=(cfg.family != "vlm"),
+        prior = float(trace.gbps[0])
+        res = session.run(
+            "ctx",
+            tokens,
+            NetworkModel(trace, rtt_s=0.002),
+            prior_throughput_gbps=prior,
         )
-        mat = streamer.materialize(plan, engine, tokens, batch=1)
         first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        gen = engine.generate_with_kv(mat, first, args.gen)
-        print(
-            f"[req {r}] configs={[names.get(c, f'L{c}') for c in plan.result.configs]} "
-            f"ttft={plan.result.ttft_s*1e3:.1f} ms ok={not plan.result.slo_violated} "
+        gen = engine.generate_with_kv(res.caches, first, args.gen)
+        line = (
+            f"[req {r}] configs={[names.get(c, f'L{c}') for c in res.configs]} "
+            f"ttft={res.ttft_s*1e3:.1f} ms ok={not res.slo_violated} "
+            f"runs={res.n_runs} wall_decode={res.wall_decode_s*1e3:.1f} ms "
             f"tokens={gen[0].tolist()}"
         )
+        if args.check_sim:
+            plan = streamer.stream(
+                "ctx", NetworkModel(trace, rtt_s=0.002), slo_s=args.slo_ms / 1e3,
+                decode_bytes_per_s=300e6, recompute_s=recompute_s,
+                prior_throughput_gbps=prior, allow_text=(cfg.family != "vlm"),
+                fixed_level=args.fixed_level,
+            )
+            line += f" sim_match={res.configs == plan.result.configs}"
+        print(line)
 
 
 if __name__ == "__main__":

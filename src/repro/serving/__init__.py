@@ -1,1 +1,12 @@
 from repro.serving.engine import Engine  # noqa: F401
+
+
+def __getattr__(name):
+    # Lazy: session pulls in the streaming package (which itself imports
+    # repro.serving submodules) — deferring keeps the import graph acyclic
+    # regardless of which package a user imports first.
+    if name in ("ServeSession", "SessionResult"):
+        from repro.serving import session
+
+        return getattr(session, name)
+    raise AttributeError(name)

@@ -1,0 +1,288 @@
+"""Closed-loop adaptive serving session over real codec bitstreams.
+
+Session / simulator split
+-------------------------
+``streaming/pipeline.simulate_stream`` is a *byte-count* model: it walks
+Algorithm 1 (paper §5.3) over chunk metadata and a bandwidth trace, charging
+``nbytes / decode_bytes_per_s`` for decode and a cost-model callable for
+recompute, and never touches a bitstream.  :class:`ServeSession` is the
+live counterpart of the same loop: identical per-chunk decisions against the
+identical trace-driven virtual clock (both drive the *same* loop body —
+``pipeline.StreamClock`` — with policies built by ``adaptation.make_policy``,
+so decisions match by construction; the differential harness in
+tests/test_session.py cross-checks them), but every bitstream chunk is
+actually fetched from the :class:`~repro.streaming.storage.KVStore`,
+validated against the plan (``codec.peek_chunk_header``: level, token count,
+chunk identity), decoded through the fused batched path
+(``codec.decode_chunks`` → ``Engine.decode_to_cache``), and every TEXT
+chunk is actually recomputed with ``Engine.prefill_extend`` on top of the
+already-materialized prefix.
+
+Fetch/decode overlap uses the streamer's double-buffered
+:class:`~repro.streaming.streamer.RunSegmenter`: fetched chunks accumulate
+until ``max_run_tokens``, then the run is dispatched as one batched decode
+(JAX dispatch is asynchronous on accelerator backends, so the decode of a
+full buffer proceeds while the loop keeps fetching the next buffer).  A TEXT
+chunk force-flushes the buffer first — its ``prefill_extend`` reads the
+cache at its own token offset, so all earlier chunks must have landed; the
+session asserts contiguous segment coverage with a host-side token counter
+(reading ``caches.length`` back would sync the device per segment).
+
+The session emits :class:`~repro.streaming.pipeline.ChunkTimeline`-
+compatible records (``SessionResult.stream_result()``), so everything that
+consumes simulator output — SLO accounting, figure scripts — reads session
+output unchanged, and the simulator becomes a cross-check rather than the
+only story.  Virtual time (``ttft_s``) stays simulator-comparable; realized
+host time is reported separately (``wall_*``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec as kvcodec
+from repro.models.lm import Caches
+from repro.serving.engine import Engine
+from repro.streaming.adaptation import TEXT, make_policy
+from repro.streaming.calibration import measured_decode_bytes_per_s
+from repro.streaming.network import NetworkModel
+from repro.streaming.pipeline import ChunkTimeline, StreamClock, StreamResult
+from repro.streaming.streamer import CacheGenStreamer, PlanSegment, RunSegmenter
+
+__all__ = ["ServeSession", "SessionResult"]
+
+
+@dataclasses.dataclass
+class SessionResult:
+    """Outcome of one closed-loop context load.
+
+    ``timelines``/``ttft_s`` use the trace-driven virtual clock (fetch) plus
+    the simulator's compute charging — directly comparable to
+    ``simulate_stream`` output.  ``caches`` is the real materialized serving
+    cache; ``wall_*`` are realized host seconds (decode dispatch is
+    asynchronous, so per-category times are dispatch times and
+    ``wall_total_s`` — measured through a final blocking sync — is the
+    end-to-end truth).
+    """
+
+    timelines: List[ChunkTimeline]
+    configs: List[int]
+    ttft_s: float
+    slo_s: float
+    caches: Caches
+    wall_decode_s: float
+    wall_recompute_s: float
+    wall_total_s: float
+    n_runs: int
+
+    @property
+    def slo_violated(self) -> bool:
+        return self.ttft_s > self.slo_s
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(t.nbytes for t in self.timelines)
+
+    def level_histogram(self) -> Dict[int, int]:
+        """Realized streaming-config histogram (TEXT keyed as -1)."""
+        hist: Dict[int, int] = {}
+        for c in self.configs:
+            hist[c] = hist.get(c, 0) + 1
+        return hist
+
+    def stream_result(self) -> StreamResult:
+        """ChunkTimeline-compatible view for simulator-consuming code."""
+        return StreamResult(
+            timelines=list(self.timelines),
+            ttft_s=self.ttft_s,
+            configs=list(self.configs),
+            slo_s=self.slo_s,
+        )
+
+
+class ServeSession:
+    """Bandwidth-adaptive context load: decide → fetch → decode/recompute.
+
+    One instance is reusable across requests (it holds no per-request
+    state); each :meth:`run` builds a fresh policy and serving cache.
+    """
+
+    def __init__(
+        self,
+        streamer: CacheGenStreamer,
+        engine: Engine,
+        *,
+        slo_s: float,
+        recompute_s: Callable[[int, int], float],  # (chunk_tokens, prefix) -> s
+        decode_bytes_per_s: Optional[float] = None,
+        default_level: Optional[int] = None,
+        allow_text: bool = True,
+        adapt: bool = True,
+        fixed_level: Optional[int] = None,
+        hedge_after_s: Optional[float] = None,
+        final_step_s: float = 0.0,
+        max_run_tokens: Optional[int] = None,
+        validate_blobs: bool = True,
+    ):
+        self.streamer = streamer
+        self.engine = engine
+        self.slo_s = slo_s
+        self.recompute_s = recompute_s
+        self.decode_bytes_per_s = (
+            decode_bytes_per_s
+            if decode_bytes_per_s is not None
+            else measured_decode_bytes_per_s()
+        )
+        self.default_level = default_level
+        self.allow_text = allow_text
+        self.adapt = adapt
+        self.fixed_level = fixed_level
+        self.hedge_after_s = hedge_after_s
+        self.final_step_s = final_step_s
+        self.max_run_tokens = max_run_tokens
+        self.validate_blobs = validate_blobs
+
+    # ------------------------------------------------------------------
+
+    def run(
+        self,
+        context_id: str,
+        tokens: np.ndarray,  # (B, T) full context tokens (for TEXT chunks)
+        network: NetworkModel,
+        *,
+        batch: int = 1,
+        prior_throughput_gbps: Optional[float] = None,
+        start_t: float = 0.0,
+    ) -> SessionResult:
+        store = self.streamer.store
+        metas = store.meta(context_id)
+        policy = make_policy(
+            store.tables.config.n_levels,
+            slo_s=self.slo_s,
+            default_level=self.default_level,
+            prior_throughput_gbps=prior_throughput_gbps,
+            allow_text=self.allow_text,
+            adapt=self.adapt,
+            fixed_level=self.fixed_level,
+        )
+        caches = self.engine.empty_caches(batch)
+        if caches.kv_k is None:
+            raise ValueError(
+                f"ServeSession needs a KV-cache family, got {self.engine.cfg.family}"
+            )
+        segmenter = RunSegmenter(self.max_run_tokens)
+        # the simulator's per-chunk loop body, verbatim: decide -> fetch
+        # (hedging included) -> charge the virtual compute window -> observe
+        clock = StreamClock(
+            policy=policy,
+            network=network,
+            decode_bytes_per_s=self.decode_bytes_per_s,
+            recompute_s=self.recompute_s,
+            hedge_after_s=self.hedge_after_s,
+            start_t=start_t,
+        )
+        timelines: List[ChunkTimeline] = []
+        state = _ExecState()
+        wall0 = time.perf_counter()
+
+        for i, m in enumerate(metas):
+            tl = clock.step(metas, i)
+            timelines.append(tl)
+
+            # --- real work: fetch blob, segment, decode/recompute ----------
+            if tl.config == TEXT:
+                segs = segmenter.push(m, TEXT)
+            else:
+                blob = store.get_kv(context_id, m.chunk_idx, tl.config)
+                if self.validate_blobs:
+                    self._validate_blob(blob, m, tl.config)
+                segs = segmenter.push(m, tl.config, blob)
+            caches = self._execute(segs, caches, tokens, state)
+
+        caches = self._execute(segmenter.flush(), caches, tokens, state)
+        if caches.kv_k is not None:
+            jax.block_until_ready(caches.kv_k)
+        wall_total = time.perf_counter() - wall0
+        return SessionResult(
+            timelines=timelines,
+            configs=[t.config for t in timelines],
+            ttft_s=clock.ttft_s(timelines, self.final_step_s),
+            slo_s=self.slo_s,
+            caches=caches,
+            wall_decode_s=state.decode_s,
+            wall_recompute_s=state.recompute_s,
+            wall_total_s=wall_total,
+            n_runs=state.runs,
+        )
+
+    # ------------------------------------------------------------------
+
+    def _validate_blob(self, blob: bytes, meta, level: int) -> None:
+        h = kvcodec.peek_chunk_header(blob)
+        # chunk_idx is present on store-written blobs; standalone encodes
+        # (no identity known) skip that part of the check.  Missing v1 keys
+        # (foreign/corrupt producer) are a mismatch, not a KeyError.
+        idx = h.get("chunk_idx", meta.chunk_idx)
+        if (
+            h.get("level") != level
+            or h.get("n_tokens") != meta.n_tokens
+            or idx != meta.chunk_idx
+        ):
+            raise ValueError(
+                f"storage returned a mismatched bitstream for chunk "
+                f"{meta.chunk_idx}: header level={h.get('level')} "
+                f"tokens={h.get('n_tokens')} chunk_idx={h.get('chunk_idx')}, "
+                f"plan wants level={level} tokens={meta.n_tokens}"
+            )
+
+    def _execute(
+        self,
+        segs: List[PlanSegment],
+        caches: Caches,
+        tokens: np.ndarray,
+        state: "_ExecState",
+    ) -> Caches:
+        store = self.streamer.store
+        for seg in segs:
+            # positional bookkeeping: every segment must start exactly where
+            # the materialized prefix ends (host-side counter — reading
+            # caches.length here would force a device sync per segment and
+            # stall the decode/fetch overlap)
+            if seg.start != state.offset:
+                raise AssertionError(
+                    f"segment starts at token {seg.start} but {state.offset} "
+                    "tokens are materialized; decoded/recomputed chunk "
+                    "interleaving lost sync"
+                )
+            state.offset = seg.end
+            if seg.kind == "text":
+                t0 = time.perf_counter()
+                _, caches = self.engine.prefill_extend(
+                    jnp.asarray(tokens[:, seg.start : seg.end], jnp.int32), caches
+                )
+                state.recompute_s += time.perf_counter() - t0
+            else:
+                t0 = time.perf_counter()
+                kv_run = kvcodec.decode_chunks(
+                    seg.blobs, store.tables, out_dtype=caches.kv_k.dtype
+                )
+                caches = self.engine.decode_to_cache(caches, kv_run, seg.start)
+                state.decode_s += time.perf_counter() - t0
+                state.runs += 1
+        return caches
+
+
+@dataclasses.dataclass
+class _ExecState:
+    """Mutable per-run execution state: wall-clock accumulators plus the
+    positional-bookkeeping cursor (`offset` = tokens materialized so far)."""
+
+    decode_s: float = 0.0
+    recompute_s: float = 0.0
+    runs: int = 0
+    offset: int = 0

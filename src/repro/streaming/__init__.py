@@ -1,6 +1,11 @@
-from repro.streaming.adaptation import TEXT, AdaptationPolicy  # noqa: F401
+from repro.streaming.adaptation import TEXT, AdaptationPolicy, make_policy  # noqa: F401
 from repro.streaming.calibration import measured_decode_bytes_per_s  # noqa: F401
 from repro.streaming.network import BandwidthTrace, NetworkModel  # noqa: F401
 from repro.streaming.pipeline import StreamResult, simulate_stream  # noqa: F401
 from repro.streaming.storage import KVStore  # noqa: F401
-from repro.streaming.streamer import CacheGenStreamer  # noqa: F401
+from repro.streaming.streamer import (  # noqa: F401
+    CacheGenStreamer,
+    PlanSegment,
+    RunSegmenter,
+    segment_plan,
+)

@@ -15,7 +15,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
-__all__ = ["StreamConfig", "TEXT", "choose_config", "AdaptationPolicy"]
+__all__ = [
+    "StreamConfig",
+    "TEXT",
+    "choose_config",
+    "AdaptationPolicy",
+    "make_policy",
+]
 
 TEXT = -1  # sentinel streaming configuration: send text + recompute
 
@@ -101,3 +107,46 @@ class AdaptationPolicy:
 
     def observe_throughput(self, gbps: float) -> None:
         self._throughput = gbps
+
+
+def make_policy(
+    n_levels: int,
+    *,
+    slo_s: float,
+    default_level: Optional[int] = None,
+    prior_throughput_gbps: Optional[float] = None,
+    allow_text: bool = True,
+    adapt: bool = True,
+    fixed_level: Optional[int] = None,
+) -> AdaptationPolicy:
+    """Canonical policy construction shared by the offline simulator entry
+    point (``CacheGenStreamer.stream``) and the live ``ServeSession``.
+
+    ``fixed_level`` (or ``adapt=False``) pins a single representation with no
+    text fallback — the "no adaptation" baseline; otherwise all levels are
+    candidates in quality order (0 = least loss).
+    """
+    if fixed_level is not None or not adapt:
+        lvl = fixed_level if fixed_level is not None else (
+            default_level if default_level is not None else 1
+        )
+        if not 0 <= lvl < n_levels:
+            raise ValueError(
+                f"pinned level {lvl} out of range for {n_levels} levels"
+            )
+        return AdaptationPolicy(
+            levels_quality_order=[lvl],
+            slo_s=slo_s,
+            default_level=lvl,
+            prior_throughput_gbps=prior_throughput_gbps,
+            allow_text=False,
+        )
+    return AdaptationPolicy(
+        levels_quality_order=list(range(n_levels)),
+        slo_s=slo_s,
+        default_level=default_level
+        if default_level is not None
+        else min(1, n_levels - 1),
+        prior_throughput_gbps=prior_throughput_gbps,
+        allow_text=allow_text,
+    )

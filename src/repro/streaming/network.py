@@ -18,9 +18,14 @@ __all__ = ["BandwidthTrace", "NetworkModel"]
 
 @dataclasses.dataclass(frozen=True)
 class BandwidthTrace:
-    """Piecewise-constant bandwidth.  times[i] is the start of segment i."""
+    """Piecewise-constant bandwidth.  times[i] is the start of segment i.
 
-    times: np.ndarray  # (N,) seconds, increasing, times[0] == 0
+    Zero-length segments (``times[i] == times[i+1]``) are permitted — they
+    appear when traces are spliced or resampled — and carry no bytes; at a
+    duplicated instant the *last* segment starting there is in effect.
+    """
+
+    times: np.ndarray  # (N,) seconds, non-decreasing, times[0] == 0
     gbps: np.ndarray  # (N,) bandwidth in Gbit/s for [times[i], times[i+1])
 
     def __post_init__(self):
@@ -28,8 +33,8 @@ class BandwidthTrace:
         g = np.asarray(self.gbps, dtype=np.float64)
         if t.ndim != 1 or t.shape != g.shape or t[0] != 0.0:
             raise ValueError("bad trace")
-        if (np.diff(t) <= 0).any() or (g <= 0).any():
-            raise ValueError("times must increase; bandwidth must be positive")
+        if (np.diff(t) < 0).any() or (g <= 0).any():
+            raise ValueError("times must be non-decreasing; bandwidth must be positive")
         object.__setattr__(self, "times", t)
         object.__setattr__(self, "gbps", g)
 
@@ -82,6 +87,27 @@ class BandwidthTrace:
                 t = seg_end
                 i += 1
         return t - float(start_t)
+
+    def bytes_in_window(self, duration: float, start_t: float) -> float:
+        """Bytes transferable in ``[start_t, start_t + duration)``.
+
+        Byte-integration inverse of :meth:`transmit_time`:
+        ``transmit_time(bytes_in_window(d, t), t) == d`` for any ``d > 0``
+        (bandwidth is strictly positive on every segment), and
+        ``bytes_in_window(transmit_time(nbytes, t), t) == nbytes``.
+        """
+        t = float(start_t)
+        end = t + float(duration)
+        i = int(np.searchsorted(self.times, t, side="right") - 1)
+        i = max(i, 0)
+        bits = 0.0
+        while t < end:
+            seg_end = self.times[i + 1] if i + 1 < len(self.times) else np.inf
+            stop = min(seg_end, end)
+            bits += self.gbps[i] * 1e9 * (stop - t)
+            t = stop
+            i += 1
+        return bits / 8.0
 
     def measured_throughput_gbps(self, nbytes: float, start_t: float) -> float:
         """What a sender would measure for this transfer (paper's estimator)."""

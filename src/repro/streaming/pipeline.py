@@ -22,7 +22,13 @@ from repro.streaming.calibration import measured_decode_bytes_per_s
 from repro.streaming.network import NetworkModel
 from repro.streaming.storage import ChunkMeta
 
-__all__ = ["ChunkTimeline", "StreamResult", "simulate_stream"]
+__all__ = [
+    "ChunkTimeline",
+    "StreamResult",
+    "StreamClock",
+    "remaining_work",
+    "simulate_stream",
+]
 
 
 @dataclasses.dataclass
@@ -53,6 +59,117 @@ class StreamResult:
         return sum(t.nbytes for t in self.timelines)
 
 
+def remaining_work(
+    metas: List[ChunkMeta],
+    i: int,
+    prefix_tokens: int,
+    recompute_s: Callable[[int, int], float],
+) -> tuple:
+    """Algorithm 1 decision inputs for chunk ``i``: (per-level remaining
+    bytes, remaining text bytes, remaining recompute seconds).
+
+    Shared by :func:`simulate_stream` and ``serving.session.ServeSession``
+    so the live loop's per-chunk decisions match the simulator's by
+    construction (the differential harness in tests/test_session.py then
+    checks the *rest* of each loop, not two re-implementations of this).
+    """
+    levels = list(metas[0].sizes.keys()) if metas else []
+    remaining = metas[i:]
+    remaining_sizes = {
+        lvl: float(sum(r.sizes[lvl] for r in remaining)) for lvl in levels
+    }
+    remaining_text = float(sum(r.text_bytes for r in remaining))
+    rem_recompute = 0.0
+    ptoks = prefix_tokens
+    for r in remaining:
+        rem_recompute += recompute_s(r.n_tokens, ptoks)
+        ptoks += r.n_tokens
+    return remaining_sizes, remaining_text, rem_recompute
+
+
+@dataclasses.dataclass
+class StreamClock:
+    """The Algorithm 1 per-chunk loop body on the virtual clock: decide →
+    fetch (with hedging) → charge the compute window → observe throughput.
+
+    Single implementation shared by :func:`simulate_stream` and the live
+    ``serving.session.ServeSession`` — the session's decisions and TTFT
+    accounting match the simulator *by construction*; the differential
+    harness in tests/test_session.py then checks what each loop does
+    around this step, not two copies of the step itself.
+    """
+
+    policy: AdaptationPolicy
+    network: NetworkModel
+    decode_bytes_per_s: float
+    recompute_s: Callable[[int, int], float]  # (chunk_tokens, prefix) -> s
+    hedge_after_s: Optional[float] = None
+    start_t: float = 0.0
+
+    def __post_init__(self):
+        self.fetch_t = self.start_t  # network busy-until
+        self.compute_t = self.start_t  # accelerator busy-until
+        self.prefix_tokens = 0
+
+    def step(self, metas: List[ChunkMeta], i: int) -> ChunkTimeline:
+        m = metas[i]
+        remaining_sizes, remaining_text, rem_recompute = remaining_work(
+            metas, i, self.prefix_tokens, self.recompute_s
+        )
+        cfg = self.policy.next_config(
+            elapsed_s=self.fetch_t - self.start_t,
+            remaining_sizes=remaining_sizes,
+            remaining_text_bytes=remaining_text,
+            remaining_recompute_s=rem_recompute,
+        )
+        nbytes = float(m.text_bytes if cfg.config == TEXT else m.sizes[cfg.config])
+
+        # --- fetch (network resource), with optional hedging ---------------
+        base_fetch = self.network.fetch_time(nbytes, self.fetch_t)
+        hedged = False
+        if self.hedge_after_s is not None and base_fetch > self.hedge_after_s:
+            hedged_fetch = self.hedge_after_s + self.network.fetch_time(
+                nbytes, self.fetch_t + self.hedge_after_s, straggle=False
+            )
+            if hedged_fetch < base_fetch:
+                base_fetch = hedged_fetch
+                hedged = True
+        fetch_start = self.fetch_t
+        fetch_end = self.fetch_t + base_fetch
+        self.fetch_t = fetch_end
+
+        # --- compute (decode or recompute), pipelined with next fetch ------
+        if cfg.config == TEXT:
+            dur = self.recompute_s(m.n_tokens, self.prefix_tokens)
+        else:
+            dur = nbytes / self.decode_bytes_per_s
+        compute_start = max(fetch_end, self.compute_t)
+        compute_end = compute_start + dur
+        self.compute_t = compute_end
+
+        timeline = ChunkTimeline(
+            chunk_idx=i,
+            config=cfg.config,
+            nbytes=nbytes,
+            fetch_start=fetch_start,
+            fetch_end=fetch_end,
+            compute_start=compute_start,
+            compute_end=compute_end,
+            hedged=hedged,
+        )
+        self.prefix_tokens += m.n_tokens
+        self.policy.observe_throughput(
+            self.network.trace.measured_throughput_gbps(
+                max(nbytes, 1.0), fetch_start
+            )
+        )
+        return timeline
+
+    def ttft_s(self, timelines: List[ChunkTimeline], final_step_s: float) -> float:
+        last = timelines[-1].compute_end if timelines else self.start_t
+        return last + final_step_s - self.start_t
+
+
 def simulate_stream(
     metas: List[ChunkMeta],
     policy: AdaptationPolicy,
@@ -67,76 +184,18 @@ def simulate_stream(
     # default: this host's measured fused-decode throughput (BENCH_codec.json)
     if decode_bytes_per_s is None:
         decode_bytes_per_s = measured_decode_bytes_per_s()
-    n = len(metas)
-    levels = list(metas[0].sizes.keys()) if n else []
-    timelines: List[ChunkTimeline] = []
-    fetch_t = start_t  # network busy-until
-    compute_t = start_t  # accelerator busy-until
-    prefix_tokens = 0
-
-    for i, m in enumerate(metas):
-        remaining = metas[i:]
-        remaining_sizes = {
-            lvl: float(sum(r.sizes[lvl] for r in remaining)) for lvl in levels
-        }
-        remaining_text = float(sum(r.text_bytes for r in remaining))
-        rem_recompute = 0.0
-        ptoks = prefix_tokens
-        for r in remaining:
-            rem_recompute += recompute_s(r.n_tokens, ptoks)
-            ptoks += r.n_tokens
-        cfg = policy.next_config(
-            elapsed_s=fetch_t - start_t,
-            remaining_sizes=remaining_sizes,
-            remaining_text_bytes=remaining_text,
-            remaining_recompute_s=rem_recompute,
-        )
-        nbytes = float(m.text_bytes if cfg.config == TEXT else m.sizes[cfg.config])
-
-        # --- fetch (network resource), with optional hedging ---------------
-        base_fetch = network.fetch_time(nbytes, fetch_t)
-        hedged = False
-        if hedge_after_s is not None and base_fetch > hedge_after_s:
-            hedged_fetch = hedge_after_s + network.fetch_time(
-                nbytes, fetch_t + hedge_after_s, straggle=False
-            )
-            if hedged_fetch < base_fetch:
-                base_fetch = hedged_fetch
-                hedged = True
-        fetch_start = fetch_t
-        fetch_end = fetch_t + base_fetch
-        fetch_t = fetch_end
-
-        # --- compute (decode or recompute), pipelined with next fetch ------
-        if cfg.config == TEXT:
-            dur = recompute_s(m.n_tokens, prefix_tokens)
-        else:
-            dur = nbytes / decode_bytes_per_s
-        compute_start = max(fetch_end, compute_t)
-        compute_end = compute_start + dur
-        compute_t = compute_end
-
-        timelines.append(
-            ChunkTimeline(
-                chunk_idx=i,
-                config=cfg.config,
-                nbytes=nbytes,
-                fetch_start=fetch_start,
-                fetch_end=fetch_end,
-                compute_start=compute_start,
-                compute_end=compute_end,
-                hedged=hedged,
-            )
-        )
-        prefix_tokens += m.n_tokens
-        policy.observe_throughput(
-            network.trace.measured_throughput_gbps(max(nbytes, 1.0), fetch_start)
-        )
-
-    ttft = (timelines[-1].compute_end if timelines else start_t) + final_step_s - start_t
+    clock = StreamClock(
+        policy=policy,
+        network=network,
+        decode_bytes_per_s=decode_bytes_per_s,
+        recompute_s=recompute_s,
+        hedge_after_s=hedge_after_s,
+        start_t=start_t,
+    )
+    timelines = [clock.step(metas, i) for i in range(len(metas))]
     return StreamResult(
         timelines=timelines,
-        ttft_s=ttft,
+        ttft_s=clock.ttft_s(timelines, final_step_s),
         configs=[t.config for t in timelines],
         slo_s=policy.slo_s,
     )

@@ -78,10 +78,10 @@ class KVStore:
             if batch_all:
                 # batched: anchors symbolized/coded once, delta levels in one
                 # stacked rANS call (byte-identical to per-level encoding)
-                blobs = kvcodec.encode_all_levels(kv[:, :, s:e], self.tables)
+                blobs = kvcodec.encode_all_levels(kv[:, :, s:e], self.tables, ci)
             else:
                 blobs = {
-                    lvl: kvcodec.encode_chunk(kv[:, :, s:e], self.tables, lvl)
+                    lvl: kvcodec.encode_chunk(kv[:, :, s:e], self.tables, lvl, ci)
                     for lvl in levels
                 }
             sizes = {}
@@ -119,6 +119,12 @@ class KVStore:
             with open(self._path(context_id, chunk_idx, level), "rb") as f:
                 return f.read()
         return self._mem[(context_id, chunk_idx, level)]
+
+    def get_run(
+        self, context_id: str, chunk_levels: List[Tuple[int, int]]
+    ) -> List[bytes]:
+        """Fetch the bitstreams of one decode run: [(chunk_idx, level), ...]."""
+        return [self.get_kv(context_id, ci, lvl) for ci, lvl in chunk_levels]
 
     def meta(self, context_id: str) -> List[ChunkMeta]:
         return self._meta[context_id]

@@ -17,6 +17,12 @@ kernels, mixed levels welcome) and written into the serving cache with one
 donated-buffer ``Engine.decode_to_cache`` update — no per-chunk host
 round-trips and no per-chunk O(cache) copies.  ``fused=False`` keeps the
 seed per-chunk path as the correctness oracle.
+
+Run grouping lives in :class:`RunSegmenter` (PR 2): an *incremental*
+double-buffered segmenter that both the offline ``materialize`` (via
+:func:`segment_plan`, maximal runs) and the live closed-loop
+``serving.session.ServeSession`` (bounded runs, so decode of a full buffer
+overlaps the next fetches) drive — one grouping policy, two consumers.
 """
 from __future__ import annotations
 
@@ -31,12 +37,12 @@ from repro.core import codec as kvcodec
 from repro.models.lm import Caches
 from repro.serving.engine import Engine
 from repro.serving.kv_layout import caches_to_codec_kv
-from repro.streaming.adaptation import TEXT, AdaptationPolicy
+from repro.streaming.adaptation import TEXT, make_policy
 from repro.streaming.network import NetworkModel
 from repro.streaming.pipeline import StreamResult, simulate_stream
 from repro.streaming.storage import DEFAULT_CHUNK_TOKENS, ChunkMeta, KVStore
 
-__all__ = ["CacheGenStreamer"]
+__all__ = ["CacheGenStreamer", "PlanSegment", "RunSegmenter", "segment_plan"]
 
 
 @dataclasses.dataclass
@@ -44,6 +50,109 @@ class FetchPlan:
     context_id: str
     result: StreamResult
     metas: List[ChunkMeta]
+
+
+@dataclasses.dataclass
+class PlanSegment:
+    """One executable unit of a (partially) resolved plan: either a run of
+    consecutive bitstream chunks (one batched decode + one cache insertion)
+    or a single TEXT chunk (one ``prefill_extend`` recompute)."""
+
+    kind: str  # "run" | "text"
+    indices: List[int]  # chunk indices, stream order
+    configs: List[int]  # per chunk: encoding level, or TEXT
+    start: int  # first token covered
+    end: int  # one past the last token covered
+    blobs: Optional[List[bytes]] = None  # fetched bitstreams (online path)
+
+    @property
+    def n_tokens(self) -> int:
+        return self.end - self.start
+
+
+class RunSegmenter:
+    """Incremental, double-buffered plan segmenter.
+
+    Chunks are pushed in stream order as their fetches complete.  Bitstream
+    chunks accumulate in a pending buffer; a "run" segment is emitted when
+
+      * a TEXT chunk arrives — its recompute reads the cache at its own
+        token offset, so all buffered chunks must land in the cache first
+        (positional bookkeeping), or
+      * the buffer reaches ``max_run_tokens`` — the double-buffer
+        granularity: the emitted run's decode can proceed (asynchronously on
+        accelerator backends, where JAX dispatch doesn't block the host)
+        while subsequent fetches fill the next buffer, or
+      * the plan ends (:meth:`flush`).
+
+    ``max_run_tokens=None`` segments only at TEXT boundaries and plan end —
+    maximal runs, the offline ``materialize`` default (fewest, largest
+    batched decodes; no fetch/decode overlap to exploit offline).
+    """
+
+    def __init__(self, max_run_tokens: Optional[int] = None):
+        if max_run_tokens is not None and max_run_tokens <= 0:
+            raise ValueError("max_run_tokens must be positive or None")
+        self.max_run_tokens = max_run_tokens
+        self._buf: List[Tuple[ChunkMeta, int, Optional[bytes]]] = []
+
+    def _buffered_tokens(self) -> int:
+        return sum(m.n_tokens for m, _, _ in self._buf)
+
+    def push(
+        self, meta: ChunkMeta, config: int, blob: Optional[bytes] = None
+    ) -> List[PlanSegment]:
+        """Feed one resolved chunk; returns the segments now ready to execute."""
+        if config == TEXT:
+            out = self.flush()
+            out.append(
+                PlanSegment(
+                    kind="text",
+                    indices=[meta.chunk_idx],
+                    configs=[TEXT],
+                    start=meta.start,
+                    end=meta.end,
+                )
+            )
+            return out
+        self._buf.append((meta, config, blob))
+        if (
+            self.max_run_tokens is not None
+            and self._buffered_tokens() >= self.max_run_tokens
+        ):
+            return self.flush()
+        return []
+
+    def flush(self) -> List[PlanSegment]:
+        """Emit the pending run (if any) regardless of buffer fill."""
+        if not self._buf:
+            return []
+        metas = [m for m, _, _ in self._buf]
+        blobs = [b for _, _, b in self._buf]
+        seg = PlanSegment(
+            kind="run",
+            indices=[m.chunk_idx for m in metas],
+            configs=[c for _, c, _ in self._buf],
+            start=metas[0].start,
+            end=metas[-1].end,
+            blobs=None if any(b is None for b in blobs) else blobs,
+        )
+        self._buf = []
+        return [seg]
+
+
+def segment_plan(
+    metas: Sequence[ChunkMeta],
+    configs: Sequence[int],
+    max_run_tokens: Optional[int] = None,
+) -> List[PlanSegment]:
+    """Offline segmentation of a fully resolved plan (metas + chosen configs)."""
+    seg = RunSegmenter(max_run_tokens)
+    out: List[PlanSegment] = []
+    for meta, config in zip(metas, configs):
+        out.extend(seg.push(meta, config))
+    out.extend(seg.flush())
+    return out
 
 
 class CacheGenStreamer:
@@ -84,29 +193,15 @@ class CacheGenStreamer:
         final_step_s: float = 0.0,
     ) -> FetchPlan:
         metas = self.store.meta(context_id)
-        n_levels = self.store.tables.config.n_levels
-        quality_order = list(range(n_levels))  # 0 = least loss
-        if fixed_level is not None or not adapt:
-            lvl = fixed_level if fixed_level is not None else (
-                default_level if default_level is not None else 1
-            )
-            policy = AdaptationPolicy(
-                levels_quality_order=[lvl],
-                slo_s=slo_s,
-                default_level=lvl,
-                prior_throughput_gbps=prior_throughput_gbps,
-                allow_text=False,
-            )
-        else:
-            policy = AdaptationPolicy(
-                levels_quality_order=quality_order,
-                slo_s=slo_s,
-                default_level=default_level
-                if default_level is not None
-                else min(1, n_levels - 1),
-                prior_throughput_gbps=prior_throughput_gbps,
-                allow_text=allow_text,
-            )
+        policy = make_policy(
+            self.store.tables.config.n_levels,
+            slo_s=slo_s,
+            default_level=default_level,
+            prior_throughput_gbps=prior_throughput_gbps,
+            allow_text=allow_text,
+            adapt=adapt,
+            fixed_level=fixed_level,
+        )
         result = simulate_stream(
             metas,
             policy,
@@ -140,29 +235,21 @@ class CacheGenStreamer:
         caches = engine.empty_caches(batch)
         if not fused or caches.kv_k is None:
             return self._materialize_reference(plan, engine, tokens, caches, batch)
-        items = list(zip(plan.metas, plan.result.configs))
-        i = 0
-        while i < len(items):
-            meta, config = items[i]
-            if config == TEXT:
+        for seg in segment_plan(plan.metas, plan.result.configs):
+            if seg.kind == "text":
                 _, caches = engine.prefill_extend(
-                    jnp.asarray(tokens[:, meta.start : meta.end], jnp.int32), caches
+                    jnp.asarray(tokens[:, seg.start : seg.end], jnp.int32), caches
                 )
-                i += 1
                 continue
             # run of consecutive bitstream chunks -> one batched decode +
             # one cache insertion
-            blobs = []
-            j = i
-            while j < len(items) and items[j][1] != TEXT:
-                m, lvl = items[j]
-                blobs.append(self.store.get_kv(plan.context_id, m.chunk_idx, lvl))
-                j += 1
+            blobs = self.store.get_run(
+                plan.context_id, list(zip(seg.indices, seg.configs))
+            )
             kv_run = kvcodec.decode_chunks(
                 blobs, self.store.tables, out_dtype=caches.kv_k.dtype
             )
-            caches = engine.decode_to_cache(caches, kv_run, meta.start)
-            i = j
+            caches = engine.decode_to_cache(caches, kv_run, seg.start)
         return caches
 
     def _materialize_reference(

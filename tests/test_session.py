@@ -1,0 +1,383 @@
+"""Differential harness: live ServeSession vs. offline simulator vs. oracle.
+
+Three-way cross-check of the adaptation stack (ISSUE 2):
+  * decisions — the closed-loop session must make exactly the simulator's
+    per-chunk config choices (same traces, same policy, same virtual clock),
+    including hedging and straggler tails;
+  * bytes/time — per-chunk wire bytes and the virtual-clock TTFT agree;
+  * materialization — the session's real decoded cache must equal the
+    no-network ``fused=False`` per-chunk oracle bit-exactly at level 0 and
+    within quantization tolerance at lossy levels, for any double-buffer
+    granularity;
+plus the engine-level interleaving invariant (recompute a middle chunk via
+``prefill_extend`` between two ``decode_to_cache`` runs) and the trace-matrix
+acceptance run of benchmarks/adaptive_session.py (slow job).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import codec as kvcodec
+from repro.serving.session import ServeSession
+from repro.streaming import CacheGenStreamer, KVStore
+from repro.streaming.adaptation import TEXT
+from repro.streaming.network import BandwidthTrace, NetworkModel
+from repro.streaming.pipeline import StreamResult
+from repro.streaming.streamer import segment_plan
+
+T_CTX = 100
+CHUNK = 20  # 5 chunks
+
+
+@pytest.fixture(scope="module")
+def sfix():
+    from repro.configs import registry
+    from repro.models import build
+    from repro.serving.engine import Engine
+    from repro.serving.kv_layout import caches_to_codec_kv
+
+    rng = np.random.default_rng(0)
+    cfg = registry.get("smollm-360m").tiny()
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, cache_capacity=T_CTX + 40)
+    tokens = rng.integers(0, cfg.vocab_size, size=(1, T_CTX)).astype(np.int32)
+    logits, caches = eng.calculate_kv({"tokens": jnp.asarray(tokens)})
+    kv = caches_to_codec_kv(caches, 0, T_CTX)
+    ctab = kvcodec.profile([kv], kvcodec.CodecConfig(precision=10))
+    store = KVStore(ctab)
+    streamer = CacheGenStreamer(store, cfg)
+    metas = store.store_kv("ctx", kv, chunk_tokens=CHUNK)
+    u = sum(m.sizes[1] for m in metas) * 8 / 1e9  # level-1 ctx in 1 s
+    return dict(cfg=cfg, eng=eng, tokens=tokens, logits=logits,
+                caches=caches, kv=kv, store=store, streamer=streamer,
+                metas=metas, u=u)
+
+
+def _traces(u):
+    return {
+        "flat": BandwidthTrace.constant(400 * u),
+        "falling": BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u]),
+        "oscillating": BandwidthTrace.steps(
+            0.15, [2.0 * u, 0.4 * u, 2.0 * u, 0.4 * u]
+        ),
+        "collapsed": BandwidthTrace.constant(0.002 * u),
+    }
+
+
+def _pair(sfix, trace, *, slo_s, recompute_s, net_kwargs=None, **kw):
+    """Run simulator and session on identical inputs; return (plan, result)."""
+    net_kwargs = net_kwargs or {}
+    plan = sfix["streamer"].stream(
+        "ctx", NetworkModel(trace, **net_kwargs), slo_s=slo_s,
+        decode_bytes_per_s=1e9, recompute_s=recompute_s,
+        **{k: v for k, v in kw.items() if k != "max_run_tokens"},
+    )
+    sess = ServeSession(
+        sfix["streamer"], sfix["eng"], slo_s=slo_s, recompute_s=recompute_s,
+        decode_bytes_per_s=1e9,
+        **{k: v for k, v in kw.items() if k != "prior_throughput_gbps"},
+    )
+    res = sess.run(
+        "ctx", sfix["tokens"], NetworkModel(trace, **net_kwargs),
+        prior_throughput_gbps=kw.get("prior_throughput_gbps"),
+    )
+    return plan, res
+
+
+def _assert_decisions_match(plan, res):
+    assert res.configs == plan.result.configs
+    assert [t.nbytes for t in res.timelines] == [
+        t.nbytes for t in plan.result.timelines
+    ]
+    assert [t.hedged for t in res.timelines] == [
+        t.hedged for t in plan.result.timelines
+    ]
+    assert abs(res.ttft_s - plan.result.ttft_s) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# differential: decisions and byte counts
+# ---------------------------------------------------------------------------
+
+
+def test_session_matches_simulator_decisions(sfix):
+    r_slow = lambda t, p: 100.0  # noqa: E731  (GPU busy: no TEXT)
+    r_mid = lambda t, p: 0.04 * t / CHUNK  # noqa: E731
+    for name, trace in _traces(sfix["u"]).items():
+        for recompute_s in (r_slow, r_mid):
+            plan, res = _pair(
+                sfix, trace, slo_s=1.25, recompute_s=recompute_s,
+                prior_throughput_gbps=float(trace.gbps[0]),
+            )
+            _assert_decisions_match(plan, res)
+
+
+def test_session_matches_simulator_on_sampled_traces(sfix):
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        trace = BandwidthTrace.sampled(
+            rng, 8, 0.2, 0.05 * sfix["u"], 5.0 * sfix["u"]
+        )
+        plan, res = _pair(
+            sfix, trace, slo_s=1.0,
+            recompute_s=lambda t, p: 0.05 * t / CHUNK,
+            prior_throughput_gbps=float(trace.gbps[0]),
+        )
+        _assert_decisions_match(plan, res)
+
+
+def test_session_matches_simulator_with_stragglers_and_hedging(sfix):
+    net_kwargs = dict(straggler_p=0.5, straggler_scale_s=0.5, seed=7)
+    for hedge in (None, 0.05):
+        plan, res = _pair(
+            sfix, BandwidthTrace.constant(30 * sfix["u"]), slo_s=2.0,
+            recompute_s=lambda t, p: 100.0, net_kwargs=net_kwargs,
+            prior_throughput_gbps=30 * sfix["u"], allow_text=False,
+            hedge_after_s=hedge,
+        )
+        _assert_decisions_match(plan, res)
+        if hedge is not None:
+            # the straggler model with these parameters must actually hedge
+            assert any(t.hedged for t in res.timelines)
+
+
+def test_session_stream_result_is_timeline_compatible(sfix):
+    trace = BandwidthTrace.constant(100 * sfix["u"])
+    _, res = _pair(
+        sfix, trace, slo_s=5.0, recompute_s=lambda t, p: 100.0,
+        prior_throughput_gbps=100 * sfix["u"], allow_text=False,
+    )
+    sr = res.stream_result()
+    assert isinstance(sr, StreamResult)
+    assert sr.configs == res.configs
+    assert sr.total_bytes == res.total_bytes
+    assert sr.slo_violated == res.slo_violated
+
+
+# ---------------------------------------------------------------------------
+# differential: materialization vs the fused=False oracle
+# ---------------------------------------------------------------------------
+
+
+def _oracle(sfix, plan):
+    return sfix["streamer"].materialize(
+        plan, sfix["eng"], sfix["tokens"], batch=1, fused=False
+    )
+
+
+def test_session_level0_bit_exact_vs_oracle(sfix):
+    trace = BandwidthTrace.constant(100 * sfix["u"])
+    plan = sfix["streamer"].stream(
+        "ctx", NetworkModel(trace), slo_s=30.0, decode_bytes_per_s=1e9,
+        recompute_s=lambda t, p: 100.0, prior_throughput_gbps=100 * sfix["u"],
+        fixed_level=0,
+    )
+    assert all(c == 0 for c in plan.result.configs)
+    ref = _oracle(sfix, plan)
+    # any double-buffer granularity must reproduce the oracle bit-exactly
+    for max_run_tokens in (None, 2 * CHUNK, CHUNK):
+        sess = ServeSession(
+            sfix["streamer"], sfix["eng"], slo_s=30.0,
+            recompute_s=lambda t, p: 100.0, decode_bytes_per_s=1e9,
+            fixed_level=0, max_run_tokens=max_run_tokens,
+        )
+        res = sess.run("ctx", sfix["tokens"], NetworkModel(trace),
+                       prior_throughput_gbps=100 * sfix["u"])
+        assert res.configs == plan.result.configs
+        assert int(res.caches.length[0]) == T_CTX
+        for a, b in ((res.caches.kv_k, ref.kv_k), (res.caches.kv_v, ref.kv_v)):
+            assert np.array_equal(
+                np.asarray(a[:, :, :T_CTX], np.float32),
+                np.asarray(b[:, :, :T_CTX], np.float32),
+            )
+
+
+def test_session_lossy_within_tolerance_vs_oracle(sfix):
+    trace = BandwidthTrace.steps(0.1, [0.9 * sfix["u"], 0.3 * sfix["u"]])
+    plan, res = _pair(
+        sfix, trace, slo_s=1.1, recompute_s=lambda t, p: 100.0,
+        prior_throughput_gbps=0.9 * sfix["u"], allow_text=False,
+        max_run_tokens=2 * CHUNK,
+    )
+    _assert_decisions_match(plan, res)
+    ref = _oracle(sfix, plan)
+    for a, b in ((res.caches.kv_k, ref.kv_k), (res.caches.kv_v, ref.kv_v)):
+        np.testing.assert_allclose(
+            np.asarray(a[:, :, :T_CTX], np.float32),
+            np.asarray(b[:, :, :T_CTX], np.float32),
+            atol=2e-2, rtol=2e-2,
+        )
+
+
+def test_session_text_interleave_matches_oracle(sfix):
+    """Falling trace + idle GPU: stream the head, TEXT-recompute the tail."""
+    u = sfix["u"]
+    trace = BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u])
+    r = lambda t, p: 0.15 * 1.25 * t / CHUNK  # noqa: E731
+    plan, res = _pair(sfix, trace, slo_s=1.25, recompute_s=r,
+                      max_run_tokens=2 * CHUNK)
+    _assert_decisions_match(plan, res)
+    assert TEXT in res.configs and any(c != TEXT for c in res.configs), (
+        "scenario must interleave bitstream and TEXT chunks", res.configs)
+    assert int(res.caches.length[0]) == T_CTX
+    ref = _oracle(sfix, plan)
+    for a, b in ((res.caches.kv_k, ref.kv_k), (res.caches.kv_v, ref.kv_v)):
+        np.testing.assert_allclose(
+            np.asarray(a[:, :, :T_CTX], np.float32),
+            np.asarray(b[:, :, :T_CTX], np.float32),
+            atol=2e-2, rtol=2e-2,
+        )
+
+
+def test_session_rejects_mismatched_blob(sfix):
+    """A storage server returning the wrong bitstream must fail loudly —
+    wrong level, and wrong chunk at the same level/token count (store-written
+    blobs carry chunk_idx in the header)."""
+    store, streamer = sfix["store"], sfix["streamer"]
+    trace = BandwidthTrace.constant(100 * sfix["u"])
+    good = store.get_kv("ctx", 0, 1)
+    sess = ServeSession(
+        streamer, sfix["eng"], slo_s=30.0, recompute_s=lambda t, p: 100.0,
+        decode_bytes_per_s=1e9, fixed_level=1,
+    )
+    for bad in (
+        store.get_kv("ctx", 0, 2),  # wrong level
+        store.get_kv("ctx", 1, 1),  # wrong chunk, same level + n_tokens
+    ):
+        try:
+            store._put("ctx", 0, 1, bad)
+            with pytest.raises(ValueError, match="mismatched bitstream"):
+                sess.run("ctx", sfix["tokens"], NetworkModel(trace),
+                         prior_throughput_gbps=100 * sfix["u"])
+        finally:
+            store._put("ctx", 0, 1, good)
+
+
+def test_peek_chunk_header_matches_full_unpack(sfix):
+    from repro.core import bitstream
+
+    blob = sfix["store"].get_kv("ctx", 2, 1)
+    h = kvcodec.peek_chunk_header(blob)
+    assert h == bitstream.unpack(blob)[0]
+    assert h["chunk_idx"] == 2 and h["level"] == 1 and h["n_tokens"] == CHUNK
+
+
+# ---------------------------------------------------------------------------
+# engine-level interleaving invariant (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_extend_decode_to_cache_interleave(sfix):
+    """Recompute a middle chunk while its neighbors come from bitstreams:
+    next-token logits must match the all-prefill reference within codec
+    tolerance (measured drift ~0.012 on this fixture)."""
+    eng, store, tokens = sfix["eng"], sfix["store"], sfix["tokens"]
+    caches = eng.empty_caches(1)
+    kv_run = kvcodec.decode_chunks(
+        store.get_run("ctx", [(0, 0), (1, 0)]), store.tables,
+        out_dtype=caches.kv_k.dtype,
+    )
+    caches = eng.decode_to_cache(caches, kv_run, 0)
+    assert int(caches.length[0]) == 40
+    _, caches = eng.prefill_extend(
+        jnp.asarray(tokens[:, 40:60], jnp.int32), caches
+    )
+    assert int(caches.length[0]) == 60
+    kv_run2 = kvcodec.decode_chunks(
+        store.get_run("ctx", [(3, 0), (4, 0)]), store.tables,
+        out_dtype=caches.kv_k.dtype,
+    )
+    caches = eng.decode_to_cache(caches, kv_run2, 60)
+    assert int(caches.length[0]) == T_CTX
+    caches_m = caches._replace(length=caches.length - 1)
+    logits, _ = eng._decode(
+        eng.params, jnp.asarray(tokens[:, -1:], jnp.int32), caches_m
+    )
+    drift = np.abs(
+        np.asarray(logits[:, -1], np.float32)
+        - np.asarray(sfix["logits"][:, -1], np.float32)
+    ).max()
+    assert drift < 0.1, drift
+
+
+def test_segment_plan_boundaries(sfix):
+    """Segmenter invariants: TEXT splits runs, max_run_tokens bounds them,
+    coverage is exact and ordered."""
+    metas = sfix["metas"]
+    configs = [0, 1, TEXT, 2, 4]
+    segs = segment_plan(metas, configs)
+    assert [s.kind for s in segs] == ["run", "text", "run"]
+    assert segs[0].configs == [0, 1] and segs[2].configs == [2, 4]
+    assert segs[0].start == 0 and segs[0].end == 40
+    assert segs[1].start == 40 and segs[1].end == 60
+    assert segs[2].start == 60 and segs[2].end == T_CTX
+    segs2 = segment_plan(metas, [1] * 5, max_run_tokens=2 * CHUNK)
+    assert [s.kind for s in segs2] == ["run", "run", "run"]
+    assert [s.n_tokens for s in segs2] == [40, 40, 20]
+    # full coverage, in order, no overlap
+    spans = [(s.start, s.end) for s in segs2]
+    assert spans[0][0] == 0 and spans[-1][1] == T_CTX
+    assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+
+
+# ---------------------------------------------------------------------------
+# trace-matrix acceptance (separate CI job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_adaptive_session_bench_acceptance(tmp_path):
+    """benchmarks/adaptive_session.py on CPU: the adaptive session meets an
+    SLO on the falling-bandwidth trace that the fixed-level baseline misses,
+    and the report carries level histograms + logit drift."""
+    from benchmarks.adaptive_session import run
+
+    report = run(("smollm-360m",), out_path=str(tmp_path / "BENCH_session.json"),
+                 verbose=False)
+    acc = report["acceptance"]["falling_adaptive_meets_slo_fixed_misses"]
+    assert acc["smollm-360m"] is True
+    rows = {
+        (r["trace"], r["mode"]): r
+        for r in report["scenarios"] if r["arch"] == "smollm-360m"
+    }
+    assert rows[("falling", "adaptive")]["slo_ok"]
+    assert not rows[("falling", "fixed")]["slo_ok"]
+    for r in rows.values():
+        assert r["levels"] and np.isfinite(r["logit_drift_max"])
+    # adaptation delivers finer levels (lower drift) when bandwidth allows
+    assert (
+        rows[("oscillating", "adaptive")]["logit_drift_max"]
+        <= rows[("oscillating", "fixed")]["logit_drift_max"]
+    )
+
+
+@pytest.mark.slow
+def test_session_simulator_differential_matrix(sfix):
+    """Wider randomized differential sweep (trace shapes x seeds x knobs)."""
+    u = sfix["u"]
+    for seed in range(8):
+        rng = np.random.default_rng(100 + seed)
+        trace = BandwidthTrace.sampled(rng, 10, 0.15, 0.03 * u, 8.0 * u)
+        for kw in (
+            dict(prior_throughput_gbps=float(trace.gbps[0])),
+            dict(prior_throughput_gbps=None),
+            dict(prior_throughput_gbps=float(trace.gbps[0]), allow_text=False),
+            dict(prior_throughput_gbps=float(trace.gbps[0]), fixed_level=3),
+        ):
+            plan, res = _pair(
+                sfix, trace, slo_s=float(rng.uniform(0.3, 2.0)),
+                recompute_s=lambda t, p: 0.06 * t / CHUNK,
+                net_kwargs=dict(straggler_p=0.2, straggler_scale_s=0.2,
+                                seed=seed),
+                hedge_after_s=0.3, **kw,
+            )
+            _assert_decisions_match(plan, res)
+            ref = _oracle(sfix, plan)
+            for a, b in ((res.caches.kv_k, ref.kv_k), (res.caches.kv_v, ref.kv_v)):
+                np.testing.assert_allclose(
+                    np.asarray(a[:, :, :T_CTX], np.float32),
+                    np.asarray(b[:, :, :T_CTX], np.float32),
+                    atol=2e-2, rtol=2e-2,
+                )

@@ -26,6 +26,49 @@ def test_trace_transmit_integrates_segments():
     assert abs(t2 - 0.5) < 1e-9
 
 
+def _random_trace(rng) -> BandwidthTrace:
+    """Random piecewise trace, always containing a zero-length segment."""
+    n = int(rng.integers(3, 9))
+    durs = rng.uniform(0.0, 0.8, n - 1)
+    durs[int(rng.integers(n - 1))] = 0.0
+    times = np.concatenate([[0.0], np.cumsum(durs)])
+    gbps = np.exp(rng.uniform(np.log(0.05), np.log(5.0), n))
+    return BandwidthTrace(times, gbps)
+
+
+def test_trace_zero_length_segments():
+    tr = BandwidthTrace(
+        np.array([0.0, 1.0, 1.0, 2.0]), np.array([1.0, 8.0, 0.5, 2.0])
+    )
+    # at a duplicated instant the last segment starting there is in effect
+    assert tr.bandwidth_at(1.0) == 0.5
+    # 1 Gbit in the first second; the zero-length 8 Gbps segment carries
+    # nothing; then 0.5 Gbps
+    assert abs(tr.transmit_time(1.5e9 / 8, 0.0) - 2.0) < 1e-9
+    assert np.isclose(tr.bytes_in_window(2.0, 0.0), 1.5e9 / 8)
+    # fetch starting exactly on the duplicated boundary
+    assert np.isclose(tr.transmit_time(0.5e9 / 8, 1.0), 1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    start=st.floats(0, 3),
+    duration=st.floats(1e-4, 5.0),
+)
+def test_trace_transfer_byte_integration_roundtrip(seed, start, duration):
+    """transmit_time and bytes_in_window are inverses across segment
+    boundaries, zero-length segments, and mid-segment starts."""
+    rng = np.random.default_rng(seed)
+    tr = _random_trace(rng)
+    nb = tr.bytes_in_window(duration, start)
+    assert nb > 0  # bandwidth is strictly positive on every segment
+    assert np.isclose(tr.transmit_time(nb, start), duration, rtol=1e-6, atol=1e-9)
+    nbytes = float(rng.uniform(1.0, 1e8))
+    dur = tr.transmit_time(nbytes, start)
+    assert np.isclose(tr.bytes_in_window(dur, start), nbytes, rtol=1e-6)
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     nbytes=st.floats(1, 1e9),
@@ -92,6 +135,48 @@ def test_choose_config_best_effort_when_nothing_fits():
         levels_quality_order=[0, 1],
     )
     assert cfg.config == 1  # smallest representation
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 1_000_000),
+    thr=st.floats(0.01, 5.0),
+    tleft=st.floats(0.01, 4.0),
+    allow_text=st.booleans(),
+)
+def test_choose_config_properties(seed, thr, tleft, allow_text):
+    """Algorithm 1 invariants: (a) the choice meets the SLO whenever *any*
+    configuration can; (b) quality ordering is respected — never a lossier
+    level when a less lossy candidate also fits; (c) TEXT is only chosen
+    when its own projected delay fits (outside the best-effort case)."""
+    rng = np.random.default_rng(seed)
+    n_levels = int(rng.integers(2, 6))
+    sizes = {lvl: float(rng.uniform(1e4, 5e8)) for lvl in range(n_levels)}
+    text_bytes = float(rng.uniform(1e3, 1e7))
+    recompute = float(rng.uniform(0.0, 5.0))
+    cfg = choose_config(
+        remaining_sizes=sizes,
+        remaining_text_bytes=text_bytes,
+        remaining_recompute_s=recompute,
+        throughput_gbps=thr,
+        time_left_s=tleft,
+        levels_quality_order=list(range(n_levels)),
+        allow_text=allow_text,
+    )
+    proj = {lvl: sizes[lvl] * 8 / (thr * 1e9) for lvl in range(n_levels)}
+    order = list(range(n_levels))
+    if allow_text:
+        proj[TEXT] = recompute + text_bytes * 8 / (thr * 1e9)
+        order = [TEXT] + order
+    feasible = [c for c in order if proj[c] <= tleft]
+    if feasible:
+        assert proj[cfg.config] <= tleft  # (a)
+        assert cfg.config == feasible[0]  # (b)
+        if cfg.config == TEXT:
+            assert proj[TEXT] <= tleft  # (c)
+    else:  # best effort: smallest projected completion
+        assert proj[cfg.config] == min(proj.values())
+    assert np.isclose(cfg.projected_s, proj[cfg.config])
 
 
 @settings(max_examples=30, deadline=None)
