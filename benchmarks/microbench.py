@@ -7,11 +7,16 @@ workload and writes ``BENCH_codec.json`` (repo root):
   chunk, each result pulled to host numpy (what ``store.decode`` +
   per-chunk insertion did);
 * ``fused``  — the batched pipeline: one ``codec.decode_chunks`` call over
-  all chunks (stacked rANS scans + fused dequant), result left on device.
+  all chunks (stacked rANS scans + fused dequant), result left on device;
+* ``stacked`` — cross-request stacking (per M in {1, 2, 4, 8}): M requests'
+  chunk runs decoded as M separate ``decode_chunks`` calls vs. *one*
+  ``decode_chunk_runs`` call over all of them — the concurrent scheduler's
+  hot path.
 
 ``streaming.calibration`` reads the fused bytes/s back as the simulator's
 ``decode_bytes_per_s`` default, so TTFT numbers track the real codec across
-PRs.
+PRs; the ``stacked`` aggregate rates calibrate the multi-session contention
+model (``measured_contention_factors`` → ``pipeline.ContentionModel``).
 """
 from __future__ import annotations
 
@@ -53,7 +58,8 @@ def _time_best(fn, n=5):
 
 
 def _codec_decode_bench(rows: List[str]) -> None:
-    """Fused vs unfused decode throughput on a multi-chunk workload."""
+    """Fused vs unfused decode throughput on a multi-chunk workload, plus
+    cross-request stacked decode throughput (M requests' runs in one scan)."""
     rng = np.random.default_rng(42)
     # ~paper geometry ratio: a long context split into O(10) chunks
     L, C, T_chunk, n_chunks = 6, 64, 128, 16
@@ -107,14 +113,15 @@ def _codec_decode_bench(rows: List[str]) -> None:
             "tokens_per_s": n_tokens / t_fused,
         },
         "speedup": speedup,
+        "stacked": _stacked_decode_bench(rows, ct, mk_kv),
     }
     with open(_BENCH_PATH, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
     # later benchmarks in this process must see the fresh measurement
-    from repro.streaming import calibration
+    from repro.streaming.calibration import clear_calibration_cache
 
-    calibration._MEMO.clear()
+    clear_calibration_cache()
 
     rows.append(
         f"micro.codec_decode_unfused,{t_unfused*1e6:.0f},"
@@ -125,6 +132,67 @@ def _codec_decode_bench(rows: List[str]) -> None:
         f"bytes_per_s={n_bytes/t_fused:.3e};tok_per_s={n_tokens/t_fused:.3e}"
     )
     rows.append(f"micro.codec_decode_speedup,,x{speedup:.2f}")
+
+
+def _stacked_decode_bench(rows: List[str], ct, mk_kv) -> dict:
+    """Cross-request stacked decode: M requests' runs in one scan vs. M
+    separate ``decode_chunks`` calls (the concurrent scheduler's choice).
+
+    The per-M aggregate stacked rate is what ``calibration.
+    measured_contention_factors`` turns into the scheduler's contention
+    model: factor(M) = M * rate(1) / rate(M).
+    """
+    chunks_per_run, T_chunk = 4, 64
+    out: dict = {}
+    for m in (1, 2, 4, 8):
+        runs = []
+        for r in range(m):
+            # per-request adaptive level mix, varied across requests
+            lvls = [(0, 1, 1, 2)[(r + i) % 4] for i in range(chunks_per_run)]
+            runs.append(
+                [kvcodec.encode_chunk(mk_kv(T_chunk), ct, l) for l in lvls]
+            )
+        n_bytes = sum(len(b) for run in runs for b in run)
+        n_tokens = m * chunks_per_run * T_chunk
+
+        def sequential():
+            # one dispatch chain per request, synced at each request's end
+            return [
+                jax.block_until_ready(
+                    kvcodec.decode_chunks(run, ct, out_dtype=jnp.bfloat16)
+                )
+                for run in runs
+            ]
+
+        def stacked():
+            kv, _ = kvcodec.decode_chunk_runs(runs, ct, out_dtype=jnp.bfloat16)
+            return jax.block_until_ready(kv)
+
+        t_seq = _time_best(sequential, n=5)
+        t_stk = _time_best(stacked, n=5)
+        out[str(m)] = {
+            "n_requests": m,
+            "chunks_per_run": chunks_per_run,
+            "chunk_tokens": T_chunk,
+            "wire_bytes": n_bytes,
+            "tokens": n_tokens,
+            "sequential": {
+                "s_per_call": t_seq,
+                "bytes_per_s": n_bytes / t_seq,
+                "tokens_per_s": n_tokens / t_seq,
+            },
+            "stacked": {
+                "s_per_call": t_stk,
+                "bytes_per_s": n_bytes / t_stk,
+                "tokens_per_s": n_tokens / t_stk,
+            },
+            "speedup": t_seq / t_stk,
+        }
+        rows.append(
+            f"micro.codec_decode_stacked_m{m},{t_stk*1e6:.0f},"
+            f"bytes_per_s={n_bytes/t_stk:.3e};vs_sequential=x{t_seq/t_stk:.2f}"
+        )
+    return out
 
 
 def run(wl=None) -> List[str]:

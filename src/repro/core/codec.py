@@ -58,6 +58,7 @@ __all__ = [
     "peek_chunk_header",
     "decode_chunk",
     "decode_chunks",
+    "decode_chunk_runs",
     "encode_all_levels",
     "ensure_stacks",
     "kv_nbytes_fp16",
@@ -602,6 +603,68 @@ def decode_chunks(
         interpret=interpret,
         block_groups=block_groups,
     )
+
+
+def decode_chunk_runs(
+    runs: Sequence[Sequence[bytes]],
+    ct: CodecTables,
+    *,
+    out_dtype=jnp.float32,
+    use_pallas: Optional[bool] = None,
+    block_groups: int = 8,
+    run_tokens: Optional[Sequence[int]] = None,
+) -> Tuple[jnp.ndarray, List[Tuple[int, int]]]:
+    """Cross-request run assembly: several requests' chunk runs, one decode.
+
+    ``runs`` is one entry per request — that request's consecutive bitstream
+    chunks (what a single :func:`decode_chunks` call would take).  All runs
+    are flattened into *one* pair of lane-stacked rANS scans and one jitted
+    assemble (``decode_chunks``), so N concurrent requests cost the same
+    number of device dispatches as one.  The jit signature is shaped by the
+    flattened run geometry (chunk token counts + lossy/lossless split)
+    exactly as for a single-request call — request identity (which run a
+    chunk came from) never enters the trace; it only determines how the
+    caller slices the output.
+
+    Returns ``(kv, spans)``: ``kv`` is the token-major concat
+    ``(L, 2, sum_all_T, C)`` of every chunk of every run in order, and
+    ``spans[r] = (token_offset, n_tokens)`` locates request ``r``'s run
+    inside it.  Slicing ``kv[:, :, off : off + n]`` is bit-identical to the
+    request's own ``decode_chunks`` output (the assemble is elementwise per
+    chunk; stacking mates cannot perturb it).
+
+    ``run_tokens`` (optional) supplies each run's known token count so the
+    span computation skips re-parsing headers the caller already validated
+    (the scheduler checks every fetched blob against its plan at fetch
+    time); when given it is cross-checked against the decoded total.
+    """
+    if not runs or any(not r for r in runs):
+        raise ValueError("decode_chunk_runs needs non-empty runs")
+    flat: List[bytes] = [b for run in runs for b in run]
+    kv = decode_chunks(
+        flat, ct, out_dtype=out_dtype, use_pallas=use_pallas,
+        block_groups=block_groups,
+    )
+    if run_tokens is None:
+        run_tokens = [
+            sum(int(peek_chunk_header(b)["n_tokens"]) for b in run)
+            for run in runs
+        ]
+    elif len(run_tokens) != len(runs):
+        raise ValueError(
+            f"run_tokens covers {len(run_tokens)} runs, got {len(runs)}"
+        )
+    if sum(run_tokens) != kv.shape[2]:
+        raise ValueError(
+            f"runs decode to {kv.shape[2]} tokens but run_tokens sums to "
+            f"{sum(run_tokens)}; bitstream/plan divergence"
+        )
+    spans: List[Tuple[int, int]] = []
+    off = 0
+    for n in run_tokens:
+        spans.append((off, int(n)))
+        off += int(n)
+    return kv, spans
 
 
 def encode_all_levels(

@@ -401,13 +401,57 @@ def _extend_mha(q, kc, vc, cache_len, n_new):
     return jnp.einsum("bhqk,bkhd->bqhd", w.astype(vh.dtype), vh)
 
 
-def prefill_extend(cfg: ArchConfig, params, tokens, caches: Caches):
+def masked_window_update(cache, new, start, width):
+    """Commit ``new[:width]`` into ``cache[start : start + width]``.
+
+    ``cache`` is (S, ...), ``new`` is (T, ...) with the same trailing dims,
+    token axis leading; ``start``/``width`` are traced scalars.  The single
+    shared implementation of the *shifted* read-merge-write window used by
+    every masked per-row cache write (``prefill_extend`` with widths here;
+    ``serving.kv_layout.insert_codec_runs`` vmaps it over layers too):
+    ``dynamic_slice`` clamps the window start when ``start + T`` overhangs
+    ``S``, so the merge is expressed in window coordinates — token ``j`` of
+    ``new`` lives at window position ``j + shift``, and everything outside
+    ``[shift, shift + width)`` keeps the current contents verbatim (a
+    ``width == 0`` row is preserved exactly, even when its stale ``start``
+    abuts capacity).  Requires only that the *committed* tokens fit:
+    ``start + width <= S``.
+    """
+    T = new.shape[0]
+    S = cache.shape[0]
+    start_c = jnp.clip(start, 0, S - T)
+    shift = start - start_c
+    p = jnp.arange(T, dtype=jnp.int32)
+    new_s = jnp.take(new, jnp.clip(p - shift, 0, T - 1), axis=0)
+    keep = ((p >= shift) & (p < shift + width))[
+        (...,) + (None,) * (cache.ndim - 1)
+    ]
+    cur = jax.lax.dynamic_slice(
+        cache, (start_c,) + (0,) * (cache.ndim - 1), (T,) + cache.shape[1:]
+    )
+    merged = jnp.where(keep, new_s.astype(cache.dtype), cur)
+    return jax.lax.dynamic_update_slice(
+        cache, merged, (start_c,) + (0,) * (cache.ndim - 1)
+    )
+
+
+def prefill_extend(cfg: ArchConfig, params, tokens, caches: Caches,
+                   widths=None):
     """Compute KV for a text chunk *given* earlier chunks' KV (paper fn. 6:
     the LLM recomputes a text-format chunk based on the previous chunks'
     received-and-decoded KV).  Supported for attention families; SSM uses
     ``prefill`` with an initial state instead.
 
     tokens: (B, Tc).  Returns (last logits, updated caches).
+
+    ``widths`` (optional, (B,) int32 in [0, Tc]) masks the per-row cache
+    write: row ``b`` commits only its first ``widths[b]`` tokens and its
+    length advances by ``widths[b]``.  This is how the concurrent scheduler
+    coalesces different requests' TEXT recomputes into one padded batched
+    call — rows whose request has no TEXT chunk this round ride along with
+    width 0 and their cache/length are untouched (their logits are garbage
+    and must be ignored).  ``widths=None`` keeps the original full-width
+    write path unchanged.
     """
     if cfg.family not in ("dense", "moe", "vlm"):
         raise ValueError(f"prefill_extend not supported for family {cfg.family}")
@@ -418,16 +462,25 @@ def prefill_extend(cfg: ArchConfig, params, tokens, caches: Caches):
     x = _embed_tokens(cfg, params, tokens)
     positions = cache_len[:, None] + jnp.arange(Tc, dtype=jnp.int32)[None]
 
+    if widths is not None:
+        widths = widths.astype(jnp.int32)
+
+    def _write(cache, new, i):
+        if widths is None:
+            return jax.vmap(
+                lambda c, n, j: jax.lax.dynamic_update_slice_in_dim(
+                    c, n, j, axis=0
+                )
+            )(cache, new, i)
+        return jax.vmap(masked_window_update)(cache, new, i, widths)
+
     def body(h, xs):
         p_l, kc, vc = xs
         hn = apply_norm(cfg.norm, p_l["ln1"], h)
         q, k, v, k_pre = _project_qkv(cfg, p_l["attn"], hn, positions)
-        upd = jax.vmap(
-            lambda c, new, i: jax.lax.dynamic_update_slice_in_dim(c, new, i, axis=0)
-        )
         k_wr = k_pre if cfg.prerope_kv_cache else k
-        kc = upd(kc, k_wr.astype(kc.dtype), cache_len)
-        vc = upd(vc, v.astype(vc.dtype), cache_len)
+        kc = _write(kc, k_wr.astype(kc.dtype), cache_len)
+        vc = _write(vc, v.astype(vc.dtype), cache_len)
         if cfg.prerope_kv_cache:
             from repro.models.common import rope as _rope
 
@@ -456,7 +509,8 @@ def prefill_extend(cfg: ArchConfig, params, tokens, caches: Caches):
         body, x, (params["layers"], caches.kv_k, caches.kv_v), cfg.scan_unroll
     )
     logits = _logits(cfg, params, x[:, -1:])
-    return logits, caches._replace(kv_k=kc, kv_v=vc, length=cache_len + Tc)
+    adv = Tc if widths is None else widths
+    return logits, caches._replace(kv_k=kc, kv_v=vc, length=cache_len + adv)
 
 
 def decode_step(cfg: ArchConfig, params, tokens, caches: Caches):

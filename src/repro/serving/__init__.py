@@ -2,11 +2,16 @@ from repro.serving.engine import Engine  # noqa: F401
 
 
 def __getattr__(name):
-    # Lazy: session pulls in the streaming package (which itself imports
-    # repro.serving submodules) — deferring keeps the import graph acyclic
-    # regardless of which package a user imports first.
-    if name in ("ServeSession", "SessionResult"):
+    # Lazy: session/scheduler pull in the streaming package (which itself
+    # imports repro.serving submodules) — deferring keeps the import graph
+    # acyclic regardless of which package a user imports first.
+    if name in ("ServeSession", "SessionResult", "SessionTask", "RunWork",
+                "TextWork"):
         from repro.serving import session
 
         return getattr(session, name)
+    if name in ("ConcurrentScheduler", "SessionRequest", "SchedulerResult"):
+        from repro.serving import scheduler
+
+        return getattr(scheduler, name)
     raise AttributeError(name)

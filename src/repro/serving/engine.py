@@ -8,12 +8,23 @@ plus ``prefill_extend`` — compute a text chunk's KV on top of already-loaded
 chunk KV (the streamer's recompute fallback, paper §5.3 fn. 6) — and a
 greedy generation loop used by the examples and quality benchmarks.
 
-All steps are jit-compiled once per (batch, capacity) signature and cached.
+One Engine serves many concurrent context loads: a single instance (params,
+jit caches, one device) is shared by every ``serving.session.ServeSession``
+and by the ``serving.scheduler.ConcurrentScheduler``, which allocates a
+*batch-of-requests* cache (one row per live session) and drives the batched
+entry points — ``insert_runs`` (several requests' decoded runs landed at
+per-row offsets in one dispatch) and ``prefill_extend_rows`` (different
+requests' TEXT recomputes coalesced into one padded, width-masked forward).
+The per-request entry points (``decode_to_cache``, ``prefill_extend``)
+remain the single-session path and the scheduler's N=1 differential oracle.
+
+All steps are jit-compiled once per (batch, capacity[, run-geometry])
+signature and cached.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +49,48 @@ class Engine:
         self._decode = jax.jit(functools.partial(lm.decode_step, cfg))
         if cfg.family in ("dense", "moe", "vlm"):
             self._extend = jax.jit(functools.partial(lm.prefill_extend, cfg))
+            self._extend_rows = jax.jit(
+                lambda params, tokens, caches, widths: lm.prefill_extend(
+                    self.cfg, params, tokens, caches, widths=widths
+                )
+            )
         else:
             self._extend = None
+            self._extend_rows = None
         # Decoded-run insertion: donate the cache buffers so XLA performs an
         # in-place dynamic_update_slice instead of copying the whole cache
         # per insertion (donation is a no-op hint on CPU, where XLA warns).
         donate = () if jax.default_backend() == "cpu" else (0, 1)
         self._insert_run = jax.jit(kv_layout.insert_codec_run, donate_argnums=donate)
+        self._insert_runs = jax.jit(
+            kv_layout.insert_codec_runs,
+            donate_argnums=donate,
+            static_argnames=("run_tokens",),
+        )
+        if self._extend is not None:
+            # gather -> compact prefill_extend -> scatter back: coalesced
+            # TEXT recompute that only computes the participating rows
+            # (cache buffers donated so the row scatter updates in place)
+            gather_donate = () if jax.default_backend() == "cpu" else (2, 3)
+
+            def _extend_gather_impl(params, tokens, kv_k, kv_v, length, rows):
+                sub = lm.Caches(
+                    kv_k=kv_k[:, rows], kv_v=kv_v[:, rows], length=length[rows],
+                    mamba_conv=None, mamba_ssm=None, shared_k=None, shared_v=None,
+                )
+                logits, sub = lm.prefill_extend(self.cfg, params, tokens, sub)
+                return (
+                    logits,
+                    kv_k.at[:, rows].set(sub.kv_k),
+                    kv_v.at[:, rows].set(sub.kv_v),
+                    length.at[rows].set(sub.length),
+                )
+
+            self._extend_gather = jax.jit(
+                _extend_gather_impl, donate_argnums=gather_donate
+            )
+        else:
+            self._extend_gather = None
 
     # ------------------------------------------------------------------
     # Paper interfaces
@@ -113,6 +159,112 @@ class Engine:
             jnp.int32(start),
         )
         return caches._replace(kv_k=k, kv_v=v, length=ln)
+
+    # ------------------------------------------------------------------
+    # Concurrent-scheduler support (batch-of-requests cache)
+    # ------------------------------------------------------------------
+
+    def insert_runs(
+        self,
+        caches: Caches,
+        kv_new,  # (L, 2, sum_T, C): all runs' decoded tokens, concat order
+        rows: Sequence[int],  # cache row per run (distinct)
+        starts: Sequence[int],  # token offset per run
+        run_tokens: Sequence[int],  # token count per run
+    ) -> Caches:
+        """Land several requests' decoded runs in one batched dispatch.
+
+        ``kv_new`` is the cross-request concat from
+        ``codec.decode_chunk_runs``; run ``i`` (spanning ``run_tokens[i]``
+        tokens of it) is written into cache row ``rows[i]`` at token offset
+        ``starts[i]`` via one vmap'd per-row-offset ``dynamic_update_slice``
+        over the whole batch — replacing one ``decode_to_cache`` dispatch
+        per request per run.  Rows not named keep their contents
+        byte-identically.  Only run geometry is static for jit; row
+        assignment and offsets are data.
+        """
+        if not (len(rows) == len(starts) == len(run_tokens)):
+            raise ValueError(
+                f"insert_runs: {len(rows)} rows, {len(starts)} starts, "
+                f"{len(run_tokens)} runs — one of each per run required"
+            )
+        if len(set(rows)) != len(rows):
+            raise ValueError(f"insert_runs: duplicate cache rows in {rows}")
+        n_rows = caches.kv_k.shape[1]
+        if any(not 0 <= int(r) < n_rows for r in rows):
+            # out of range would hit XLA's silent scatter-drop inside jit
+            raise ValueError(
+                f"insert_runs: rows {list(rows)} out of range for a "
+                f"{n_rows}-row cache"
+            )
+        t_max = max(run_tokens)
+        if t_max > self.capacity:
+            raise ValueError(
+                f"run of {t_max} tokens exceeds cache capacity {self.capacity}"
+            )
+        for s, t in zip(starts, run_tokens):
+            # the insert kernel's shifted-window merge masks out-of-capacity
+            # positions rather than writing them, so an overhanging run
+            # would silently drop tokens while still advancing length
+            if int(s) + int(t) > self.capacity:
+                raise ValueError(
+                    f"run of {t} tokens at offset {s} overhangs cache "
+                    f"capacity {self.capacity}"
+                )
+        k, v, ln = self._insert_runs(
+            caches.kv_k, caches.kv_v, caches.length, jnp.asarray(kv_new),
+            jnp.asarray(list(rows), jnp.int32),
+            jnp.asarray(list(starts), jnp.int32),
+            run_tokens=tuple(int(t) for t in run_tokens),
+        )
+        return caches._replace(kv_k=k, kv_v=v, length=ln)
+
+    def prefill_extend_rows(
+        self, tokens: jnp.ndarray, caches: Caches, widths
+    ) -> Tuple[jnp.ndarray, Caches]:
+        """Coalesced TEXT recompute: one padded, width-masked batched
+        ``prefill_extend`` over the batch-of-requests cache.
+
+        ``tokens`` is (B, Tc) with each participating row's text chunk (rows
+        with ``widths[b] == 0`` carry padding and are untouched — garbage
+        logits, no cache write, no length advance).  Each row writes at its
+        *own* ``caches.length[b]`` offset.
+        """
+        if self._extend_rows is None:
+            raise ValueError(f"no chunked prefill for family {self.cfg.family}")
+        return self._extend_rows(
+            self.params, tokens, caches, jnp.asarray(widths, jnp.int32)
+        )
+
+    def prefill_extend_gather(
+        self, tokens: jnp.ndarray, caches: Caches, rows
+    ) -> Tuple[jnp.ndarray, Caches]:
+        """Compact coalesced TEXT recompute for a *subset* of cache rows.
+
+        Gathers rows ``rows`` of the batch-of-requests cache into a
+        sub-batch, runs the plain full-width ``prefill_extend`` on it
+        (``tokens`` is (len(rows), Tc), one text chunk per gathered row),
+        and scatters the updated rows back.  Complements
+        :meth:`prefill_extend_rows`: same semantics, but compute scales with
+        the participating rows instead of the full batch — the scheduler
+        picks this when only a few sessions recompute in a round.  Row
+        membership is data (no retrace per row set); only (k, Tc) shape the
+        jit signature.
+        """
+        if self._extend_gather is None:
+            raise ValueError(f"no chunked prefill for family {self.cfg.family}")
+        n_rows = caches.kv_k.shape[1]
+        if any(not 0 <= int(r) < n_rows for r in rows):
+            # out of range would clamp inside jit and corrupt the last row
+            raise ValueError(
+                f"prefill_extend_gather: rows {list(rows)} out of range for "
+                f"a {n_rows}-row cache"
+            )
+        logits, k, v, ln = self._extend_gather(
+            self.params, tokens, caches.kv_k, caches.kv_v, caches.length,
+            jnp.asarray(list(rows), jnp.int32),
+        )
+        return logits, caches._replace(kv_k=k, kv_v=v, length=ln)
 
     # ------------------------------------------------------------------
     # Cost model hooks (used by the streaming simulator)

@@ -9,12 +9,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models.lm import Caches
+from repro.models.lm import Caches, masked_window_update
 
 __all__ = [
     "caches_to_codec_kv",
     "codec_kv_to_caches",
     "insert_codec_run",
+    "insert_codec_runs",
+    "extract_row",
     "alloc_caches",
     "kv_cache_bytes",
 ]
@@ -51,6 +53,87 @@ def insert_codec_run(
     kv_v = jax.lax.dynamic_update_slice(kv_v, vt, (zero, zero, start, zero, zero))
     length = jnp.maximum(length, start + T)
     return kv_k, kv_v, length
+
+
+def insert_codec_runs(
+    kv_k: jnp.ndarray,  # (L, B, cap, Hkv, Dh) batch-of-requests cache, donatable
+    kv_v: jnp.ndarray,
+    length: jnp.ndarray,  # (B,) int32
+    kv_new: jnp.ndarray,  # (L, 2, sum_T, C) decoded concat of all runs
+    rows: jnp.ndarray,  # (R,) int32 cache row per run (distinct)
+    starts: jnp.ndarray,  # (R,) int32 token offset per run
+    run_tokens: Tuple[int, ...],  # static: token count per run, concat order
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Write R decoded runs — one per *request* — into their cache rows.
+
+    The multi-session counterpart of :func:`insert_codec_run`: the cache's
+    batch axis holds different requests (one row per live session), and each
+    run lands at its own row and token offset in a single dispatch — a
+    vmap'd per-row-offset ``dynamic_update_slice`` instead of one dispatch
+    per request per run.  Meant to be jitted with the cache buffers donated
+    (``Engine.insert_runs``).
+
+    Only run geometry (``run_tokens``, and the batch/capacity shapes) is
+    static; ``rows`` and ``starts`` are data, so which session received
+    which run never retraces the program.  Rows not named in ``rows`` are
+    written back byte-identically (their window merge keeps every current
+    value).  Requires ``cap >= max(run_tokens)``; rows whose window would
+    overhang the capacity are handled exactly via a shifted in-window merge
+    (``dynamic_update_slice`` clamps the window start; the merge re-aligns
+    the new tokens inside it).
+    """
+    L, B, cap, Hkv, Dh = kv_k.shape
+    R = len(run_tokens)
+    t_max = max(run_tokens)
+    # per-run padded updates in the attention layout, stacked: (R, L, Tm, ...)
+    off = 0
+    ks, vs = [], []
+    for T in run_tokens:
+        piece = kv_new[:, :, off : off + T].reshape(L, 2, T, Hkv, Dh)
+        pad = ((0, 0), (0, 0), (0, t_max - T), (0, 0), (0, 0))
+        piece = jnp.pad(piece, pad)
+        ks.append(piece[:, 0])
+        vs.append(piece[:, 1])
+        off += T
+    k_upd = jnp.stack(ks).astype(kv_k.dtype)  # (R, L, Tm, Hkv, Dh)
+    v_upd = jnp.stack(vs).astype(kv_v.dtype)
+    rows = rows.astype(jnp.int32)
+    starts = starts.astype(jnp.int32)
+    widths = jnp.asarray(run_tokens, jnp.int32)
+
+    # scatter run payloads/offsets to their cache rows (inactive rows: width 0)
+    row_k = jnp.zeros((B, L, t_max, Hkv, Dh), kv_k.dtype).at[rows].set(k_upd)
+    row_v = jnp.zeros((B, L, t_max, Hkv, Dh), kv_v.dtype).at[rows].set(v_upd)
+    row_start = jnp.zeros((B,), jnp.int32).at[rows].set(starts)
+    row_width = jnp.zeros((B,), jnp.int32).at[rows].set(widths)
+
+    # one shifted read-merge-write window per (row, layer): rows not named
+    # in `rows` have width 0 and are written back verbatim; a run whose
+    # padded window overhangs the capacity is re-aligned inside it (see
+    # lm.masked_window_update, the single shared implementation)
+    _one_row = jax.vmap(  # over layers: cache_row (L, cap, ...), upd (L, Tm, ...)
+        masked_window_update, in_axes=(0, 0, None, None)
+    )
+    vrow = jax.vmap(_one_row, in_axes=(1, 0, 0, 0), out_axes=1)
+    kv_k = vrow(kv_k, row_k, row_start, row_width)
+    kv_v = vrow(kv_v, row_v, row_start, row_width)
+    length = jnp.maximum(length, row_start + row_width)
+    return kv_k, kv_v, length
+
+
+def extract_row(caches: Caches, row: int) -> Caches:
+    """One request's batch-1 view of a batch-of-requests cache (device
+    slices; no copy forced)."""
+    sl = slice(row, row + 1)
+    return caches._replace(
+        kv_k=None if caches.kv_k is None else caches.kv_k[:, sl],
+        kv_v=None if caches.kv_v is None else caches.kv_v[:, sl],
+        length=None if caches.length is None else caches.length[sl],
+        mamba_conv=None if caches.mamba_conv is None else caches.mamba_conv[:, sl],
+        mamba_ssm=None if caches.mamba_ssm is None else caches.mamba_ssm[:, sl],
+        shared_k=None if caches.shared_k is None else caches.shared_k[:, sl],
+        shared_v=None if caches.shared_v is None else caches.shared_v[:, sl],
+    )
 
 
 def caches_to_codec_kv(caches: Caches, batch_index: int, n_tokens: int) -> np.ndarray:

@@ -1,0 +1,318 @@
+"""Concurrent multi-session serving: N adaptive context loads, one Engine.
+
+The paper's serving setting (§8.3, Fig. 13) loads many contexts at once;
+running them as back-to-back :class:`~repro.serving.session.ServeSession`
+calls pays N sequential decode/recompute dispatch chains.  This module keeps
+*decisions* per-request — every load owns its ``StreamClock``, Algorithm 1
+policy, bandwidth trace and double-buffered segmenter, exactly as in the
+single-session loop — but drains the resolved work of all loads into a
+shared execution queue that batches the compute hot path *across requests*:
+
+  * **decode** — ready runs from different requests are stacked into a
+    single ``codec.decode_chunk_runs`` call: one pair of lane-stacked rANS
+    scans and one jitted assemble for all of them, with run geometry (not
+    request identity) shaping the jit signature;
+  * **insert** — the decoded concat lands in a *batch-of-requests* cache
+    (one row per live session) through ``Engine.insert_runs``: a vmap'd
+    per-row-offset ``dynamic_update_slice``, one dispatch for all runs;
+  * **recompute** — TEXT chunks from different requests with a common token
+    count coalesce into one padded, width-masked ``Engine.
+    prefill_extend_rows`` forward (rows without a TEXT chunk ride along
+    with width 0 and are untouched).
+
+Contention feedback closes the loop: each task's clock charges
+decode/recompute seconds scaled by ``ContentionModel.factor(n_active)``
+(measured from the microbench's stacked-decode numbers via
+``calibration.measured_contention_factors``; conservative ``factor(n) = n``
+when unmeasured), and the same factor inflates the remaining-recompute
+estimate inside ``choose_config`` — so a loaded engine pushes adaptation
+away from TEXT recompute exactly like a collapsing link pushes it toward
+coarser levels.  ``factor(1) == 1.0`` exactly, which is what makes the N=1
+scheduler bit-identical to ``ServeSession`` (tests/test_scheduler.py).
+
+Rounds are virtual-time ordered: each round steps every unfinished task
+once (earliest next fetch first), then executes the round's queue —
+decodes/inserts before recomputes, preserving each session's segment order
+(a task emits at most one run followed by at most one TEXT item per round).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec as kvcodec
+from repro.models.lm import Caches
+from repro.serving.engine import Engine
+from repro.serving.kv_layout import extract_row
+from repro.serving.session import (
+    RunWork,
+    ServeSession,
+    SessionResult,
+    SessionTask,
+    TextWork,
+)
+from repro.streaming.network import NetworkModel
+from repro.streaming.pipeline import ContentionModel
+
+__all__ = ["SessionRequest", "SchedulerResult", "ConcurrentScheduler"]
+
+
+@dataclasses.dataclass
+class SessionRequest:
+    """One context load: a session's knobs bound to a request's inputs.
+
+    ``session`` carries the per-request configuration (SLO, cost model,
+    adaptation knobs, streamer/store) and must share the scheduler's Engine;
+    ``tokens`` is the (1, T) context for TEXT recomputes.
+    """
+
+    session: ServeSession
+    context_id: str
+    tokens: np.ndarray
+    network: NetworkModel
+    prior_throughput_gbps: Optional[float] = None
+    start_t: float = 0.0
+
+
+@dataclasses.dataclass
+class SchedulerResult:
+    """N per-request results plus scheduler-level batching counters.
+
+    ``sessions[r].caches`` is request ``r``'s batch-1 view of the shared
+    batch-of-requests cache (``caches`` holds the full batch).  Virtual
+    times (``ttft_s``) are per-request and contention-aware; ``wall_*`` on
+    the scheduler are realized host seconds for the whole batch run, and
+    each session's ``wall_*`` is its token-weighted share of the batched
+    dispatches it participated in.
+    """
+
+    sessions: List[SessionResult]
+    caches: Caches
+    wall_total_s: float
+    wall_decode_s: float
+    wall_recompute_s: float
+    n_rounds: int
+    n_decode_batches: int
+    n_text_batches: int
+    n_runs: int
+
+
+class ConcurrentScheduler:
+    """Run N adaptive context loads concurrently against one shared Engine.
+
+    ``contention=None`` calibrates from this host's measured stacked-decode
+    throughput (``ContentionModel.measured()``); pass an explicit
+    :class:`~repro.streaming.pipeline.ContentionModel` to pin the factors
+    (e.g. ``ContentionModel({})`` for the conservative fully-serialized
+    model, or ``ContentionModel({1: 1.0, 8: 1.0})`` for an idealized
+    perfectly-batching engine).
+    """
+
+    def __init__(
+        self,
+        engine: Engine,
+        *,
+        contention: Optional[ContentionModel] = None,
+    ):
+        self.engine = engine
+        self.contention = (
+            contention if contention is not None else ContentionModel.measured()
+        )
+        self._n_active = 1
+
+    # ------------------------------------------------------------------
+
+    def run(self, requests: List[SessionRequest]) -> SchedulerResult:
+        if not requests:
+            raise ValueError("ConcurrentScheduler.run needs at least one request")
+        for r in requests:
+            if r.session.engine is not self.engine:
+                raise ValueError(
+                    "every request's session must share the scheduler's Engine"
+                )
+            if r.tokens.ndim != 2 or r.tokens.shape[0] != 1:
+                raise ValueError(
+                    f"scheduler requests are single-row: tokens must be (1, T), "
+                    f"got {r.tokens.shape}"
+                )
+        n = len(requests)
+        caches = self.engine.empty_caches(n)
+        if caches.kv_k is None:
+            raise ValueError(
+                f"scheduler needs a KV-cache family, got {self.engine.cfg.family}"
+            )
+        scale = lambda: self.contention.factor(self._n_active)  # noqa: E731
+        tasks = [
+            SessionTask(
+                r.session,
+                r.context_id,
+                r.tokens,
+                r.network,
+                row=i,
+                prior_throughput_gbps=r.prior_throughput_gbps,
+                start_t=r.start_t,
+                compute_scale=scale,
+            )
+            for i, r in enumerate(requests)
+        ]
+        acct = [_SessionAccount() for _ in tasks]
+        stats = _BatchStats()
+        self._n_active = n
+        wall0 = time.perf_counter()
+        while True:
+            live = [t for t in tasks if not t.done]
+            if not live:
+                break
+            stats.n_rounds += 1
+            # step in virtual-time order: the session whose next fetch
+            # completes first resolves its chunk first (matches how a real
+            # shared frontend would see arrivals)
+            live.sort(key=lambda t: t.next_fetch_t)
+            round_runs: List[RunWork] = []
+            round_texts: List[TextWork] = []
+            for t in live:
+                self._n_active = sum(1 for x in tasks if not x.done)
+                for w in t.step():
+                    (round_runs if isinstance(w, RunWork) else round_texts).append(w)
+            # drain: decodes/inserts land before recomputes — a task emits
+            # at most [run, text] per round, so this preserves its order
+            caches = self._execute_runs(round_runs, caches, acct, stats)
+            caches = self._execute_texts(round_texts, caches, acct, stats)
+        jax.block_until_ready(caches.kv_k)
+        wall_total = time.perf_counter() - wall0
+
+        sessions = [
+            t.result(
+                extract_row(caches, i),
+                wall_decode_s=acct[i].decode_s,
+                wall_recompute_s=acct[i].recompute_s,
+                wall_total_s=wall_total,
+                n_runs=acct[i].runs,
+            )
+            for i, t in enumerate(tasks)
+        ]
+        return SchedulerResult(
+            sessions=sessions,
+            caches=caches,
+            wall_total_s=wall_total,
+            wall_decode_s=stats.decode_s,
+            wall_recompute_s=stats.recompute_s,
+            n_rounds=stats.n_rounds,
+            n_decode_batches=stats.n_decode_batches,
+            n_text_batches=stats.n_text_batches,
+            n_runs=stats.n_runs,
+        )
+
+    # ------------------------------------------------------------------
+
+    def _execute_runs(
+        self,
+        runs: List[RunWork],
+        caches: Caches,
+        acct: List["_SessionAccount"],
+        stats: "_BatchStats",
+    ) -> Caches:
+        """Cross-request stacked decode + one batched insert per table set."""
+        if not runs:
+            return caches
+        groups: Dict[int, List[RunWork]] = {}
+        for w in runs:
+            groups.setdefault(id(w.tables), []).append(w)
+        for group in groups.values():
+            t0 = time.perf_counter()
+            # token counts come from the plan (validated against every
+            # fetched blob's header at fetch time); decode_chunk_runs
+            # cross-checks the decoded total against them
+            kv, spans = kvcodec.decode_chunk_runs(
+                [w.blobs for w in group],
+                group[0].tables,
+                out_dtype=caches.kv_k.dtype,
+                run_tokens=[w.n_tokens for w in group],
+            )
+            caches = self.engine.insert_runs(
+                caches,
+                kv,
+                rows=[w.row for w in group],
+                starts=[w.start for w in group],
+                run_tokens=[n for _, n in spans],
+            )
+            dt = time.perf_counter() - t0
+            stats.decode_s += dt
+            stats.n_decode_batches += 1
+            stats.n_runs += len(group)
+            total = sum(w.n_tokens for w in group)
+            for w in group:
+                acct[w.row].decode_s += dt * w.n_tokens / total
+                acct[w.row].runs += 1
+        return caches
+
+    def _execute_texts(
+        self,
+        texts: List[TextWork],
+        caches: Caches,
+        acct: List["_SessionAccount"],
+        stats: "_BatchStats",
+    ) -> Caches:
+        """Coalesced TEXT recompute: one padded masked forward per chunk
+        width (rows whose request has no TEXT chunk this round are masked
+        out with width 0)."""
+        if not texts:
+            return caches
+        n = caches.length.shape[0]
+        by_tc: Dict[int, List[TextWork]] = {}
+        for w in texts:
+            by_tc.setdefault(w.n_tokens, []).append(w)
+        for tc, group in sorted(by_tc.items()):
+            t0 = time.perf_counter()
+            if 2 * len(group) >= n:
+                # most (or all) rows recompute: width-masked full-batch
+                # forward — non-participating rows ride along with width 0,
+                # no gather/scatter traffic
+                toks = np.zeros((n, tc), np.int32)
+                widths = np.zeros((n,), np.int32)
+                for w in group:
+                    toks[w.row] = np.asarray(w.tokens[0], np.int32)
+                    widths[w.row] = tc
+                _, caches = self.engine.prefill_extend_rows(
+                    jnp.asarray(toks), caches, widths
+                )
+            else:
+                # a small subset: gather the participating rows into a
+                # compact sub-batch so compute scales with them, not the
+                # full batch
+                toks = np.stack(
+                    [np.asarray(w.tokens[0], np.int32) for w in group]
+                )
+                _, caches = self.engine.prefill_extend_gather(
+                    jnp.asarray(toks), caches, [w.row for w in group]
+                )
+            dt = time.perf_counter() - t0
+            stats.recompute_s += dt
+            stats.n_text_batches += 1
+            for w in group:
+                acct[w.row].recompute_s += dt / len(group)
+        return caches
+
+
+@dataclasses.dataclass
+class _SessionAccount:
+    """Per-session share of the batched dispatch times."""
+
+    decode_s: float = 0.0
+    recompute_s: float = 0.0
+    runs: int = 0
+
+
+@dataclasses.dataclass
+class _BatchStats:
+    decode_s: float = 0.0
+    recompute_s: float = 0.0
+    n_rounds: int = 0
+    n_decode_batches: int = 0
+    n_text_batches: int = 0
+    n_runs: int = 0

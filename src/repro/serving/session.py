@@ -18,15 +18,32 @@ chunk identity), decoded through the fused batched path
 chunk is actually recomputed with ``Engine.prefill_extend`` on top of the
 already-materialized prefix.
 
-Fetch/decode overlap uses the streamer's double-buffered
-:class:`~repro.streaming.streamer.RunSegmenter`: fetched chunks accumulate
-until ``max_run_tokens``, then the run is dispatched as one batched decode
-(JAX dispatch is asynchronous on accelerator backends, so the decode of a
-full buffer proceeds while the loop keeps fetching the next buffer).  A TEXT
-chunk force-flushes the buffer first — its ``prefill_extend`` reads the
-cache at its own token offset, so all earlier chunks must have landed; the
-session asserts contiguous segment coverage with a host-side token counter
-(reading ``caches.length`` back would sync the device per segment).
+Session / scheduler split (PR 3)
+--------------------------------
+The per-chunk loop body lives in :class:`SessionTask`: one in-flight context
+load that owns its policy, ``StreamClock``, trace, and double-buffered
+:class:`~repro.streaming.streamer.RunSegmenter`, and that ``step()``-s one
+chunk at a time, emitting typed *work items* — :class:`RunWork` (a run of
+fetched bitstream chunks to decode and land at a token offset) and
+:class:`TextWork` (a text chunk to recompute).  :class:`ServeSession` is the
+single-request consumer: it executes each item immediately against its own
+cache (``decode_chunks`` → ``decode_to_cache`` / ``prefill_extend``).  The
+multi-request consumer is ``serving.scheduler.ConcurrentScheduler``, which
+steps N tasks against one shared Engine and drains their work items into
+*cross-request batched* executions; at N=1 it degenerates to exactly this
+file's loop (the differential tests in tests/test_scheduler.py hold it to
+bit-exactness).  Decisions stay per-request either way — each task keeps
+its own clock and policy, so every load remains simulator-differential.
+
+Fetch/decode overlap uses the segmenter's double buffering: fetched chunks
+accumulate until ``max_run_tokens``, then the run is dispatched as one
+batched decode (JAX dispatch is asynchronous on accelerator backends, so the
+decode of a full buffer proceeds while the loop keeps fetching the next
+buffer).  A TEXT chunk force-flushes the buffer first — its
+``prefill_extend`` reads the cache at its own token offset, so all earlier
+chunks must have landed; the task asserts contiguous segment coverage with a
+host-side token counter (reading ``caches.length`` back would sync the
+device per segment).
 
 The session emits :class:`~repro.streaming.pipeline.ChunkTimeline`-
 compatible records (``SessionResult.stream_result()``), so everything that
@@ -54,7 +71,14 @@ from repro.streaming.network import NetworkModel
 from repro.streaming.pipeline import ChunkTimeline, StreamClock, StreamResult
 from repro.streaming.streamer import CacheGenStreamer, PlanSegment, RunSegmenter
 
-__all__ = ["ServeSession", "SessionResult"]
+__all__ = [
+    "ServeSession",
+    "SessionResult",
+    "SessionTask",
+    "RunWork",
+    "TextWork",
+    "validate_blob",
+]
 
 
 @dataclasses.dataclass
@@ -105,11 +129,217 @@ class SessionResult:
         )
 
 
+# ---------------------------------------------------------------------------
+# Work items: the unit of execution shared by session and scheduler
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunWork:
+    """A run of consecutive fetched bitstream chunks, ready to decode and
+    land in the cache at ``[start, end)`` of row ``row``."""
+
+    row: int
+    start: int
+    end: int
+    blobs: List[bytes]
+    tables: kvcodec.CodecTables
+
+    @property
+    def n_tokens(self) -> int:
+        return self.end - self.start
+
+
+@dataclasses.dataclass
+class TextWork:
+    """A text chunk ready to recompute (``prefill_extend``) at its own
+    token offset on row ``row``.  ``tokens`` is the (batch, Tc) slice."""
+
+    row: int
+    start: int
+    end: int
+    tokens: np.ndarray
+
+    @property
+    def n_tokens(self) -> int:
+        return self.end - self.start
+
+
+def validate_blob(blob: bytes, meta, level: int) -> None:
+    """Reject a fetched bitstream that does not match its plan entry."""
+    h = kvcodec.peek_chunk_header(blob)
+    # chunk_idx is present on store-written blobs; standalone encodes
+    # (no identity known) skip that part of the check.  Missing v1 keys
+    # (foreign/corrupt producer) are a mismatch, not a KeyError.
+    idx = h.get("chunk_idx", meta.chunk_idx)
+    if (
+        h.get("level") != level
+        or h.get("n_tokens") != meta.n_tokens
+        or idx != meta.chunk_idx
+    ):
+        raise ValueError(
+            f"storage returned a mismatched bitstream for chunk "
+            f"{meta.chunk_idx}: header level={h.get('level')} "
+            f"tokens={h.get('n_tokens')} chunk_idx={h.get('chunk_idx')}, "
+            f"plan wants level={level} tokens={meta.n_tokens}"
+        )
+
+
+class SessionTask:
+    """One in-flight context load, stepped one chunk at a time.
+
+    Owns everything *per-request*: the Algorithm 1 policy, the trace-driven
+    ``StreamClock`` (decide → fetch → charge compute → observe), the
+    double-buffered segmenter, and the positional-bookkeeping cursor.  Each
+    :meth:`step` advances one chunk and returns the work items whose inputs
+    are now fully resolved (possibly none while the double buffer fills).
+    The caller decides *how* to execute them: ``ServeSession`` runs each
+    immediately; the concurrent scheduler batches items from many tasks.
+
+    ``compute_scale`` (optional callable) is the live contention hook: the
+    clock stretches this task's charged decode/recompute seconds — and the
+    remaining-recompute estimate feeding ``choose_config`` — by its current
+    value (``pipeline.ContentionModel``), so adaptation under a loaded
+    engine sheds compute (TEXT) work exactly like it sheds bytes under a
+    collapsing link.
+    """
+
+    def __init__(
+        self,
+        session: "ServeSession",
+        context_id: str,
+        tokens: np.ndarray,
+        network: NetworkModel,
+        *,
+        row: int = 0,
+        prior_throughput_gbps: Optional[float] = None,
+        start_t: float = 0.0,
+        compute_scale: Optional[Callable[[], float]] = None,
+    ):
+        self.session = session
+        self.context_id = context_id
+        self.tokens = tokens
+        self.row = row
+        store = session.streamer.store
+        self.store = store
+        self.metas = store.meta(context_id)
+        policy = make_policy(
+            store.tables.config.n_levels,
+            slo_s=session.slo_s,
+            default_level=session.default_level,
+            prior_throughput_gbps=prior_throughput_gbps,
+            allow_text=session.allow_text,
+            adapt=session.adapt,
+            fixed_level=session.fixed_level,
+        )
+        # the simulator's per-chunk loop body, verbatim: decide -> fetch
+        # (hedging included) -> charge the virtual compute window -> observe
+        self.clock = StreamClock(
+            policy=policy,
+            network=network,
+            decode_bytes_per_s=session.decode_bytes_per_s,
+            recompute_s=session.recompute_s,
+            hedge_after_s=session.hedge_after_s,
+            start_t=start_t,
+            compute_scale=compute_scale,
+        )
+        self.segmenter = RunSegmenter(session.max_run_tokens)
+        self.timelines: List[ChunkTimeline] = []
+        self._i = 0
+        self._offset = 0  # tokens whose work items have been emitted
+
+    @property
+    def done(self) -> bool:
+        return self._i >= len(self.metas)
+
+    @property
+    def next_fetch_t(self) -> float:
+        """When this task's next chunk fetch would start (virtual clock)."""
+        return self.clock.fetch_t
+
+    def step(self) -> List[object]:
+        """Advance one chunk: decide, fetch, validate, segment.
+
+        Returns the work items now ready to execute (in order).  The last
+        chunk also flushes the segmenter, so once :attr:`done` every item
+        has been emitted.
+        """
+        if self.done:
+            return []
+        i = self._i
+        m = self.metas[i]
+        tl = self.clock.step(self.metas, i)
+        self.timelines.append(tl)
+        if tl.config == TEXT:
+            segs = self.segmenter.push(m, TEXT)
+        else:
+            blob = self.store.get_kv(self.context_id, m.chunk_idx, tl.config)
+            if self.session.validate_blobs:
+                validate_blob(blob, m, tl.config)
+            segs = self.segmenter.push(m, tl.config, blob)
+        self._i += 1
+        if self._i == len(self.metas):
+            segs = segs + self.segmenter.flush()
+        return [self._to_work(s) for s in segs]
+
+    def _to_work(self, seg: PlanSegment):
+        # positional bookkeeping: every segment must start exactly where
+        # the materialized prefix ends (host-side counter — reading
+        # caches.length here would force a device sync per segment and
+        # stall the decode/fetch overlap)
+        if seg.start != self._offset:
+            raise AssertionError(
+                f"segment starts at token {seg.start} but {self._offset} "
+                "tokens are materialized; decoded/recomputed chunk "
+                "interleaving lost sync"
+            )
+        self._offset = seg.end
+        if seg.kind == "text":
+            return TextWork(
+                row=self.row,
+                start=seg.start,
+                end=seg.end,
+                tokens=self.tokens[:, seg.start : seg.end],
+            )
+        return RunWork(
+            row=self.row,
+            start=seg.start,
+            end=seg.end,
+            blobs=list(seg.blobs),
+            tables=self.store.tables,
+        )
+
+    def result(
+        self,
+        caches: Caches,
+        *,
+        wall_decode_s: float,
+        wall_recompute_s: float,
+        wall_total_s: float,
+        n_runs: int,
+    ) -> SessionResult:
+        return SessionResult(
+            timelines=list(self.timelines),
+            configs=[t.config for t in self.timelines],
+            ttft_s=self.clock.ttft_s(self.timelines, self.session.final_step_s),
+            slo_s=self.session.slo_s,
+            caches=caches,
+            wall_decode_s=wall_decode_s,
+            wall_recompute_s=wall_recompute_s,
+            wall_total_s=wall_total_s,
+            n_runs=n_runs,
+        )
+
+
 class ServeSession:
     """Bandwidth-adaptive context load: decide → fetch → decode/recompute.
 
     One instance is reusable across requests (it holds no per-request
-    state); each :meth:`run` builds a fresh policy and serving cache.
+    state); each :meth:`run` builds a fresh :class:`SessionTask` (policy +
+    clock + segmenter) and serving cache, and executes the task's work items
+    one at a time.  For N concurrent loads sharing one Engine, hand the
+    session(s) to ``serving.scheduler.ConcurrentScheduler`` instead, which
+    executes the same work items batched across requests.
     """
 
     def __init__(
@@ -159,61 +389,29 @@ class ServeSession:
         prior_throughput_gbps: Optional[float] = None,
         start_t: float = 0.0,
     ) -> SessionResult:
-        store = self.streamer.store
-        metas = store.meta(context_id)
-        policy = make_policy(
-            store.tables.config.n_levels,
-            slo_s=self.slo_s,
-            default_level=self.default_level,
-            prior_throughput_gbps=prior_throughput_gbps,
-            allow_text=self.allow_text,
-            adapt=self.adapt,
-            fixed_level=self.fixed_level,
-        )
         caches = self.engine.empty_caches(batch)
         if caches.kv_k is None:
             raise ValueError(
                 f"ServeSession needs a KV-cache family, got {self.engine.cfg.family}"
             )
-        segmenter = RunSegmenter(self.max_run_tokens)
-        # the simulator's per-chunk loop body, verbatim: decide -> fetch
-        # (hedging included) -> charge the virtual compute window -> observe
-        clock = StreamClock(
-            policy=policy,
-            network=network,
-            decode_bytes_per_s=self.decode_bytes_per_s,
-            recompute_s=self.recompute_s,
-            hedge_after_s=self.hedge_after_s,
+        task = SessionTask(
+            self,
+            context_id,
+            tokens,
+            network,
+            prior_throughput_gbps=prior_throughput_gbps,
             start_t=start_t,
         )
-        timelines: List[ChunkTimeline] = []
         state = _ExecState()
         wall0 = time.perf_counter()
-
-        for i, m in enumerate(metas):
-            tl = clock.step(metas, i)
-            timelines.append(tl)
-
-            # --- real work: fetch blob, segment, decode/recompute ----------
-            if tl.config == TEXT:
-                segs = segmenter.push(m, TEXT)
-            else:
-                blob = store.get_kv(context_id, m.chunk_idx, tl.config)
-                if self.validate_blobs:
-                    self._validate_blob(blob, m, tl.config)
-                segs = segmenter.push(m, tl.config, blob)
-            caches = self._execute(segs, caches, tokens, state)
-
-        caches = self._execute(segmenter.flush(), caches, tokens, state)
+        while not task.done:
+            for work in task.step():
+                caches = self._execute_one(work, caches, state)
         if caches.kv_k is not None:
             jax.block_until_ready(caches.kv_k)
         wall_total = time.perf_counter() - wall0
-        return SessionResult(
-            timelines=timelines,
-            configs=[t.config for t in timelines],
-            ttft_s=clock.ttft_s(timelines, self.final_step_s),
-            slo_s=self.slo_s,
-            caches=caches,
+        return task.result(
+            caches,
             wall_decode_s=state.decode_s,
             wall_recompute_s=state.recompute_s,
             wall_total_s=wall_total,
@@ -222,67 +420,32 @@ class ServeSession:
 
     # ------------------------------------------------------------------
 
-    def _validate_blob(self, blob: bytes, meta, level: int) -> None:
-        h = kvcodec.peek_chunk_header(blob)
-        # chunk_idx is present on store-written blobs; standalone encodes
-        # (no identity known) skip that part of the check.  Missing v1 keys
-        # (foreign/corrupt producer) are a mismatch, not a KeyError.
-        idx = h.get("chunk_idx", meta.chunk_idx)
-        if (
-            h.get("level") != level
-            or h.get("n_tokens") != meta.n_tokens
-            or idx != meta.chunk_idx
-        ):
-            raise ValueError(
-                f"storage returned a mismatched bitstream for chunk "
-                f"{meta.chunk_idx}: header level={h.get('level')} "
-                f"tokens={h.get('n_tokens')} chunk_idx={h.get('chunk_idx')}, "
-                f"plan wants level={level} tokens={meta.n_tokens}"
-            )
-
-    def _execute(
-        self,
-        segs: List[PlanSegment],
-        caches: Caches,
-        tokens: np.ndarray,
-        state: "_ExecState",
+    def _execute_one(
+        self, work, caches: Caches, state: "_ExecState"
     ) -> Caches:
-        store = self.streamer.store
-        for seg in segs:
-            # positional bookkeeping: every segment must start exactly where
-            # the materialized prefix ends (host-side counter — reading
-            # caches.length here would force a device sync per segment and
-            # stall the decode/fetch overlap)
-            if seg.start != state.offset:
-                raise AssertionError(
-                    f"segment starts at token {seg.start} but {state.offset} "
-                    "tokens are materialized; decoded/recomputed chunk "
-                    "interleaving lost sync"
-                )
-            state.offset = seg.end
-            if seg.kind == "text":
-                t0 = time.perf_counter()
-                _, caches = self.engine.prefill_extend(
-                    jnp.asarray(tokens[:, seg.start : seg.end], jnp.int32), caches
-                )
-                state.recompute_s += time.perf_counter() - t0
-            else:
-                t0 = time.perf_counter()
-                kv_run = kvcodec.decode_chunks(
-                    seg.blobs, store.tables, out_dtype=caches.kv_k.dtype
-                )
-                caches = self.engine.decode_to_cache(caches, kv_run, seg.start)
-                state.decode_s += time.perf_counter() - t0
-                state.runs += 1
+        """Single-request execution of one work item (the scheduler's
+        cross-request batched executors are the N>1 counterpart)."""
+        if isinstance(work, TextWork):
+            t0 = time.perf_counter()
+            _, caches = self.engine.prefill_extend(
+                jnp.asarray(work.tokens, jnp.int32), caches
+            )
+            state.recompute_s += time.perf_counter() - t0
+        else:
+            t0 = time.perf_counter()
+            kv_run = kvcodec.decode_chunks(
+                work.blobs, work.tables, out_dtype=caches.kv_k.dtype
+            )
+            caches = self.engine.decode_to_cache(caches, kv_run, work.start)
+            state.decode_s += time.perf_counter() - t0
+            state.runs += 1
         return caches
 
 
 @dataclasses.dataclass
 class _ExecState:
-    """Mutable per-run execution state: wall-clock accumulators plus the
-    positional-bookkeeping cursor (`offset` = tokens materialized so far)."""
+    """Mutable per-run execution state: wall-clock accumulators."""
 
     decode_s: float = 0.0
     recompute_s: float = 0.0
     runs: int = 0
-    offset: int = 0

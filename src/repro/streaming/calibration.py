@@ -7,22 +7,36 @@ SLO number.  Rather than a hard-coded guess, the default is wired to the
 times the batched fused decode path (``codec.decode_chunks``) and writes
 ``BENCH_codec.json`` at the repo root; this module reads it back.
 
+The same report's ``stacked`` section (cross-request stacked decode: M
+requests' runs in one scan vs. M separate calls) calibrates the *contention*
+model: :func:`measured_contention_factors` turns the measured batching
+efficiency into per-session compute slowdown factors that
+``pipeline.ContentionModel`` charges when N sessions share one engine.
+
 Lookup order: ``$CACHEGEN_BENCH_CODEC`` (explicit file), ``BENCH_codec.json``
 in the current working directory, then the repo root next to this package.
 Falls back to :data:`DEFAULT_DECODE_BYTES_PER_S` (GB/s-class, the paper's
 GPU-decoder ballpark) when no measurement exists yet.
+
+Results are memoized per (candidate list, backend, file signature); the
+signature includes each candidate's mtime and size, so re-pointing
+``$CACHEGEN_BENCH_CODEC`` at a rewritten file — or the microbench rewriting
+``BENCH_codec.json`` in place — is picked up without an explicit reset.
+:func:`clear_calibration_cache` drops the memo entirely (tests, benchmarks).
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 __all__ = [
     "DEFAULT_DECODE_BYTES_PER_S",
     "BENCH_CODEC_FILENAME",
     "bench_codec_candidates",
+    "clear_calibration_cache",
     "measured_decode_bytes_per_s",
+    "measured_contention_factors",
 ]
 
 DEFAULT_DECODE_BYTES_PER_S = 4e9
@@ -47,6 +61,60 @@ def bench_codec_candidates() -> List[str]:
 _MEMO: dict = {}
 
 
+def clear_calibration_cache() -> None:
+    """Forget every memoized measurement.
+
+    The memo already keys on file mtime/size, so normal rewrites are picked
+    up automatically; this is the explicit reset for cases the signature
+    cannot see (same-mtime rewrites on coarse-clock filesystems, tests that
+    monkeypatch the readers).
+    """
+    _MEMO.clear()
+
+
+def _file_sig(path: str) -> Optional[Tuple[int, int]]:
+    """(mtime_ns, size) of ``path``, or None if unreadable — part of the memo
+    key so a report rewritten *in place* invalidates stale values."""
+    try:
+        st = os.stat(path)
+        return (st.st_mtime_ns, st.st_size)
+    except OSError:
+        return None
+
+
+def _first_measurement(cands: Tuple[str, ...], backend: str, extract):
+    """First candidate report yielding a usable value via ``extract``.
+
+    Candidates that are unreadable, unparseable, from another backend, *or*
+    parseable but missing/invalid for this extractor all fall through to the
+    next candidate (a partial report in the CWD must not shadow a complete
+    one at the repo root).
+    """
+    for p in cands:
+        try:
+            with open(p) as f:
+                report = json.load(f)
+            if report.get("host_backend") not in (None, backend):
+                continue
+            v = extract(report)
+            if v is not None:
+                return v
+        except (OSError, KeyError, TypeError, ValueError):
+            continue
+    return None
+
+
+def _memoized(key, sig, compute):
+    """Signature-checked memo: one live entry per key, replaced (not
+    accumulated) when the underlying files' (mtime, size) signature moves."""
+    hit = _MEMO.get(key)
+    if hit is not None and hit[0] == sig:
+        return hit[1]
+    value = compute()
+    _MEMO[key] = (sig, value)
+    return value
+
+
 def measured_decode_bytes_per_s(
     default: float = DEFAULT_DECODE_BYTES_PER_S,
     path: Optional[str] = None,
@@ -56,27 +124,63 @@ def measured_decode_bytes_per_s(
     A report is only trusted when its ``host_backend`` matches the current
     JAX backend (a committed CPU measurement must not masquerade as a TPU
     host's decode rate).  Results are memoized per candidate list — figure
-    scripts construct cost models repeatedly and must not re-read files.
+    scripts construct cost models repeatedly and must not re-parse files —
+    with the files' (mtime, size) signature checked on every hit, so a
+    rewritten bench file must not leak stale values.
     """
     import jax  # local: keep module importable without initializing jax
 
     backend = jax.default_backend()
     cands = tuple([path] if path else bench_codec_candidates())
-    key = (cands, backend, float(default))
-    if key in _MEMO:
-        return _MEMO[key]
-    value = float(default)
-    for p in cands:
-        try:
-            with open(p) as f:
-                report = json.load(f)
-            if report.get("host_backend") not in (None, backend):
-                continue
-            v = float(report["fused"]["bytes_per_s"])
-            if v > 0:
-                value = v
-                break
-        except (OSError, KeyError, TypeError, ValueError):
-            continue
-    _MEMO[key] = value
-    return value
+
+    def extract(report):
+        v = float(report["fused"]["bytes_per_s"])
+        return v if v > 0 else None
+
+    def compute():
+        v = _first_measurement(cands, backend, extract)
+        return float(default) if v is None else v
+
+    sig = tuple(_file_sig(p) for p in cands)
+    return _memoized(("decode", cands, backend, float(default)), sig, compute)
+
+
+def measured_contention_factors(
+    path: Optional[str] = None,
+) -> Dict[int, float]:
+    """Per-session compute slowdown at M concurrent sessions, measured.
+
+    Reads the microbench's ``stacked`` section: for each M it recorded the
+    aggregate decode throughput of M requests' runs stacked into one scan.
+    With aggregate throughput ``thpt(M)`` the per-session slowdown vs.
+    running alone is ``factor(M) = M * thpt(1) / thpt(M)`` — 1.0 when
+    batching scales perfectly, M when stacking buys nothing (fully
+    serialized).  Returns ``{}`` when no stacked measurement exists; factors
+    are clamped to >= 1.0 (a measured super-linear blip must not make the
+    cost model charge *less* than the uncontended rate).
+    """
+    import jax
+
+    backend = jax.default_backend()
+    cands = tuple([path] if path else bench_codec_candidates())
+
+    def extract(report):
+        rates = {
+            int(m): float(row["stacked"]["bytes_per_s"])
+            for m, row in report["stacked"].items()
+        }
+        base = rates.get(1)
+        if not base or base <= 0:
+            return None
+        return {
+            m: max(1.0, m * base / r)
+            for m, r in sorted(rates.items())
+            if r > 0
+        }
+
+    def compute():
+        factors = _first_measurement(cands, backend, extract)
+        return {} if factors is None else factors
+
+    sig = tuple(_file_sig(p) for p in cands)
+    return dict(_memoized(("contention", cands, backend), sig, compute))

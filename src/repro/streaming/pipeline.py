@@ -11,24 +11,87 @@ chunk").
 Straggler mitigation: a hedged duplicate fetch is issued if a chunk's fetch
 exceeds ``hedge_after_s``; the effective arrival is the min of the two
 (tail-latency hedging, standard practice at 1000-node scale).
+
+Compute contention (multi-session serving): when N sessions share one
+engine, each session's decode/recompute seconds stretch by a *measured*
+factor — :class:`ContentionModel`, calibrated from the microbench's
+cross-request stacked-decode numbers (``calibration.
+measured_contention_factors``).  ``StreamClock`` takes an optional
+``compute_scale`` callable (the concurrent scheduler wires it to the live
+count of active sessions) and applies the factor both to the charged compute
+windows *and* to the remaining-recompute estimate that feeds
+``choose_config`` — adaptation reacts to compute pressure, not just
+bandwidth.  With no callable (or a factor of exactly 1.0, the single-session
+case) the clock is bit-identical to the pre-contention behavior.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Mapping, Optional
 
 from repro.streaming.adaptation import TEXT, AdaptationPolicy
-from repro.streaming.calibration import measured_decode_bytes_per_s
+from repro.streaming.calibration import (
+    measured_contention_factors,
+    measured_decode_bytes_per_s,
+)
 from repro.streaming.network import NetworkModel
 from repro.streaming.storage import ChunkMeta
 
 __all__ = [
     "ChunkTimeline",
+    "ContentionModel",
     "StreamResult",
     "StreamClock",
     "remaining_work",
     "simulate_stream",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class ContentionModel:
+    """Per-session compute slowdown as a function of concurrently active
+    sessions sharing the engine.
+
+    ``factors`` maps measured concurrency points (from the microbench's
+    stacked-decode section) to slowdown; between points the factor is
+    interpolated linearly in N, beyond the last point it extrapolates the
+    marginal per-session cost of the last measured interval.  An empty map
+    falls back to ``factor(n) = n`` — fully serialized compute, the
+    conservative model when no stacked measurement exists.  ``factor(1)`` is
+    exactly 1.0 by construction, so a single session under a ContentionModel
+    is bit-identical to one without.
+    """
+
+    factors: Mapping[int, float] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def measured(path: Optional[str] = None) -> "ContentionModel":
+        """Calibrated from this host's BENCH_codec.json stacked section."""
+        return ContentionModel(measured_contention_factors(path))
+
+    def factor(self, n_active: int) -> float:
+        n = max(int(n_active), 1)
+        if n == 1:
+            return 1.0
+        pts = sorted((int(k), float(v)) for k, v in self.factors.items())
+        pts = [(k, v) for k, v in pts if k >= 1]
+        if not pts:
+            return float(n)  # fully serialized: no batching benefit assumed
+        if pts[0][0] != 1:
+            pts.insert(0, (1, 1.0))
+        for (n0, f0), (n1, f1) in zip(pts, pts[1:]):
+            if n <= n1:
+                if n <= n0:
+                    return f0
+                w = (n - n0) / (n1 - n0)
+                return f0 + w * (f1 - f0)
+        # beyond the last measurement: extend the last marginal slope
+        if len(pts) >= 2:
+            (n0, f0), (n1, f1) = pts[-2], pts[-1]
+            slope = (f1 - f0) / (n1 - n0)
+        else:
+            (n1, f1), slope = pts[-1], 0.0
+        return max(1.0, f1 + slope * (n - n1))
 
 
 @dataclasses.dataclass
@@ -105,6 +168,9 @@ class StreamClock:
     recompute_s: Callable[[int, int], float]  # (chunk_tokens, prefix) -> s
     hedge_after_s: Optional[float] = None
     start_t: float = 0.0
+    # live compute-pressure hook: returns the current per-session slowdown
+    # (ContentionModel.factor(n_active)); None == 1.0 == uncontended
+    compute_scale: Optional[Callable[[], float]] = None
 
     def __post_init__(self):
         self.fetch_t = self.start_t  # network busy-until
@@ -113,6 +179,7 @@ class StreamClock:
 
     def step(self, metas: List[ChunkMeta], i: int) -> ChunkTimeline:
         m = metas[i]
+        scale = 1.0 if self.compute_scale is None else float(self.compute_scale())
         remaining_sizes, remaining_text, rem_recompute = remaining_work(
             metas, i, self.prefix_tokens, self.recompute_s
         )
@@ -120,7 +187,7 @@ class StreamClock:
             elapsed_s=self.fetch_t - self.start_t,
             remaining_sizes=remaining_sizes,
             remaining_text_bytes=remaining_text,
-            remaining_recompute_s=rem_recompute,
+            remaining_recompute_s=rem_recompute * scale,
         )
         nbytes = float(m.text_bytes if cfg.config == TEXT else m.sizes[cfg.config])
 
@@ -139,10 +206,11 @@ class StreamClock:
         self.fetch_t = fetch_end
 
         # --- compute (decode or recompute), pipelined with next fetch ------
+        # contention: N active sessions stretch this session's compute window
         if cfg.config == TEXT:
-            dur = self.recompute_s(m.n_tokens, self.prefix_tokens)
+            dur = self.recompute_s(m.n_tokens, self.prefix_tokens) * scale
         else:
-            dur = nbytes / self.decode_bytes_per_s
+            dur = nbytes / self.decode_bytes_per_s * scale
         compute_start = max(fetch_end, self.compute_t)
         compute_end = compute_start + dur
         self.compute_t = compute_end

@@ -1,0 +1,538 @@
+"""Differential harness for the concurrent multi-session scheduler.
+
+Invariants (ISSUE 3):
+  * N=1 degeneration — the scheduler with a single request is bit-identical
+    to ``ServeSession``: same per-chunk decisions, bytes, virtual TTFT, and
+    a bit-exact materialized cache (batched executors vs. the per-request
+    ones);
+  * N>1 batched execution — with decisions pinned equal (factor-1
+    contention), each request's row of the shared batch-of-requests cache
+    matches the same session run sequentially: bit-exact at level 0,
+    within codec tolerance on adaptive (lossy + TEXT) mixes — and bit-exact
+    against the ``fused=False`` per-chunk oracle at level 0;
+  * engine primitives — ``insert_runs`` lands runs at per-row offsets
+    (including the capacity-abutting shifted-window case) without touching
+    other rows; masked/gathered ``prefill_extend`` variants equal the
+    single-row path;
+  * contention — ``ContentionModel`` calibration (factor(1) == 1, exact
+    interpolation, serialized fallback) and the decision feedback: a loaded
+    engine pushes Algorithm 1 away from TEXT recompute;
+  * calibration memoization — rewriting the bench file re-reads it (mtime
+    keyed), ``clear_calibration_cache`` forces it.
+"""
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import codec as kvcodec
+from repro.serving.kv_layout import extract_row
+from repro.serving.scheduler import ConcurrentScheduler, SessionRequest
+from repro.serving.session import ServeSession
+from repro.streaming import CacheGenStreamer, KVStore
+from repro.streaming.adaptation import TEXT
+from repro.streaming.network import BandwidthTrace, NetworkModel
+from repro.streaming.pipeline import ContentionModel
+from repro.streaming.streamer import FetchPlan
+
+T_CTX = 100
+CHUNK = 20  # 5 chunks
+
+IDEAL = ContentionModel({1: 1.0, 2: 1.0})  # factor-1 at any N
+
+
+@pytest.fixture(scope="module")
+def cfix():
+    from repro.configs import registry
+    from repro.models import build
+    from repro.serving.engine import Engine
+    from repro.serving.kv_layout import caches_to_codec_kv
+
+    rng = np.random.default_rng(0)
+    cfg = registry.get("smollm-360m").tiny()
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, cache_capacity=T_CTX + 40)
+    tokens = rng.integers(0, cfg.vocab_size, size=(1, T_CTX)).astype(np.int32)
+    logits, caches = eng.calculate_kv({"tokens": jnp.asarray(tokens)})
+    kv = caches_to_codec_kv(caches, 0, T_CTX)
+    ctab = kvcodec.profile([kv], kvcodec.CodecConfig(precision=10))
+    store = KVStore(ctab)
+    streamer = CacheGenStreamer(store, cfg)
+    metas = store.store_kv("ctx", kv, chunk_tokens=CHUNK)
+    u = sum(m.sizes[1] for m in metas) * 8 / 1e9  # level-1 ctx in 1 s
+    return dict(cfg=cfg, eng=eng, tokens=tokens, store=store,
+                streamer=streamer, metas=metas, u=u)
+
+
+def _mk_session(cfix, **kw):
+    kw.setdefault("slo_s", 1.25)
+    # recompute priced at paper scale vs. the SLO (as in test_session's
+    # interleave scenario): the falling trace TEXT-rescues, others stream
+    kw.setdefault("recompute_s", lambda t, p: 0.15 * 1.25 * t / CHUNK)
+    kw.setdefault("decode_bytes_per_s", 1e9)
+    kw.setdefault("max_run_tokens", 2 * CHUNK)
+    return ServeSession(cfix["streamer"], cfix["eng"], **kw)
+
+
+def _traces(u, n):
+    shapes = [
+        BandwidthTrace.constant(400 * u),
+        BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u]),
+        BandwidthTrace.steps(0.15, [2.0 * u, 0.4 * u, 2.0 * u, 0.4 * u]),
+        BandwidthTrace.constant(3 * u),
+    ]
+    return [shapes[i % len(shapes)] for i in range(n)]
+
+
+def _kv_np(caches):
+    return (
+        np.asarray(caches.kv_k[:, :, :T_CTX], np.float32),
+        np.asarray(caches.kv_v[:, :, :T_CTX], np.float32),
+    )
+
+
+def _oracle(cfix, result):
+    """fused=False per-chunk materialization of a session's realized plan."""
+    plan = FetchPlan(
+        context_id="ctx", result=result.stream_result(), metas=cfix["metas"]
+    )
+    return cfix["streamer"].materialize(
+        plan, cfix["eng"], cfix["tokens"], batch=1, fused=False
+    )
+
+
+# ---------------------------------------------------------------------------
+# N=1 degeneration: bit-identical to ServeSession
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_n1_bit_identical_to_session(cfix):
+    u = cfix["u"]
+    scheduler = ConcurrentScheduler(cfix["eng"], contention=IDEAL)
+    for trace, kw in (
+        (BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u]), {}),  # levels + TEXT
+        (BandwidthTrace.constant(3 * u), dict(fixed_level=0)),  # pure decode
+        (BandwidthTrace.steps(0.15, [2.0 * u, 0.4 * u] * 2),
+         dict(allow_text=False)),  # level escalation only
+    ):
+        prior = float(trace.gbps[0])
+        res = _mk_session(cfix, **kw).run(
+            "ctx", cfix["tokens"], NetworkModel(trace),
+            prior_throughput_gbps=prior,
+        )
+        out = scheduler.run([
+            SessionRequest(_mk_session(cfix, **kw), "ctx", cfix["tokens"],
+                           NetworkModel(trace), prior_throughput_gbps=prior)
+        ])
+        s = out.sessions[0]
+        assert s.configs == res.configs
+        assert [t.nbytes for t in s.timelines] == [t.nbytes for t in res.timelines]
+        assert [t.hedged for t in s.timelines] == [t.hedged for t in res.timelines]
+        assert abs(s.ttft_s - res.ttft_s) < 1e-12
+        for a, b in zip(_kv_np(s.caches), _kv_np(res.caches)):
+            assert np.array_equal(a, b), "N=1 scheduler cache != session cache"
+
+
+def test_scheduler_n1_contention_factor_is_identity(cfix):
+    """Any contention model is a no-op at N=1: factor(1) == 1.0 exactly."""
+    u = cfix["u"]
+    trace = BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u])
+    prior = float(trace.gbps[0])
+    res = _mk_session(cfix).run(
+        "ctx", cfix["tokens"], NetworkModel(trace), prior_throughput_gbps=prior
+    )
+    for model in (ContentionModel({}), ContentionModel({1: 1.0, 8: 8.0}),
+                  ContentionModel.measured()):
+        out = ConcurrentScheduler(cfix["eng"], contention=model).run([
+            SessionRequest(_mk_session(cfix), "ctx", cfix["tokens"],
+                           NetworkModel(trace), prior_throughput_gbps=prior)
+        ])
+        assert out.sessions[0].configs == res.configs
+        assert abs(out.sessions[0].ttft_s - res.ttft_s) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# N>1: batched execution vs sequential sessions and the per-chunk oracle
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_level0_bit_exact_vs_sequential_and_oracle(cfix):
+    n = 4
+    traces = _traces(cfix["u"], n)
+    scheduler = ConcurrentScheduler(cfix["eng"], contention=IDEAL)
+    out = scheduler.run([
+        SessionRequest(_mk_session(cfix, fixed_level=0), "ctx", cfix["tokens"],
+                       NetworkModel(tr), prior_throughput_gbps=float(tr.gbps[0]))
+        for tr in traces
+    ])
+    # cross-request batching actually happened: fewer decode dispatches than
+    # runs landed
+    assert out.n_runs > out.n_decode_batches >= 1
+    for i, tr in enumerate(traces):
+        seq = _mk_session(cfix, fixed_level=0).run(
+            "ctx", cfix["tokens"], NetworkModel(tr),
+            prior_throughput_gbps=float(tr.gbps[0]),
+        )
+        s = out.sessions[i]
+        assert s.configs == seq.configs
+        assert all(c == 0 for c in s.configs)
+        assert int(s.caches.length[0]) == T_CTX
+        for a, b in zip(_kv_np(s.caches), _kv_np(seq.caches)):
+            assert np.array_equal(a, b), f"request {i}: batched != sequential"
+        ref = _oracle(cfix, s)
+        for a, b in zip(_kv_np(s.caches), _kv_np(ref)):
+            assert np.array_equal(a, b), f"request {i}: batched != oracle"
+
+
+def test_scheduler_adaptive_mix_matches_sequential_within_tolerance(cfix):
+    """Heterogeneous traces, mixed levels + TEXT: decisions pinned equal via
+    the factor-1 model; per-request caches within codec tolerance of both
+    the sequential session and the fused=False oracle."""
+    n = 5
+    traces = _traces(cfix["u"], n)
+    scheduler = ConcurrentScheduler(cfix["eng"], contention=IDEAL)
+    # no bandwidth prior: chunk 0 streams at the default level (paper §5.3),
+    # later chunks adapt — this is what makes the mix non-trivial
+    out = scheduler.run([
+        SessionRequest(_mk_session(cfix), "ctx", cfix["tokens"],
+                       NetworkModel(tr))
+        for tr in traces
+    ])
+    all_configs = [c for s in out.sessions for c in s.configs]
+    assert TEXT in all_configs and any(c != TEXT for c in all_configs), (
+        "scenario must mix TEXT and bitstream chunks", all_configs)
+    assert out.n_text_batches >= 1
+    for i, tr in enumerate(traces):
+        seq = _mk_session(cfix).run("ctx", cfix["tokens"], NetworkModel(tr))
+        s = out.sessions[i]
+        assert s.configs == seq.configs
+        assert abs(s.ttft_s - seq.ttft_s) < 1e-12
+        assert int(s.caches.length[0]) == T_CTX
+        for a, b in zip(_kv_np(s.caches), _kv_np(seq.caches)):
+            np.testing.assert_allclose(a, b, atol=2e-2, rtol=2e-2)
+        ref = _oracle(cfix, s)
+        for a, b in zip(_kv_np(s.caches), _kv_np(ref)):
+            np.testing.assert_allclose(a, b, atol=2e-2, rtol=2e-2)
+
+
+def test_scheduler_rejects_foreign_engine_and_bad_tokens(cfix):
+    scheduler = ConcurrentScheduler(cfix["eng"], contention=IDEAL)
+    trace = BandwidthTrace.constant(3 * cfix["u"])
+    with pytest.raises(ValueError, match="share the scheduler's Engine"):
+        other = ServeSession(
+            cfix["streamer"], object.__new__(type(cfix["eng"])), slo_s=1.0,
+            recompute_s=lambda t, p: 1.0, decode_bytes_per_s=1e9,
+        )
+        scheduler.run([SessionRequest(other, "ctx", cfix["tokens"],
+                                      NetworkModel(trace))])
+    with pytest.raises(ValueError, match=r"tokens must be \(1, T\)"):
+        scheduler.run([
+            SessionRequest(_mk_session(cfix), "ctx",
+                           np.zeros((2, T_CTX), np.int32), NetworkModel(trace))
+        ])
+
+
+# ---------------------------------------------------------------------------
+# engine primitives
+# ---------------------------------------------------------------------------
+
+
+def test_insert_runs_shifted_window_at_capacity_edge(cfix):
+    """A short run near the capacity edge shares a batch with a longer run:
+    its padded window cannot sit at its start offset, so the shifted-window
+    merge must still land tokens exactly and leave everything else alone."""
+    eng, store = cfix["eng"], cfix["store"]
+    cap = eng.capacity  # 140
+    kv, spans = kvcodec.decode_chunk_runs(
+        [store.get_run("ctx", [(0, 0), (1, 0)]),  # 40 tokens -> t_max 40
+         store.get_run("ctx", [(4, 0)])],  # 20 tokens
+        store.tables, out_dtype=jnp.bfloat16,
+    )
+    start_short = cap - 25  # window [115, 155) > cap: shift = 15 + 10 = ...
+    caches = eng.empty_caches(3)
+    marker = caches.kv_k.at[:, 1, :].set(7.0)  # row 1 pre-filled sentinel
+    caches = caches._replace(kv_k=marker, kv_v=caches.kv_v.at[:, 1, :].set(7.0))
+    caches = eng.insert_runs(
+        caches, kv, rows=[2, 1], starts=[0, start_short],
+        run_tokens=[n for _, n in spans],
+    )
+    assert caches.length.tolist() == [0, start_short + 20, 40]
+    # the short run landed exactly at [start_short, start_short + 20) of row 1
+    solo = kvcodec.decode_chunks(
+        store.get_run("ctx", [(4, 0)]), store.tables, out_dtype=jnp.bfloat16
+    )
+    got = np.asarray(
+        caches.kv_k[:, 1, start_short : start_short + 20], np.float32
+    )
+    L, two, T, C = solo.shape
+    Hkv, Dh = cfix["cfg"].n_kv_heads, cfix["cfg"].d_head
+    want = np.asarray(solo[:, 0], np.float32).reshape(L, T, Hkv, Dh)
+    assert np.array_equal(got, want)
+    # sentinel preserved outside the written window
+    rest = np.asarray(caches.kv_k[:, 1, :start_short], np.float32)
+    assert np.array_equal(rest, np.full_like(rest, 7.0))
+    # row 0 untouched entirely
+    assert float(jnp.abs(caches.kv_k[:, 0]).max()) == 0.0
+
+
+def test_prefill_extend_rows_and_gather_match_single_row(cfix):
+    """Masked full-batch and gathered-subset TEXT recompute both equal the
+    plain single-row prefill_extend, and leave inactive rows untouched."""
+    eng, store, tokens = cfix["eng"], cfix["store"], cfix["tokens"]
+    kv0 = kvcodec.decode_chunks(
+        store.get_run("ctx", [(0, 0), (1, 0)]), store.tables,
+        out_dtype=jnp.bfloat16,
+    )
+    ref = eng.empty_caches(1)
+    ref = eng.decode_to_cache(ref, kv0, 0)
+    ref_logits, ref = eng.prefill_extend(
+        jnp.asarray(tokens[:, 40:60], jnp.int32), ref
+    )
+
+    for mode in ("masked", "gather"):
+        caches = eng.empty_caches(3)
+        for row in (0, 2):
+            caches = eng.insert_runs(caches, kv0, rows=[row], starts=[0],
+                                     run_tokens=[40])
+        before_row1 = np.asarray(caches.kv_k[:, 1], np.float32).copy()
+        if mode == "masked":
+            toks = np.zeros((3, 20), np.int32)
+            toks[0] = toks[2] = tokens[0, 40:60]
+            widths = np.asarray([20, 0, 20], np.int32)
+            logits, caches = eng.prefill_extend_rows(
+                jnp.asarray(toks), caches, widths
+            )
+            l0, l2 = logits[0:1], logits[2:3]
+        else:
+            toks = np.stack([tokens[0, 40:60]] * 2)
+            logits, caches = eng.prefill_extend_gather(
+                jnp.asarray(toks), caches, [0, 2]
+            )
+            l0, l2 = logits[0:1], logits[1:2]
+        assert caches.length.tolist() == [60, 0, 60]
+        for row, lg in ((0, l0), (2, l2)):
+            a = np.asarray(caches.kv_k[:, row, :60], np.float32)
+            b = np.asarray(ref.kv_k[:, 0, :60], np.float32)
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(lg, np.float32), np.asarray(ref_logits, np.float32),
+                atol=1e-4, rtol=1e-4,
+            )
+        after_row1 = np.asarray(caches.kv_k[:, 1], np.float32)
+        assert np.array_equal(before_row1, after_row1), f"{mode}: row 1 dirtied"
+
+
+def test_prefill_extend_rows_partial_width_at_capacity_edge(cfix):
+    """A partial-width committed chunk whose padded window overhangs the
+    capacity must land its tokens at the true offset (shifted-window merge),
+    preserve everything before them, and reject nothing it shouldn't."""
+    eng, tokens = cfix["eng"], cfix["tokens"]
+    cap = eng.capacity  # 140
+    tc, w = 16, 8
+    start = cap - 10  # window [130, 146) overhangs; committed [130, 138) fits
+    caches = eng.empty_caches(2)
+    caches = caches._replace(
+        kv_k=caches.kv_k.at[:, 0, :].set(7.0),
+        kv_v=caches.kv_v.at[:, 0, :].set(7.0),
+        length=jnp.asarray([start, 0], jnp.int32),
+    )
+    toks = np.zeros((2, tc), np.int32)
+    toks[0] = tokens[0, :tc]
+    _, out = eng.prefill_extend_rows(
+        jnp.asarray(toks), caches, np.asarray([w, 0], np.int32)
+    )
+    assert out.length.tolist() == [start + w, 0]
+    # reference: plain single-row prefill_extend of exactly the committed
+    # tokens at the same offset (causality makes the first w tokens' KV
+    # independent of the chunk tail)
+    ref = eng.empty_caches(1)
+    ref = ref._replace(
+        kv_k=ref.kv_k.at[:, 0, :].set(7.0),
+        kv_v=ref.kv_v.at[:, 0, :].set(7.0),
+        length=jnp.asarray([start], jnp.int32),
+    )
+    _, ref = eng.prefill_extend(jnp.asarray(toks[:1, :w], jnp.int32), ref)
+    np.testing.assert_allclose(
+        np.asarray(out.kv_k[:, 0, start : start + w], np.float32),
+        np.asarray(ref.kv_k[:, 0, start : start + w], np.float32),
+        atol=1e-5, rtol=1e-5,
+    )
+    # sentinel preserved everywhere outside the committed tokens
+    before = np.asarray(out.kv_k[:, 0, :start], np.float32)
+    assert np.array_equal(before, np.full_like(before, 7.0))
+    tail = np.asarray(out.kv_k[:, 0, start + w :], np.float32)
+    assert np.array_equal(tail, np.full_like(tail, 7.0))
+    # inactive row untouched
+    assert float(jnp.abs(out.kv_k[:, 1]).max()) == 0.0
+
+
+def test_insert_runs_rejects_overhanging_run(cfix):
+    eng, store = cfix["eng"], cfix["store"]
+    kv = kvcodec.decode_chunks(
+        store.get_run("ctx", [(0, 0)]), store.tables, out_dtype=jnp.bfloat16
+    )
+    caches = eng.empty_caches(1)
+    with pytest.raises(ValueError, match="overhangs cache capacity"):
+        eng.insert_runs(caches, kv, rows=[0], starts=[eng.capacity - 10],
+                        run_tokens=[20])
+
+
+# ---------------------------------------------------------------------------
+# contention model + decision feedback
+# ---------------------------------------------------------------------------
+
+
+def test_contention_model_factors():
+    m = ContentionModel({1: 1.0, 2: 1.5, 4: 3.0})
+    assert m.factor(1) == 1.0
+    assert m.factor(2) == 1.5
+    assert m.factor(3) == pytest.approx(2.25)  # linear between 2 and 4
+    assert m.factor(4) == 3.0
+    assert m.factor(6) == pytest.approx(4.5)  # last marginal slope extended
+    empty = ContentionModel({})
+    assert empty.factor(1) == 1.0
+    assert empty.factor(5) == 5.0  # fully serialized fallback
+    # measured points without an explicit 1 get the exact-1 anchor
+    assert ContentionModel({4: 2.0}).factor(1) == 1.0
+    assert ContentionModel({4: 2.0}).factor(4) == 2.0
+
+
+def test_contention_pushes_adaptation_off_text(cfix):
+    """A loaded engine inflates the projected recompute cost inside
+    choose_config: the same falling trace that is TEXT-rescued when alone
+    must shed TEXT chunks when 4 sessions contend (factor 4 recompute)."""
+    u = cfix["u"]
+    mk = lambda: _mk_session(  # noqa: E731
+        cfix, recompute_s=lambda t, p: 0.15 * 1.25 * t / CHUNK
+    )
+    trace = lambda: BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u])  # noqa: E731
+    solo = ConcurrentScheduler(cfix["eng"], contention=IDEAL).run([
+        SessionRequest(mk(), "ctx", cfix["tokens"], NetworkModel(trace()),
+                       prior_throughput_gbps=1.0 * u)
+    ])
+    n_text_solo = sum(1 for c in solo.sessions[0].configs if c == TEXT)
+    assert n_text_solo > 0, (
+        "baseline must choose TEXT for this scenario", solo.sessions[0].configs)
+    crowd = ConcurrentScheduler(
+        cfix["eng"], contention=ContentionModel({})  # fully serialized
+    ).run([
+        SessionRequest(mk(), "ctx", cfix["tokens"], NetworkModel(trace()),
+                       prior_throughput_gbps=1.0 * u)
+        for _ in range(4)
+    ])
+    for s in crowd.sessions:
+        n_text = sum(1 for c in s.configs if c == TEXT)
+        assert n_text < n_text_solo, (
+            "contended session should shed TEXT recompute",
+            s.configs, solo.sessions[0].configs)
+
+
+# ---------------------------------------------------------------------------
+# calibration memoization (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_rereads_rewritten_bench_file(tmp_path, monkeypatch):
+    from repro.streaming import calibration
+
+    path = tmp_path / "BENCH_codec.json"
+
+    def write(v, stacked=None):
+        report = {"host_backend": jax.default_backend(),
+                  "fused": {"bytes_per_s": v}}
+        if stacked:
+            report["stacked"] = stacked
+        path.write_text(json.dumps(report))
+
+    monkeypatch.setenv("CACHEGEN_BENCH_CODEC", str(path))
+    calibration.clear_calibration_cache()
+    write(111.0)
+    assert calibration.measured_decode_bytes_per_s() == 111.0
+    # rewrite in place: the mtime-keyed memo must pick up the new contents
+    # without an explicit cache clear
+    write(222.0)
+    os.utime(path, ns=(1, 1))  # force a distinct signature on coarse clocks
+    assert calibration.measured_decode_bytes_per_s() == 222.0
+    # explicit reset also works
+    write(333.0)
+    os.utime(path, ns=(2, 2))
+    calibration.clear_calibration_cache()
+    assert calibration.measured_decode_bytes_per_s() == 333.0
+
+    # contention factors parse + clamp, and invalidate the same way
+    write(333.0, stacked={
+        "1": {"stacked": {"bytes_per_s": 100.0}},
+        "4": {"stacked": {"bytes_per_s": 200.0}},
+    })
+    os.utime(path, ns=(3, 3))
+    factors = calibration.measured_contention_factors()
+    assert factors == {1: 1.0, 4: 2.0}
+    write(333.0, stacked={
+        "1": {"stacked": {"bytes_per_s": 100.0}},
+        "4": {"stacked": {"bytes_per_s": 800.0}},  # super-linear: clamp to 1
+    })
+    os.utime(path, ns=(4, 4))
+    assert calibration.measured_contention_factors() == {1: 1.0, 4: 1.0}
+    calibration.clear_calibration_cache()
+
+
+def test_calibration_falls_through_partial_candidate(tmp_path, monkeypatch):
+    """A parseable report that lacks the wanted measurement must not shadow
+    a complete report later in the candidate list."""
+    from repro.streaming import calibration
+
+    partial = tmp_path / "partial.json"
+    complete = tmp_path / "complete.json"
+    backend = jax.default_backend()
+    partial.write_text(json.dumps({"host_backend": backend}))  # no fused key
+    complete.write_text(json.dumps({
+        "host_backend": backend,
+        "fused": {"bytes_per_s": 444.0},
+        "stacked": {"1": {"stacked": {"bytes_per_s": 50.0}},
+                    "2": {"stacked": {"bytes_per_s": 80.0}}},
+    }))
+    monkeypatch.setattr(
+        calibration, "bench_codec_candidates",
+        lambda: [str(partial), str(complete)],
+    )
+    calibration.clear_calibration_cache()
+    try:
+        assert calibration.measured_decode_bytes_per_s() == 444.0
+        assert calibration.measured_contention_factors() == {1: 1.0, 2: 1.25}
+    finally:
+        calibration.clear_calibration_cache()
+
+
+# ---------------------------------------------------------------------------
+# benchmark acceptance (separate CI job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_concurrent_sessions_bench_acceptance(tmp_path, monkeypatch):
+    """Reduced benchmarks/concurrent_sessions.py run: batched and sequential
+    modes agree on caches (bit-exact at level 0) and the scheduler actually
+    batches (fewer decode dispatches than runs).  Wall-clock speedups are
+    recorded in the JSON but not asserted here — CI runners are noisy; the
+    committed BENCH_concurrency.json carries this host's measurement."""
+    import benchmarks.concurrent_sessions as cs
+
+    monkeypatch.setattr(cs, "N_SESSIONS", (1, 4))
+    report = cs.run(out_path=str(tmp_path / "BENCH_concurrency.json"),
+                    repeats=1, verbose=False)
+    acc = report["acceptance"]
+    assert acc["caches_match_all"] is True
+    assert acc["level0_bit_exact"] is True
+    rows = {(w["scenario"], w["n_sessions"]): w for w in report["workloads"]}
+    n4 = rows[("level0", 4)]
+    assert n4["batched"]["n_decode_batches"] < n4["batched"]["n_runs"]
+    assert n4["batched"]["n_runs"] == n4["sequential"]["n_runs"]
+    assert rows[("adaptive", 4)]["caches_match"] is True
+    assert {c["n_sessions"] for c in report["contended"]} == {1, 4}
+    for c in report["contended"]:
+        assert c["contention_factor"] >= 1.0
+        assert np.isfinite(c["ttft_p95_s"])
