@@ -150,8 +150,8 @@ def scenario_matrix(u: float) -> Dict[str, dict]:
             recompute_frac=0.45,
             net_kwargs={},
         ),
-        # flat link with a heavy straggler tail (virtual-clock hedging is
-        # supported; real duplicated storage fetches are a ROADMAP follow-on)
+        # flat link with a heavy straggler tail (hedged duplicated fetches
+        # with real cancellation are scored in benchmarks/transport_session.py)
         "straggler": dict(
             trace=BandwidthTrace.constant(2.0 * u),
             slo_s=1.5,

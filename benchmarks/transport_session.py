@@ -1,0 +1,250 @@
+"""Hedged-fetch transport benchmark: straggler tails vs. real duplicated I/O.
+
+Where adaptive_session.py scores Algorithm 1's *config* adaptation, this
+benchmark scores the transport layer's *tail* mitigation (ISSUE 4): live
+``ServeSession`` context loads over a straggler-prone link, hedged vs.
+unhedged, on both transports —
+
+  * ``sim`` — :class:`~repro.streaming.transport.SimTransport`: genuinely
+    asynchronous paced store reads whose completion timing is the
+    virtual-clock ``NetworkModel.fetch_outcome`` arithmetic (keyed
+    per-(chunk, attempt) straggler stalls), so every trial is deterministic
+    in its seed and directly comparable to the simulator;
+  * ``tcp`` — :class:`~repro.streaming.transport.TcpStoreServer` +
+    ``TcpTransport``: an actual length-prefixed socket link, paced
+    server-side to the same nominal rate with the same keyed stall
+    injection; TTFT here is wall time measured off the wire.
+
+Per (transport × hedged) row: p50/p95 TTFT across trials, hedge counts,
+total wire bytes and the cancelled losers' duplicate bytes.  A direct probe
+additionally forces a stalled primary and records that the losing attempt
+really was cancelled mid-stream (sim: paced reader stopped short; tcp:
+socket closed with a partial byte count).
+
+Acceptance (ISSUE 4): hedged p95 TTFT beats unhedged on *both* transports
+under straggler injection; unhedged runs report zero duplicate bytes; and
+hedged duplicate bytes stay a bounded fraction of the wire bytes.  Results
+go to ``BENCH_transport.json`` (uploaded as a CI artifact by the slow job).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+try:
+    from benchmarks.adaptive_session import build_assets
+except ModuleNotFoundError:  # run as a plain script: python benchmarks/...
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.adaptive_session import build_assets
+
+BENCH_TRANSPORT_FILENAME = "BENCH_transport.json"
+_BENCH_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", BENCH_TRANSPORT_FILENAME
+)
+
+ARCH = "smollm-360m"
+CHUNK_TOKENS = 32
+SLO_S = 1.5
+STRAGGLER = dict(straggler_p=0.3, straggler_scale_s=0.25, straggler_alpha=1.5)
+HEDGE_AFTER_S = 0.08  # < one level-1 chunk transfer: slow fetches hedge too
+DUPLICATE_FRAC_BOUND = 0.6  # hedged duplicate bytes must stay below this
+
+
+def _percentiles(xs: List[float]) -> Dict[str, float]:
+    a = np.asarray(xs, np.float64)
+    return {
+        "ttft_p50_s": float(np.percentile(a, 50)),
+        "ttft_p95_s": float(np.percentile(a, 95)),
+        "ttft_mean_s": float(a.mean()),
+        "ttft_max_s": float(a.max()),
+    }
+
+
+def _mk_session(assets, transport, hedged: bool):
+    from repro.serving.session import ServeSession
+
+    return ServeSession(
+        assets.streamer,
+        assets.engine,
+        slo_s=SLO_S,
+        # GPU busy at paper scale: no TEXT escape, tails must be hedged away
+        recompute_s=lambda t, p: 0.45 * SLO_S * t / CHUNK_TOKENS,
+        fixed_level=1,
+        max_run_tokens=2 * CHUNK_TOKENS,
+        hedge_after_s=HEDGE_AFTER_S if hedged else None,
+        transport=transport,
+    )
+
+
+def _run_rows(assets, *, mode: str, trials: int, seed: int, verbose: bool):
+    from repro.streaming import BandwidthTrace, NetworkModel
+    from repro.streaming.transport import TcpStoreServer, TcpTransport
+
+    u = assets.u_gbps
+    trace = BandwidthTrace.constant(2.0 * u)
+    server = None
+    if mode == "tcp":
+        server = TcpStoreServer(
+            assets.streamer.store, pace_gbps=2.0 * u, seed=seed, **STRAGGLER
+        )
+    try:
+        rows = []
+        for hedged in (False, True):
+            ttfts, total_bytes, dup_bytes, n_hedged = [], 0.0, 0.0, 0
+            for trial in range(trials):
+                if mode == "tcp":
+                    # fresh keyed stall stream per trial, same for both arms
+                    server.seed = seed + trial
+                    transport = TcpTransport.for_server(server)
+                else:
+                    transport = None  # SimTransport over the trial's network
+                net = NetworkModel(trace, seed=seed + trial, **STRAGGLER)
+                sess = _mk_session(assets, transport, hedged)
+                res = sess.run(
+                    "ctx", assets.tokens, net, prior_throughput_gbps=2.0 * u
+                )
+                ttfts.append(res.ttft_s)
+                total_bytes += res.total_bytes
+                dup_bytes += res.duplicate_bytes
+                n_hedged += res.n_hedged
+            row = {
+                "transport": mode,
+                "hedged": hedged,
+                "hedge_after_s": HEDGE_AFTER_S if hedged else None,
+                "trials": trials,
+                **_percentiles(ttfts),
+                "slo_ok_frac": float(np.mean([t <= SLO_S for t in ttfts])),
+                "n_hedged_total": n_hedged,
+                "total_bytes": total_bytes,
+                "duplicate_bytes": dup_bytes,
+                "duplicate_frac": dup_bytes / max(total_bytes, 1.0),
+            }
+            rows.append(row)
+            if verbose:
+                print(
+                    f"[{mode:>3s} hedged={str(hedged):>5s}] "
+                    f"p50={row['ttft_p50_s']:.3f}s p95={row['ttft_p95_s']:.3f}s "
+                    f"hedges={n_hedged} dup_frac={row['duplicate_frac']:.3f}"
+                )
+        return rows
+    finally:
+        if server is not None:
+            server.close()
+
+
+def _cancellation_probe(assets, seed: int) -> Dict[str, dict]:
+    """Force a stalled primary on each transport and show the loser is
+    really cancelled mid-stream, not merely ignored."""
+    from repro.streaming import BandwidthTrace, NetworkModel
+    from repro.streaming.transport import (
+        SimTransport,
+        TcpStoreServer,
+        TcpTransport,
+    )
+
+    store = assets.streamer.store
+    nb = store.meta("ctx")[0].sizes[1]
+    pace = nb * 8 / 1e9 / 0.2  # ~200 ms per chunk transfer
+    stall = dict(straggler_p=1.0, straggler_scale_s=1.0, straggler_alpha=50.0)
+    probe = {}
+    net = NetworkModel(BandwidthTrace.constant(pace), seed=seed, **stall)
+    res = SimTransport(store, net, time_scale=1.0).fetch_run(
+        "ctx", [(0, 1)], hedge_after_s=0.05
+    ).result(timeout=60)
+    probe["sim"] = {
+        "hedge_won": res.hedged,
+        "loser_cancelled": res.loser_cancelled,
+        "loser_bytes_read": res.loser_bytes_read,
+        "payload_bytes": res.nbytes,
+        "cancelled_mid_stream": res.loser_bytes_read < res.nbytes,
+    }
+    with TcpStoreServer(store, pace_gbps=pace, seed=seed, **stall) as server:
+        res = TcpTransport.for_server(server).fetch_run(
+            "ctx", [(0, 1)], hedge_after_s=0.05
+        ).result(timeout=60)
+        probe["tcp"] = {
+            "hedge_won": res.hedged,
+            "loser_cancelled": res.loser_cancelled,
+            "loser_bytes_read": res.loser_bytes_read,
+            "payload_bytes": res.nbytes,
+            "cancelled_mid_stream": res.loser_bytes_read < res.nbytes,
+        }
+    return probe
+
+
+def run(
+    *,
+    out_path: Optional[str] = _BENCH_PATH,
+    sim_trials: int = 20,
+    tcp_trials: int = 12,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    import jax
+
+    assets = build_assets(ARCH, chunk_tokens=CHUNK_TOKENS, seed=seed)
+    rows = _run_rows(assets, mode="sim", trials=sim_trials, seed=seed,
+                     verbose=verbose)
+    rows += _run_rows(assets, mode="tcp", trials=tcp_trials, seed=seed,
+                      verbose=verbose)
+    probe = _cancellation_probe(assets, seed)
+
+    by = {(r["transport"], r["hedged"]): r for r in rows}
+    acceptance = {
+        "sim_hedged_beats_unhedged_p95": bool(
+            by[("sim", True)]["ttft_p95_s"] < by[("sim", False)]["ttft_p95_s"]
+        ),
+        "tcp_hedged_beats_unhedged_p95": bool(
+            by[("tcp", True)]["ttft_p95_s"] < by[("tcp", False)]["ttft_p95_s"]
+        ),
+        "unhedged_has_no_duplicates": bool(
+            by[("sim", False)]["duplicate_bytes"] == 0.0
+            and by[("tcp", False)]["duplicate_bytes"] == 0.0
+        ),
+        "duplicate_bytes_bounded": bool(
+            by[("sim", True)]["duplicate_frac"] <= DUPLICATE_FRAC_BOUND
+            and by[("tcp", True)]["duplicate_frac"] <= DUPLICATE_FRAC_BOUND
+        ),
+        "losers_cancelled_mid_stream": bool(
+            probe["sim"]["cancelled_mid_stream"]
+            and probe["tcp"]["cancelled_mid_stream"]
+        ),
+    }
+    report = {
+        "host_backend": jax.default_backend(),
+        "arch": ARCH,
+        "config": {
+            "slo_s": SLO_S,
+            "chunk_tokens": CHUNK_TOKENS,
+            "hedge_after_s": HEDGE_AFTER_S,
+            "straggler": STRAGGLER,
+            "trace_gbps": 2.0 * assets.u_gbps,
+            "duplicate_frac_bound": DUPLICATE_FRAC_BOUND,
+        },
+        "rows": rows,
+        "cancellation_probe": probe,
+        "acceptance": acceptance,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        if verbose:
+            print(f"wrote {os.path.abspath(out_path)}")
+    if verbose:
+        print("acceptance:", acceptance)
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sim-trials", type=int, default=20)
+    ap.add_argument("--tcp-trials", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(sim_trials=args.sim_trials, tcp_trials=args.tcp_trials, seed=args.seed)

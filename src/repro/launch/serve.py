@@ -16,6 +16,17 @@ context loads on the one shared engine via
 its own trace/policy/clock, while decodes, cache insertions and TEXT
 recomputes are batched across requests, and per-session compute charges are
 stretched by the measured contention model.
+
+``--transport`` picks the fetch path (ISSUE 4): ``sim`` (default) paces
+real asynchronous store reads against the request's bandwidth trace —
+simulator-differential, so ``--check-sim`` still holds; ``local`` reads the
+store directly (wall-time link); ``tcp`` brings up an in-process
+:class:`~repro.streaming.transport.TcpStoreServer` and fetches every
+bitstream over an actual paced socket — the session's throughput estimator
+then measures a real link, so ``--check-sim`` is meaningless there.
+``--hedge-after S`` issues a duplicate fetch for any chunk still in flight
+after S seconds; the loser is cancelled and its bytes are reported as
+duplicate overhead.
 """
 from __future__ import annotations
 
@@ -40,6 +51,18 @@ def main() -> None:
     ap.add_argument("--concurrency", type=int, default=1,
                     help="serve requests in waves of N concurrent context "
                          "loads batched on the shared engine")
+    ap.add_argument("--transport", choices=("sim", "local", "tcp"),
+                    default="sim",
+                    help="fetch path: sim = trace-paced async reads "
+                         "(simulator-differential), local = direct store "
+                         "reads, tcp = real socket link to an in-process "
+                         "store server")
+    ap.add_argument("--hedge-after", type=float, default=None, metavar="S",
+                    help="issue a duplicate (hedged) fetch for any chunk "
+                         "still in flight after S seconds; the loser is "
+                         "cancelled")
+    ap.add_argument("--tcp-pace-gbps", type=float, default=0.2,
+                    help="--transport tcp: server-side link pacing")
     args = ap.parse_args()
     if args.concurrency < 1:
         raise SystemExit("--concurrency must be >= 1")
@@ -93,6 +116,20 @@ def main() -> None:
     store.store_kv("ctx", kv, chunk_tokens=max(args.ctx_len // 4, 50))
     print(f"[serve] context stored: {store.storage_bytes('ctx')/1e3:.1f} KB all levels")
 
+    # fetch path: sim (default, per-request trace pacing), local, or a real
+    # in-process socket server with paced sends
+    from repro.streaming import LocalTransport, TcpStoreServer, TcpTransport
+
+    tcp_server = None
+    transport = None  # sim: SessionTask builds SimTransport per request
+    if args.transport == "local":
+        transport = LocalTransport(store)
+    elif args.transport == "tcp":
+        tcp_server = TcpStoreServer(store, pace_gbps=args.tcp_pace_gbps)
+        transport = TcpTransport.for_server(tcp_server)
+        print(f"[serve] tcp store server on {tcp_server.address} "
+              f"paced at {args.tcp_pace_gbps} Gbps")
+
     recompute_s = lambda t, p: 0.02 * t / 64  # noqa: E731
     session = ServeSession(
         streamer,
@@ -103,6 +140,8 @@ def main() -> None:
         allow_text=(cfg.family != "vlm"),
         fixed_level=args.fixed_level,
         max_run_tokens=args.max_run_tokens,
+        hedge_after_s=args.hedge_after,
+        transport=transport,
     )
 
     names = {TEXT: "TEXT"}
@@ -110,11 +149,15 @@ def main() -> None:
     def describe(r, res, extra=""):
         first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
         gen = engine.generate_with_kv(res.caches, first, args.gen)
+        hedge = (
+            f" hedged={res.n_hedged} dup={res.duplicate_bytes/1e3:.1f}KB"
+            if args.hedge_after is not None else ""
+        )
         print(
             f"[req {r}] configs={[names.get(c, f'L{c}') for c in res.configs]} "
             f"ttft={res.ttft_s*1e3:.1f} ms ok={not res.slo_violated} "
             f"runs={res.n_runs} wall_decode={res.wall_decode_s*1e3:.1f} ms "
-            f"tokens={gen[0].tolist()}" + extra
+            f"tokens={gen[0].tolist()}" + hedge + extra
         )
 
     def check_sim(res, trace, prior):
@@ -124,7 +167,7 @@ def main() -> None:
             "ctx", NetworkModel(trace, rtt_s=0.002), slo_s=args.slo_ms / 1e3,
             decode_bytes_per_s=300e6, recompute_s=recompute_s,
             prior_throughput_gbps=prior, allow_text=(cfg.family != "vlm"),
-            fixed_level=args.fixed_level,
+            fixed_level=args.fixed_level, hedge_after_s=args.hedge_after,
         )
         return f" sim_match={res.configs == plan.result.configs}"
 
@@ -139,6 +182,8 @@ def main() -> None:
                 prior_throughput_gbps=prior,
             )
             describe(r, res, check_sim(res, trace, prior))
+        if tcp_server is not None:
+            tcp_server.close()
         return
 
     from repro.serving.scheduler import ConcurrentScheduler, SessionRequest
@@ -164,6 +209,7 @@ def main() -> None:
             SessionRequest(
                 session, "ctx", tokens, NetworkModel(tr, rtt_s=0.002),
                 prior_throughput_gbps=float(tr.gbps[0]),
+                transport=transport,
             )
             for tr in traces
         ])
@@ -175,6 +221,8 @@ def main() -> None:
             f"wall_total={out.wall_total_s*1e3:.1f} ms"
         )
         served += wave
+    if tcp_server is not None:
+        tcp_server.close()
 
 
 if __name__ == "__main__":

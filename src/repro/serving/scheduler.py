@@ -34,6 +34,11 @@ Rounds are virtual-time ordered: each round steps every unfinished task
 once (earliest next fetch first), then executes the round's queue —
 decodes/inserts before recomputes, preserving each session's segment order
 (a task emits at most one run followed by at most one TEXT item per round).
+Since the transport split (ISSUE 4), a task's step may instead *issue* a
+chunk fetch through its :class:`~repro.streaming.transport.Transport`
+(returning no work): while the scheduler steps the other sessions, that
+fetch — and any hedged duplicate the transport races against it — is real
+I/O in flight on worker threads, resolved on the task's next turn.
 """
 from __future__ import annotations
 
@@ -77,6 +82,10 @@ class SessionRequest:
     network: NetworkModel
     prior_throughput_gbps: Optional[float] = None
     start_t: float = 0.0
+    # any Transport (Local/Sim/Tcp) for this request's fetches; None falls
+    # back to the session's transport, else to a per-request SimTransport
+    # over ``network`` (see SessionTask.__init__)
+    transport: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -157,6 +166,7 @@ class ConcurrentScheduler:
                 prior_throughput_gbps=r.prior_throughput_gbps,
                 start_t=r.start_t,
                 compute_scale=scale,
+                transport=r.transport,
             )
             for i, r in enumerate(requests)
         ]
@@ -171,11 +181,17 @@ class ConcurrentScheduler:
             stats.n_rounds += 1
             # step in virtual-time order: the session whose next fetch
             # completes first resolves its chunk first (matches how a real
-            # shared frontend would see arrivals)
+            # shared frontend would see arrivals).  Over wall-real
+            # transports (tcp / paced sim), a task whose in-flight fetch
+            # hasn't landed yet is deferred to a later round rather than
+            # blocked on — one straggling socket must not convoy the other
+            # sessions' ready work; when nothing is ready, block on the
+            # virtual-earliest fetch (the round has no other work to do).
             live.sort(key=lambda t: t.next_fetch_t)
+            ready = [t for t in live if t.fetch_ready]
             round_runs: List[RunWork] = []
             round_texts: List[TextWork] = []
-            for t in live:
+            for t in ready if ready else live[:1]:
                 self._n_active = sum(1 for x in tasks if not x.done)
                 for w in t.step():
                     (round_runs if isinstance(w, RunWork) else round_texts).append(w)

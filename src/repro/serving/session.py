@@ -35,15 +35,31 @@ file's loop (the differential tests in tests/test_scheduler.py hold it to
 bit-exactness).  Decisions stay per-request either way — each task keeps
 its own clock and policy, so every load remains simulator-differential.
 
-Fetch/decode overlap uses the segmenter's double buffering: fetched chunks
-accumulate until ``max_run_tokens``, then the run is dispatched as one
-batched decode (JAX dispatch is asynchronous on accelerator backends, so the
-decode of a full buffer proceeds while the loop keeps fetching the next
-buffer).  A TEXT chunk force-flushes the buffer first — its
-``prefill_extend`` reads the cache at its own token offset, so all earlier
-chunks must have landed; the task asserts contiguous segment coverage with a
-host-side token counter (reading ``caches.length`` back would sync the
-device per segment).
+Transport split (ISSUE 4)
+-------------------------
+Bitstream fetches go through a pluggable
+:class:`~repro.streaming.transport.Transport`: the task *issues* a chunk's
+fetch (``fetch_run`` → cancellable handle, I/O on a worker thread) in one
+step and *resolves* it in the next, so the returned work items' decode
+dispatches genuinely overlap the in-flight fetch — and a hedged duplicate
+fetch is real duplicated I/O whose loser is cancelled, with the losing
+attempt's bytes surfaced as ``SessionResult.duplicate_bytes``.  The default
+transport is :class:`~repro.streaming.transport.SimTransport` over the
+request's ``NetworkModel``, whose completion timing is the simulator's own
+``fetch_outcome`` arithmetic — which is what keeps the session
+differential-exact against ``simulate_stream`` (same trace in, same
+decisions out).  TEXT chunks never touch storage; their modeled transfer is
+charged straight on the virtual clock (``StreamClock.virtual_fetch``).
+
+Fetch/decode overlap additionally uses the segmenter's double buffering:
+fetched chunks accumulate until ``max_run_tokens``, then the run is
+dispatched as one batched decode (JAX dispatch is asynchronous on
+accelerator backends, so the decode of a full buffer proceeds while the
+loop keeps fetching the next buffer).  A TEXT chunk force-flushes the
+buffer first — its ``prefill_extend`` reads the cache at its own token
+offset, so all earlier chunks must have landed; the task asserts contiguous
+segment coverage with a host-side token counter (reading ``caches.length``
+back would sync the device per segment).
 
 The session emits :class:`~repro.streaming.pipeline.ChunkTimeline`-
 compatible records (``SessionResult.stream_result()``), so everything that
@@ -70,6 +86,7 @@ from repro.streaming.calibration import measured_decode_bytes_per_s
 from repro.streaming.network import NetworkModel
 from repro.streaming.pipeline import ChunkTimeline, StreamClock, StreamResult
 from repro.streaming.streamer import CacheGenStreamer, PlanSegment, RunSegmenter
+from repro.streaming.transport import SimTransport, Transport
 
 __all__ = [
     "ServeSession",
@@ -111,6 +128,16 @@ class SessionResult:
     @property
     def total_bytes(self) -> float:
         return sum(t.nbytes for t in self.timelines)
+
+    @property
+    def duplicate_bytes(self) -> float:
+        """Wire bytes the cancelled hedge losers transferred (hedged I/O
+        overhead; 0 when no hedge fired)."""
+        return sum(t.duplicate_bytes for t in self.timelines)
+
+    @property
+    def n_hedged(self) -> int:
+        return sum(1 for t in self.timelines if t.hedged)
 
     def level_histogram(self) -> Dict[int, int]:
         """Realized streaming-config histogram (TEXT keyed as -1)."""
@@ -202,6 +229,13 @@ class SessionTask:
     value (``pipeline.ContentionModel``), so adaptation under a loaded
     engine sheds compute (TEXT) work exactly like it sheds bytes under a
     collapsing link.
+
+    Stepping is two-phase per bitstream chunk: one :meth:`step` decides the
+    chunk's config and *issues* its fetch through the transport (returning
+    no work yet — the I/O is now in flight on a worker thread), the next
+    resolves the handle, accounts the realized timing on the clock, and
+    emits the work items whose inputs are complete.  TEXT chunks resolve in
+    a single step (no storage I/O).
     """
 
     def __init__(
@@ -215,6 +249,7 @@ class SessionTask:
         prior_throughput_gbps: Optional[float] = None,
         start_t: float = 0.0,
         compute_scale: Optional[Callable[[], float]] = None,
+        transport: Optional[Transport] = None,
     ):
         self.session = session
         self.context_id = context_id
@@ -244,43 +279,86 @@ class SessionTask:
             compute_scale=compute_scale,
         )
         self.segmenter = RunSegmenter(session.max_run_tokens)
+        # the fetch path: explicit transport, or the session's; default is
+        # the simulator-exact SimTransport over this request's NetworkModel
+        t = transport if transport is not None else session.transport
+        self.transport: Transport = (
+            t if t is not None else SimTransport(store, network)
+        )
         self.timelines: List[ChunkTimeline] = []
         self._i = 0
         self._offset = 0  # tokens whose work items have been emitted
+        self._pending = None  # (handle, meta, config, nbytes, scale) in flight
 
     @property
     def done(self) -> bool:
-        return self._i >= len(self.metas)
+        return self._i >= len(self.metas) and self._pending is None
+
+    @property
+    def fetch_ready(self) -> bool:
+        """True when :meth:`step` would not block on in-flight wall-real
+        I/O: no fetch pending, the pending handle already completed, or the
+        transport resolves on the virtual clock (blocking costs ~no wall
+        time).  The concurrent scheduler uses this to keep a straggling
+        socket fetch from convoying other sessions' ready work."""
+        if self._pending is None or self._pending[0].done():
+            return True
+        return not getattr(self.transport, "realtime", False)
 
     @property
     def next_fetch_t(self) -> float:
         """When this task's next chunk fetch would start (virtual clock)."""
         return self.clock.fetch_t
 
-    def step(self) -> List[object]:
-        """Advance one chunk: decide, fetch, validate, segment.
-
-        Returns the work items now ready to execute (in order).  The last
-        chunk also flushes the segmenter, so once :attr:`done` every item
-        has been emitted.
-        """
-        if self.done:
-            return []
-        i = self._i
-        m = self.metas[i]
-        tl = self.clock.step(self.metas, i)
-        self.timelines.append(tl)
-        if tl.config == TEXT:
+    def _advance(self, m, config: int, blob: Optional[bytes]) -> List[object]:
+        """Segment one accounted chunk and emit any completed work items."""
+        if config == TEXT:
             segs = self.segmenter.push(m, TEXT)
         else:
-            blob = self.store.get_kv(self.context_id, m.chunk_idx, tl.config)
-            if self.session.validate_blobs:
-                validate_blob(blob, m, tl.config)
-            segs = self.segmenter.push(m, tl.config, blob)
+            segs = self.segmenter.push(m, config, blob)
         self._i += 1
         if self._i == len(self.metas):
             segs = segs + self.segmenter.flush()
         return [self._to_work(s) for s in segs]
+
+    def step(self) -> List[object]:
+        """Advance one phase: resolve the in-flight fetch, or decide the
+        next chunk (issuing its fetch through the transport).
+
+        Returns the work items now ready to execute (in order); a step that
+        only *issues* I/O returns none.  The last chunk also flushes the
+        segmenter, so once :attr:`done` every item has been emitted.
+        """
+        if self._pending is not None:
+            handle, m, config, nbytes, scale = self._pending
+            self._pending = None
+            res = handle.result()
+            if self.session.validate_blobs:
+                validate_blob(res.blobs[0], m, config)
+            self.timelines.append(
+                self.clock.account(m, config, nbytes, res, scale)
+            )
+            return self._advance(m, config, res.blobs[0])
+        if self.done:
+            return []
+        i = self._i
+        m = self.metas[i]
+        config, nbytes, scale = self.clock.decide(self.metas, i)
+        if config == TEXT:
+            # text is already local — its transfer is modeled, not fetched
+            outcome = self.clock.virtual_fetch(nbytes, m.chunk_idx)
+            self.timelines.append(
+                self.clock.account(m, config, nbytes, outcome, scale)
+            )
+            return self._advance(m, TEXT, None)
+        handle = self.transport.fetch_run(
+            self.context_id,
+            [(m.chunk_idx, config)],
+            start_t=self.clock.fetch_t,
+            hedge_after_s=self.session.hedge_after_s,
+        )
+        self._pending = (handle, m, config, nbytes, scale)
+        return []
 
     def _to_work(self, seg: PlanSegment):
         # positional bookkeeping: every segment must start exactly where
@@ -358,9 +436,14 @@ class ServeSession:
         final_step_s: float = 0.0,
         max_run_tokens: Optional[int] = None,
         validate_blobs: bool = True,
+        transport: Optional[Transport] = None,
     ):
         self.streamer = streamer
         self.engine = engine
+        # None -> each run builds a SimTransport over that run's NetworkModel
+        # (simulator-differential default); pass LocalTransport/TcpTransport
+        # for direct reads or a real socket link
+        self.transport = transport
         self.slo_s = slo_s
         self.recompute_s = recompute_s
         self.decode_bytes_per_s = (
@@ -388,6 +471,7 @@ class ServeSession:
         batch: int = 1,
         prior_throughput_gbps: Optional[float] = None,
         start_t: float = 0.0,
+        transport: Optional[Transport] = None,
     ) -> SessionResult:
         caches = self.engine.empty_caches(batch)
         if caches.kv_k is None:
@@ -401,6 +485,7 @@ class ServeSession:
             network,
             prior_throughput_gbps=prior_throughput_gbps,
             start_t=start_t,
+            transport=transport,
         )
         state = _ExecState()
         wall0 = time.perf_counter()

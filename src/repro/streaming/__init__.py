@@ -1,11 +1,30 @@
 from repro.streaming.adaptation import TEXT, AdaptationPolicy, make_policy  # noqa: F401
 from repro.streaming.calibration import measured_decode_bytes_per_s  # noqa: F401
-from repro.streaming.network import BandwidthTrace, NetworkModel  # noqa: F401
+from repro.streaming.network import (  # noqa: F401
+    BandwidthTrace,
+    FetchOutcome,
+    NetworkModel,
+)
 from repro.streaming.pipeline import StreamResult, simulate_stream  # noqa: F401
-from repro.streaming.storage import KVStore  # noqa: F401
+from repro.streaming.storage import (  # noqa: F401
+    DirectoryBackend,
+    KVStore,
+    MemoryBackend,
+    StorageBackend,
+)
 from repro.streaming.streamer import (  # noqa: F401
     CacheGenStreamer,
     PlanSegment,
     RunSegmenter,
     segment_plan,
+)
+from repro.streaming.transport import (  # noqa: F401
+    FetchHandle,
+    FetchResult,
+    LocalTransport,
+    SimTransport,
+    TcpStoreServer,
+    TcpTransport,
+    Transport,
+    as_completed,
 )

@@ -1,10 +1,23 @@
-"""Trace-driven network simulator for KV bitstream streaming.
+"""Trace-driven network model for KV bitstream streaming.
 
 The paper evaluates under piecewise-constant bandwidth traces (Fig. 7, Fig.
 14: per-chunk bandwidth sampled from 0.1–10 Gbps).  ``BandwidthTrace``
 integrates transfer time for a byte count starting at any instant and
 supports per-fetch latency plus a heavy-tailed straggler model (used by the
-hedged-fetch straggler mitigation tests).
+hedged-fetch straggler mitigation).
+
+Role in the transport split (ISSUE 4): this module is the *virtual-clock*
+model.  ``simulate_stream`` walks it directly; the real-I/O
+``streaming.transport.SimTransport`` uses the very same
+:meth:`NetworkModel.fetch_outcome` arithmetic to pace genuinely asynchronous
+storage reads, which is what keeps a SimTransport-backed session
+differential-exact against the simulator (same trace in, same decisions
+out).  ``TcpTransport`` replaces this model with a measured socket link.
+
+Straggler draws are keyed per ``(chunk_idx, attempt)`` — not consumed from
+one shared RNG stream — so hedged and concurrent simulations are
+order-independent: the delay a chunk's fetch suffers does not depend on how
+many other fetches (from this or other sessions) were simulated first.
 """
 from __future__ import annotations
 
@@ -13,7 +26,12 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-__all__ = ["BandwidthTrace", "NetworkModel"]
+__all__ = [
+    "BandwidthTrace",
+    "FetchOutcome",
+    "NetworkModel",
+    "keyed_straggler_delay",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,13 +135,62 @@ class BandwidthTrace:
         return float(nbytes) * 8.0 / dur / 1e9
 
 
+def keyed_straggler_delay(
+    seed: int,
+    chunk_idx: int,
+    attempt: int,
+    *,
+    p: float,
+    scale_s: float,
+    alpha: float,
+) -> float:
+    """Pareto-tailed straggler stall, keyed per ``(seed, chunk_idx, attempt)``.
+
+    Deterministic in the key and independent of any draw order — the shared
+    primitive behind :meth:`NetworkModel.straggler_delay` and the TCP store
+    server's stall injection, so a simulated link and a real socket link
+    straggle identically for the same seed.
+    """
+    if p <= 0:
+        return 0.0
+    rng = np.random.default_rng(
+        (int(seed) & 0xFFFFFFFF, int(chunk_idx) & 0xFFFFFFFF, int(attempt) & 0xFF)
+    )
+    if rng.uniform() >= p:
+        return 0.0
+    return float(scale_s * (rng.pareto(alpha) + 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class FetchOutcome:
+    """Resolved timing of one (possibly hedged) fetch on a clock.
+
+    Produced by :meth:`NetworkModel.fetch_outcome` (virtual clock) and by
+    the transports in ``streaming.transport`` (realized I/O, virtual or wall
+    timing depending on the transport).  ``hedged`` means a duplicate fetch
+    was issued *and won*; ``hedge_issued`` counts the duplicate regardless of
+    who won; ``duplicate_bytes`` is what the losing attempt transferred
+    before being cancelled (0 when no hedge was issued).
+    """
+
+    start_t: float
+    end_t: float
+    throughput_gbps: float
+    hedged: bool = False
+    hedge_issued: bool = False
+    duplicate_bytes: float = 0.0
+
+
 @dataclasses.dataclass
 class NetworkModel:
     """Trace + fixed per-fetch latency + optional straggler tail.
 
     Straggler model: with prob ``straggler_p`` a fetch stalls for an extra
-    Pareto-tailed delay — the mitigation (hedged second fetch after
-    ``hedge_after_s``) lives in streaming/pipeline.py.
+    Pareto-tailed delay, keyed per ``(chunk_idx, attempt)`` so concurrent /
+    hedged simulations are order-independent.  The mitigation (a hedged
+    second fetch after ``hedge_after_s``) lives in :meth:`fetch_outcome`,
+    shared by the virtual-clock simulator (``streaming/pipeline.py``) and
+    the async ``SimTransport`` (``streaming/transport.py``).
     """
 
     trace: BandwidthTrace
@@ -133,17 +200,94 @@ class NetworkModel:
     straggler_alpha: float = 1.5
     seed: int = 0
 
-    def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed)
+    def straggler_delay(self, chunk_idx: int, attempt: int = 0) -> float:
+        return keyed_straggler_delay(
+            self.seed,
+            chunk_idx,
+            attempt,
+            p=self.straggler_p,
+            scale_s=self.straggler_scale_s,
+            alpha=self.straggler_alpha,
+        )
 
-    def straggler_delay(self) -> float:
-        if self.straggler_p <= 0:
-            return 0.0
-        if self._rng.uniform() >= self.straggler_p:
-            return 0.0
-        return float(self.straggler_scale_s * (self._rng.pareto(self.straggler_alpha) + 1.0))
-
-    def fetch_time(self, nbytes: float, start_t: float, straggle: bool = True) -> float:
+    def fetch_time(
+        self,
+        nbytes: float,
+        start_t: float,
+        *,
+        chunk_idx: int = 0,
+        attempt: int = 0,
+        straggle: bool = True,
+    ) -> float:
         base = self.rtt_s + self.trace.transmit_time(nbytes, start_t + self.rtt_s)
-        extra = self.straggler_delay() if straggle else 0.0
+        extra = self.straggler_delay(chunk_idx, attempt) if straggle else 0.0
         return base + extra
+
+    def fetch_outcome(
+        self,
+        nbytes: float,
+        start_t: float,
+        *,
+        chunk_idx: int = 0,
+        hedge_after_s: Optional[float] = None,
+        straggle: bool = True,
+    ) -> FetchOutcome:
+        """One fetch with optional hedging, resolved on the virtual clock.
+
+        The single source of the hedging arithmetic: a duplicate fetch is
+        issued ``hedge_after_s`` after the primary (attempt 1, no straggler
+        tail — a fresh replica), the earlier completion wins, and the loser
+        is cancelled at the winner's completion instant.  ``duplicate_bytes``
+        integrates the trace over the loser's active transfer window
+        (straggler stalls are modeled as up-front server stall, during which
+        no bytes flow), capped at ``nbytes``.
+        """
+        base = self.fetch_time(
+            nbytes, start_t, chunk_idx=chunk_idx, attempt=0, straggle=straggle
+        )
+        end_t = start_t + base
+        hedged = False
+        hedge_issued = False
+        duplicate_bytes = 0.0
+        if hedge_after_s is not None and base > hedge_after_s:
+            hedge_issued = True
+            hedged_fetch = hedge_after_s + self.fetch_time(
+                nbytes,
+                start_t + hedge_after_s,
+                chunk_idx=chunk_idx,
+                attempt=1,
+                straggle=False,
+            )
+            if hedged_fetch < base:
+                # hedge wins; primary is cancelled at the hedge's completion.
+                hedged = True
+                end_t = start_t + hedged_fetch
+                stall = base - self.rtt_s - self.trace.transmit_time(
+                    nbytes, start_t + self.rtt_s
+                )
+                flow_start = start_t + self.rtt_s + stall
+                window = end_t - flow_start
+                if window > 0:
+                    duplicate_bytes = min(
+                        float(nbytes),
+                        self.trace.bytes_in_window(window, flow_start),
+                    )
+            else:
+                # primary wins; the hedge transferred bytes until cancelled.
+                flow_start = start_t + hedge_after_s + self.rtt_s
+                window = end_t - flow_start
+                if window > 0:
+                    duplicate_bytes = min(
+                        float(nbytes),
+                        self.trace.bytes_in_window(window, flow_start),
+                    )
+        return FetchOutcome(
+            start_t=start_t,
+            end_t=end_t,
+            throughput_gbps=self.trace.measured_throughput_gbps(
+                max(nbytes, 1.0), start_t
+            ),
+            hedged=hedged,
+            hedge_issued=hedge_issued,
+            duplicate_bytes=duplicate_bytes,
+        )

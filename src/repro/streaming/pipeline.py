@@ -10,7 +10,15 @@ chunk").
 
 Straggler mitigation: a hedged duplicate fetch is issued if a chunk's fetch
 exceeds ``hedge_after_s``; the effective arrival is the min of the two
-(tail-latency hedging, standard practice at 1000-node scale).
+(tail-latency hedging, standard practice at 1000-node scale).  The hedging
+arithmetic itself lives in ``NetworkModel.fetch_outcome`` — one source of
+truth shared by this simulator and the real-I/O ``SimTransport``
+(streaming/transport.py), which is what keeps transport-backed sessions
+differential-exact against this model.  ``StreamClock`` is split into
+``decide`` (Algorithm 1 choice at the current virtual instant) and
+``account`` (charge a resolved fetch + its compute window); ``step``
+composes the two through the virtual-clock fetch, while the live session
+feeds ``account`` with a transport's realized :class:`FetchOutcome`.
 
 Compute contention (multi-session serving): when N sessions share one
 engine, each session's decode/recompute seconds stretch by a *measured*
@@ -34,7 +42,7 @@ from repro.streaming.calibration import (
     measured_contention_factors,
     measured_decode_bytes_per_s,
 )
-from repro.streaming.network import NetworkModel
+from repro.streaming.network import FetchOutcome, NetworkModel
 from repro.streaming.storage import ChunkMeta
 
 __all__ = [
@@ -104,6 +112,7 @@ class ChunkTimeline:
     compute_start: float  # decode or recompute
     compute_end: float
     hedged: bool = False
+    duplicate_bytes: float = 0.0  # bytes the cancelled hedge loser moved
 
 
 @dataclasses.dataclass
@@ -120,6 +129,11 @@ class StreamResult:
     @property
     def total_bytes(self) -> float:
         return sum(t.nbytes for t in self.timelines)
+
+    @property
+    def duplicate_bytes(self) -> float:
+        """Wire bytes paid for by hedging (losing fetches, cancelled)."""
+        return sum(t.duplicate_bytes for t in self.timelines)
 
 
 def remaining_work(
@@ -177,7 +191,14 @@ class StreamClock:
         self.compute_t = self.start_t  # accelerator busy-until
         self.prefix_tokens = 0
 
-    def step(self, metas: List[ChunkMeta], i: int) -> ChunkTimeline:
+    def decide(self, metas: List[ChunkMeta], i: int) -> tuple:
+        """Algorithm 1 choice for chunk ``i`` at the current virtual instant.
+
+        Returns ``(config, nbytes, scale)``; ``scale`` is the contention
+        factor sampled *now* (decision time) and must be passed back to
+        :meth:`account` so the charged compute window uses the same value
+        even when the fetch resolves later (async transports).
+        """
         m = metas[i]
         scale = 1.0 if self.compute_scale is None else float(self.compute_scale())
         remaining_sizes, remaining_text, rem_recompute = remaining_work(
@@ -190,24 +211,39 @@ class StreamClock:
             remaining_recompute_s=rem_recompute * scale,
         )
         nbytes = float(m.text_bytes if cfg.config == TEXT else m.sizes[cfg.config])
+        return cfg.config, nbytes, scale
 
-        # --- fetch (network resource), with optional hedging ---------------
-        base_fetch = self.network.fetch_time(nbytes, self.fetch_t)
-        hedged = False
-        if self.hedge_after_s is not None and base_fetch > self.hedge_after_s:
-            hedged_fetch = self.hedge_after_s + self.network.fetch_time(
-                nbytes, self.fetch_t + self.hedge_after_s, straggle=False
-            )
-            if hedged_fetch < base_fetch:
-                base_fetch = hedged_fetch
-                hedged = True
+    def virtual_fetch(self, nbytes: float, chunk_idx: int) -> FetchOutcome:
+        """The decided chunk's fetch, resolved purely on the virtual clock
+        (the simulator path, and the session's TEXT chunks — their bytes are
+        modeled, never read from storage)."""
+        return self.network.fetch_outcome(
+            nbytes,
+            self.fetch_t,
+            chunk_idx=chunk_idx,
+            hedge_after_s=self.hedge_after_s,
+        )
+
+    def account(
+        self,
+        m: ChunkMeta,
+        config: int,
+        nbytes: float,
+        outcome: FetchOutcome,
+        scale: float = 1.0,
+    ) -> ChunkTimeline:
+        """Charge a resolved fetch plus its compute window; observe
+        throughput for the next decision.  ``outcome`` may come from
+        :meth:`virtual_fetch` or from a transport's realized I/O — anything
+        with ``end_t`` / ``hedged`` / ``duplicate_bytes`` /
+        ``throughput_gbps``."""
         fetch_start = self.fetch_t
-        fetch_end = self.fetch_t + base_fetch
+        fetch_end = outcome.end_t
         self.fetch_t = fetch_end
 
         # --- compute (decode or recompute), pipelined with next fetch ------
         # contention: N active sessions stretch this session's compute window
-        if cfg.config == TEXT:
+        if config == TEXT:
             dur = self.recompute_s(m.n_tokens, self.prefix_tokens) * scale
         else:
             dur = nbytes / self.decode_bytes_per_s * scale
@@ -216,22 +252,24 @@ class StreamClock:
         self.compute_t = compute_end
 
         timeline = ChunkTimeline(
-            chunk_idx=i,
-            config=cfg.config,
+            chunk_idx=m.chunk_idx,
+            config=config,
             nbytes=nbytes,
             fetch_start=fetch_start,
             fetch_end=fetch_end,
             compute_start=compute_start,
             compute_end=compute_end,
-            hedged=hedged,
+            hedged=outcome.hedged,
+            duplicate_bytes=outcome.duplicate_bytes,
         )
         self.prefix_tokens += m.n_tokens
-        self.policy.observe_throughput(
-            self.network.trace.measured_throughput_gbps(
-                max(nbytes, 1.0), fetch_start
-            )
-        )
+        self.policy.observe_throughput(outcome.throughput_gbps)
         return timeline
+
+    def step(self, metas: List[ChunkMeta], i: int) -> ChunkTimeline:
+        config, nbytes, scale = self.decide(metas, i)
+        outcome = self.virtual_fetch(nbytes, metas[i].chunk_idx)
+        return self.account(metas[i], config, nbytes, outcome, scale)
 
     def ttft_s(self, timelines: List[ChunkTimeline], final_step_s: float) -> float:
         last = timelines[-1].compute_end if timelines else self.start_t

@@ -1,22 +1,39 @@
 """KV bitstream store: chunk_id -> {level -> encoded bytes} (paper §6).
 
+Storage split (ISSUE 4): :class:`KVStore` is a thin write/metadata frontend
+over a :class:`StorageBackend` — the byte-addressed ``(context, chunk,
+level) -> blob`` map.  Two backends ship: :class:`MemoryBackend` (dict) and
+:class:`DirectoryBackend` (one file per chunk-level); both raise a
+descriptive ``KeyError`` naming the missing (context, chunk, level).  The
+*read path over a link* lives one layer up, in ``streaming/transport.py``:
+a ``Transport`` fronts a store (directly, trace-paced, or over a socket)
+and returns cancellable fetch handles — backends and transports compose
+(any transport over any backend).
+
 ``store_kv`` splits a context's KV along the token axis into chunks
 (default 1.5K tokens, paper §5.3), pre-encodes every chunk at every level
 via the codec, and records per-(chunk, level) sizes; ``get_kv`` returns the
-bitstream for a (chunk, level).  Backends: in-memory dict or a directory of
-files (one per chunk-level, msgpack-framed), both with identical interfaces.
+bitstream for a (chunk, level).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
 from repro.core import codec as kvcodec
 
-__all__ = ["ChunkMeta", "KVStore", "split_chunks", "DEFAULT_CHUNK_TOKENS"]
+__all__ = [
+    "ChunkMeta",
+    "DirectoryBackend",
+    "KVStore",
+    "MemoryBackend",
+    "StorageBackend",
+    "split_chunks",
+    "DEFAULT_CHUNK_TOKENS",
+]
 
 DEFAULT_CHUNK_TOKENS = 1536  # paper: ~1.5K tokens
 
@@ -45,18 +62,104 @@ class ChunkMeta:
         return self.end - self.start
 
 
-class KVStore:
-    """Storage server for encoded KV bitstreams."""
+def _missing(cid: str, ci: int, lvl: int, detail: str = "") -> KeyError:
+    extra = f" ({detail})" if detail else ""
+    return KeyError(
+        f"no stored bitstream for context {cid!r} chunk {ci} level {lvl}{extra}"
+    )
 
-    def __init__(self, tables: kvcodec.CodecTables, directory: Optional[str] = None):
+
+@runtime_checkable
+class StorageBackend(Protocol):
+    """Byte-addressed KV-bitstream map: ``(context, chunk, level) -> blob``.
+
+    ``get`` must raise a ``KeyError`` whose message names the missing
+    context/chunk/level (not a bare tuple or an opaque file path).
+    """
+
+    def put(self, context_id: str, chunk_idx: int, level: int, blob: bytes) -> None:
+        ...
+
+    def get(self, context_id: str, chunk_idx: int, level: int) -> bytes:
+        ...
+
+    def contains(self, context_id: str, chunk_idx: int, level: int) -> bool:
+        ...
+
+
+class MemoryBackend:
+    """In-process dict backend — the default."""
+
+    def __init__(self):
+        self._mem: Dict[Tuple[str, int, int], bytes] = {}
+
+    def put(self, context_id: str, chunk_idx: int, level: int, blob: bytes) -> None:
+        self._mem[(context_id, chunk_idx, level)] = blob
+
+    def get(self, context_id: str, chunk_idx: int, level: int) -> bytes:
+        try:
+            return self._mem[(context_id, chunk_idx, level)]
+        except KeyError:
+            raise _missing(context_id, chunk_idx, level, "memory backend") from None
+
+    def contains(self, context_id: str, chunk_idx: int, level: int) -> bool:
+        return (context_id, chunk_idx, level) in self._mem
+
+
+class DirectoryBackend:
+    """One file per (context, chunk, level) under ``directory``."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, cid: str, ci: int, lvl: int) -> str:
+        return os.path.join(self.directory, f"{cid}.c{ci:04d}.l{lvl}.kvbs")
+
+    def put(self, context_id: str, chunk_idx: int, level: int, blob: bytes) -> None:
+        with open(self._path(context_id, chunk_idx, level), "wb") as f:
+            f.write(blob)
+
+    def get(self, context_id: str, chunk_idx: int, level: int) -> bytes:
+        path = self._path(context_id, chunk_idx, level)
+        try:
+            with open(path, "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            raise _missing(
+                context_id, chunk_idx, level, f"no file {path}"
+            ) from None
+
+    def contains(self, context_id: str, chunk_idx: int, level: int) -> bool:
+        return os.path.exists(self._path(context_id, chunk_idx, level))
+
+
+class KVStore:
+    """Write/metadata frontend for encoded KV bitstreams over a backend.
+
+    The frontend owns the codec tables, the chunk split, the pre-encoding of
+    every level, and the per-context :class:`ChunkMeta` index; all blob I/O
+    goes through ``self.backend`` (a :class:`StorageBackend`).
+    ``directory=`` is kept as a convenience spelling of
+    ``backend=DirectoryBackend(directory)``.
+    """
+
+    def __init__(
+        self,
+        tables: kvcodec.CodecTables,
+        directory: Optional[str] = None,
+        *,
+        backend: Optional[StorageBackend] = None,
+    ):
         # one-time upgrade: hand-built / unpickled tables may lack the
         # pre-stacked sets the batched coder calls need on the hot path
         self.tables = kvcodec.ensure_stacks(tables)
-        self.dir = directory
-        self._mem: Dict[Tuple[str, int, int], bytes] = {}
+        if backend is not None and directory is not None:
+            raise ValueError("pass either directory or backend, not both")
+        if backend is None:
+            backend = DirectoryBackend(directory) if directory else MemoryBackend()
+        self.backend = backend
         self._meta: Dict[str, List[ChunkMeta]] = {}
-        if directory:
-            os.makedirs(directory, exist_ok=True)
 
     # -- write path (offline) ------------------------------------------------
 
@@ -103,22 +206,14 @@ class KVStore:
         return metas
 
     def _put(self, cid: str, ci: int, lvl: int, blob: bytes) -> None:
-        if self.dir:
-            with open(self._path(cid, ci, lvl), "wb") as f:
-                f.write(blob)
-        else:
-            self._mem[(cid, ci, lvl)] = blob
-
-    def _path(self, cid: str, ci: int, lvl: int) -> str:
-        return os.path.join(self.dir, f"{cid}.c{ci:04d}.l{lvl}.kvbs")
+        self.backend.put(cid, ci, lvl, blob)
 
     # -- read path (online) --------------------------------------------------
 
     def get_kv(self, context_id: str, chunk_idx: int, level: int) -> bytes:
-        if self.dir:
-            with open(self._path(context_id, chunk_idx, level), "rb") as f:
-                return f.read()
-        return self._mem[(context_id, chunk_idx, level)]
+        """Blob for one (chunk, level); raises a descriptive ``KeyError``
+        naming context/chunk/level when missing (either backend)."""
+        return self.backend.get(context_id, chunk_idx, level)
 
     def get_run(
         self, context_id: str, chunk_levels: List[Tuple[int, int]]
@@ -127,7 +222,13 @@ class KVStore:
         return [self.get_kv(context_id, ci, lvl) for ci, lvl in chunk_levels]
 
     def meta(self, context_id: str) -> List[ChunkMeta]:
-        return self._meta[context_id]
+        try:
+            return self._meta[context_id]
+        except KeyError:
+            raise KeyError(
+                f"no chunk metadata for context {context_id!r} "
+                f"(known: {sorted(self._meta)})"
+            ) from None
 
     def decode(self, blob: bytes) -> np.ndarray:
         return np.asarray(kvcodec.decode_chunk(blob, self.tables))

@@ -23,6 +23,13 @@ double-buffered segmenter that both the offline ``materialize`` (via
 :func:`segment_plan`, maximal runs) and the live closed-loop
 ``serving.session.ServeSession`` (bounded runs, so decode of a full buffer
 overlaps the next fetches) drive — one grouping policy, two consumers.
+
+Since the transport split (ISSUE 4), ``materialize`` reads through the
+pluggable :class:`~repro.streaming.transport.Transport` handle API: every
+run segment's fetch is issued up front (cancellable handles, I/O on worker
+threads) and resolved in plan order, so fetches stream concurrently with
+the decodes consuming them.  Default is
+:class:`~repro.streaming.transport.LocalTransport` over the plan's store.
 """
 from __future__ import annotations
 
@@ -223,19 +230,45 @@ class CacheGenStreamer:
         *,
         batch: int = 1,
         fused: bool = True,
+        transport=None,
     ) -> Caches:
         """Build the serving cache by decoding each chunk at its chosen config.
 
         ``fused=True`` (default): consecutive bitstream chunks are decoded as
         one batched run (``codec.decode_chunks``) and written with a single
         donated-buffer cache update per run; TEXT chunks are recomputed in
-        stream order in between.  ``fused=False``: retained per-chunk
-        reference path (decode each blob to host, insert one by one).
+        stream order in between.  Run fetches go through ``transport``
+        (default: direct :class:`~repro.streaming.transport.LocalTransport`
+        reads), issued ``fetch_lookahead`` segments ahead of the decode
+        consuming them (double-buffered I/O without holding every run's
+        bytes at once) and released as soon as they are decoded.
+        ``fused=False``: retained per-chunk reference path (decode each blob
+        to host, insert one by one).
         """
         caches = engine.empty_caches(batch)
         if not fused or caches.kv_k is None:
             return self._materialize_reference(plan, engine, tokens, caches, batch)
-        for seg in segment_plan(plan.metas, plan.result.configs):
+        if transport is None:
+            from repro.streaming.transport import LocalTransport
+
+            transport = LocalTransport(self.store)
+        fetch_lookahead = 2
+        segs = segment_plan(plan.metas, plan.result.configs)
+        handles = {}
+        issued = 0
+
+        def issue_until(j_limit):
+            nonlocal issued
+            while issued <= min(j_limit, len(segs) - 1):
+                s = segs[issued]
+                if s.kind == "run":
+                    handles[issued] = transport.fetch_run(
+                        plan.context_id, list(zip(s.indices, s.configs))
+                    )
+                issued += 1
+
+        for j, seg in enumerate(segs):
+            issue_until(j + fetch_lookahead)
             if seg.kind == "text":
                 _, caches = engine.prefill_extend(
                     jnp.asarray(tokens[:, seg.start : seg.end], jnp.int32), caches
@@ -243,9 +276,7 @@ class CacheGenStreamer:
                 continue
             # run of consecutive bitstream chunks -> one batched decode +
             # one cache insertion
-            blobs = self.store.get_run(
-                plan.context_id, list(zip(seg.indices, seg.configs))
-            )
+            blobs = handles.pop(j).result().blobs
             kv_run = kvcodec.decode_chunks(
                 blobs, self.store.tables, out_dtype=caches.kv_k.dtype
             )

@@ -1,0 +1,777 @@
+"""Async fetch transports for KV bitstreams: the read path as real I/O.
+
+The fetch layer split (ISSUE 4):
+
+  * :class:`~repro.streaming.storage.StorageBackend` — where blobs live
+    (memory, directory);
+  * :class:`Transport` — how blobs travel: ``fetch_run(context_id,
+    [(chunk, level), ...]) -> FetchHandle``.  A handle is a cancellable,
+    in-flight fetch whose :meth:`~FetchHandle.result` carries the realized
+    bytes *and* timing (:class:`FetchResult`); :func:`as_completed` yields
+    handles in completion order;
+  * ``NetworkModel`` (streaming/network.py) — the virtual-clock link model,
+    used by the offline simulator and by :class:`SimTransport`'s pacing.
+
+Three transports:
+
+  * :class:`LocalTransport` — direct storage read, no link.  Timing is
+    host wall time; the offline ``materialize`` default.
+  * :class:`SimTransport` — *real* asynchronous reads (one worker thread
+    per attempt, bytes read from the backing store and paced in cancellable
+    slices against the ``BandwidthTrace``), with completion timing taken
+    from ``NetworkModel.fetch_outcome`` — the identical arithmetic the
+    virtual-clock simulator runs.  A SimTransport-backed session therefore
+    makes exactly the simulator's per-chunk decisions (the differential
+    suite in tests/test_transport.py holds it to that) while its fetches,
+    hedges and cancellations are genuinely concurrent I/O.
+  * :class:`TcpTransport` — a real socket link to a
+    :class:`TcpStoreServer` fronting a ``KVStore`` (length-prefixed frames,
+    optional server-side pacing + keyed straggler stalls).  Timing is
+    measured off the wire, so the session's throughput estimator sees an
+    actual link.
+
+Hedging is transport-level I/O, not clock arithmetic: pass
+``hedge_after_s`` to :meth:`Transport.fetch_run` and the transport issues a
+duplicate attempt after that delay, uses the winner's bytes, *cancels* the
+loser (sim: cancellation event stops its paced read; tcp: the loser's
+socket is closed mid-stream), and reports the loser's transferred bytes as
+``duplicate_bytes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import struct
+import threading
+import time
+from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+from repro.streaming.network import NetworkModel, keyed_straggler_delay
+from repro.streaming.storage import KVStore
+
+__all__ = [
+    "FetchError",
+    "FetchHandle",
+    "FetchResult",
+    "LocalTransport",
+    "SimTransport",
+    "TcpStoreServer",
+    "TcpTransport",
+    "Transport",
+    "as_completed",
+]
+
+ChunkLevels = Sequence[Tuple[int, int]]  # [(chunk_idx, level), ...]
+
+
+class FetchError(RuntimeError):
+    """A fetch failed or was cancelled before completing."""
+
+
+@dataclasses.dataclass
+class FetchResult:
+    """Realized outcome of one (possibly hedged) run fetch.
+
+    ``blobs`` are in request order.  ``end_t``/``throughput_gbps`` are on
+    the transport's clock — the session's virtual clock for
+    :class:`SimTransport` (trace arithmetic), wall-derived for
+    :class:`TcpTransport`/:class:`LocalTransport` — and are exactly the
+    fields ``StreamClock.account`` consumes.  ``duplicate_bytes`` is what
+    the cancelled losing attempt transferred; ``loser_bytes_read`` is the
+    realized byte counter of that attempt's reader (equals
+    ``duplicate_bytes`` on tcp, where accounting *is* the counter).
+    """
+
+    blobs: List[bytes]
+    nbytes: int
+    start_t: float
+    end_t: float
+    throughput_gbps: float
+    hedged: bool = False
+    hedge_issued: bool = False
+    duplicate_bytes: float = 0.0
+    wall_s: float = 0.0
+    winner: str = "primary"  # "primary" | "hedge"
+    loser_cancelled: bool = False
+    loser_bytes_read: int = 0
+    completion_order: Tuple[int, ...] = ()  # chunk_idx in arrival order
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """Pluggable fetch path: issue a run fetch, get a cancellable handle."""
+
+    def fetch_run(
+        self,
+        context_id: str,
+        chunk_levels: ChunkLevels,
+        *,
+        start_t: float = 0.0,
+        hedge_after_s: Optional[float] = None,
+    ) -> "FetchHandle":
+        ...
+
+    def close(self) -> None:
+        ...
+
+
+class FetchHandle:
+    """One in-flight run fetch: wait on it, or cancel it.
+
+    ``result()`` blocks until the winning attempt completes and returns the
+    :class:`FetchResult`; ``cancel()`` aborts every attempt (a subsequent
+    ``result()`` raises :class:`FetchError`).  ``add_done_callback`` powers
+    :func:`as_completed`.
+    """
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._result: Optional[FetchResult] = None
+        self._error: Optional[BaseException] = None
+        self._callbacks: List = []
+        self._lock = threading.Lock()
+
+    # -- completion plumbing (transport side) ------------------------------
+
+    def _finish(self, result: Optional[FetchResult], error=None) -> None:
+        with self._lock:
+            if self._done.is_set():
+                return
+            self._result = result
+            self._error = error
+            self._done.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            cb(self)
+
+    # -- consumer side -----------------------------------------------------
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def add_done_callback(self, cb) -> None:
+        with self._lock:
+            if not self._done.is_set():
+                self._callbacks.append(cb)
+                return
+        cb(self)
+
+    def result(self, timeout: Optional[float] = None) -> FetchResult:
+        if not self._done.wait(timeout):
+            raise TimeoutError("fetch still in flight")
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+    def cancel(self) -> None:
+        """Abort all attempts; a pending ``result()`` raises FetchError."""
+        self._abort()
+        self._finish(None, FetchError("fetch cancelled by caller"))
+
+    def _abort(self) -> None:  # transport-specific teardown
+        pass
+
+
+def as_completed(handles: Sequence[FetchHandle], timeout: Optional[float] = None):
+    """Yield handles in the order their fetches complete.
+
+    ``timeout`` bounds the *total* wait across all handles; on expiry a
+    ``TimeoutError`` is raised (matching :meth:`FetchHandle.result`).
+    """
+    import queue
+
+    deadline = None if timeout is None else time.monotonic() + timeout
+    q: "queue.Queue[FetchHandle]" = queue.Queue()
+    for h in handles:
+        h.add_done_callback(q.put)
+    for _ in range(len(handles)):
+        try:
+            if deadline is None:
+                yield q.get()
+            else:
+                yield q.get(timeout=max(deadline - time.monotonic(), 0.0))
+        except queue.Empty:
+            raise TimeoutError(
+                "fetches still in flight past as_completed timeout"
+            ) from None
+
+
+# ---------------------------------------------------------------------------
+# LocalTransport: direct store read
+# ---------------------------------------------------------------------------
+
+
+class LocalTransport:
+    """Direct storage reads — no link between the store and the consumer.
+
+    Fetches still run on a worker thread (handles are uniformly async and
+    cancellable), but there is nothing to pace: ``end_t`` advances by the
+    realized host read time.
+    """
+
+    realtime = False  # resolving a handle costs ~no wall time
+
+    def __init__(self, store: KVStore):
+        self.store = store
+
+    def fetch_run(
+        self,
+        context_id: str,
+        chunk_levels: ChunkLevels,
+        *,
+        start_t: float = 0.0,
+        hedge_after_s: Optional[float] = None,  # no link -> nothing to hedge
+    ) -> FetchHandle:
+        handle = FetchHandle()
+        chunk_levels = list(chunk_levels)
+
+        def work():
+            t0 = time.perf_counter()
+            try:
+                blobs = [
+                    self.store.get_kv(context_id, ci, lvl)
+                    for ci, lvl in chunk_levels
+                ]
+            except BaseException as e:  # surfaced at result()
+                handle._finish(None, e)
+                return
+            wall = time.perf_counter() - t0
+            nbytes = sum(len(b) for b in blobs)
+            handle._finish(FetchResult(
+                blobs=blobs,
+                nbytes=nbytes,
+                start_t=start_t,
+                end_t=start_t + wall,
+                throughput_gbps=nbytes * 8.0 / max(wall, 1e-9) / 1e9,
+                wall_s=wall,
+                completion_order=tuple(ci for ci, _ in chunk_levels),
+            ))
+
+        threading.Thread(target=work, daemon=True).start()
+        return handle
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# SimTransport: paced async reads against a BandwidthTrace
+# ---------------------------------------------------------------------------
+
+
+class _Attempt:
+    """One attempt's paced read: real bytes off the store, real slices,
+    really cancellable.  ``time_scale`` maps virtual seconds to host sleep
+    (0 = read at host speed, timing stays purely virtual)."""
+
+    def __init__(self, nbytes: int, duration_s: float, time_scale: float):
+        self.nbytes = nbytes
+        self.duration_s = max(float(duration_s), 0.0)
+        self.time_scale = time_scale
+        self.bytes_read = 0
+        self.error: Optional[BaseException] = None
+        self.cancelled = threading.Event()
+        self.finished = threading.Event()
+
+    def run(self, read_blobs) -> None:
+        try:
+            blobs = read_blobs()
+        except BaseException as e:
+            self.error = e
+            self.finished.set()
+            return
+        # pace the payload in cancellable slices proportional to the
+        # attempt's share of its (virtual) transfer window
+        n_slices = 16 if self.time_scale > 0 else 1
+        sleep_per = self.duration_s * self.time_scale / n_slices
+        total = sum(len(b) for b in blobs)
+        for s in range(n_slices):
+            if self.cancelled.is_set():
+                self.finished.set()
+                return
+            if sleep_per > 0:
+                time.sleep(sleep_per)
+            self.bytes_read = min(total, (total * (s + 1)) // n_slices)
+        self.bytes_read = total
+        self.blobs = blobs
+        self.finished.set()
+
+
+class _SimHandle(FetchHandle):
+    def __init__(self, attempts: List[_Attempt]):
+        super().__init__()
+        self._attempts = attempts
+
+    def _abort(self) -> None:
+        for a in self._attempts:
+            a.cancelled.set()
+
+
+class SimTransport:
+    """Trace-paced asynchronous reads over a :class:`KVStore`.
+
+    Completion timing comes from ``NetworkModel.fetch_outcome`` — the exact
+    arithmetic the virtual-clock simulator uses, straggler draws keyed per
+    (chunk_idx, attempt) — so sessions fetching through this transport make
+    the simulator's decisions on the same trace, while the bytes genuinely
+    move on worker threads: the primary attempt reads and paces, a hedge
+    attempt (when ``hedge_after_s`` fires) races it, and the virtual loser's
+    read is cancelled mid-pace.  ``time_scale`` scales virtual seconds into
+    real host sleep (default 0: no sleeping, timing stays virtual — the
+    scenario-matrix default; benchmarks set it > 0 for wall-real pacing).
+    """
+
+    def __init__(
+        self,
+        store: KVStore,
+        network: NetworkModel,
+        *,
+        time_scale: float = 0.0,
+    ):
+        self.store = store
+        self.network = network
+        self.time_scale = float(time_scale)
+        # paced reads take real wall time; unpaced handles resolve ~instantly
+        self.realtime = self.time_scale > 0
+
+    def fetch_run(
+        self,
+        context_id: str,
+        chunk_levels: ChunkLevels,
+        *,
+        start_t: float = 0.0,
+        hedge_after_s: Optional[float] = None,
+    ) -> FetchHandle:
+        chunk_levels = list(chunk_levels)
+        read = lambda: [  # noqa: E731
+            self.store.get_kv(context_id, ci, lvl) for ci, lvl in chunk_levels
+        ]
+        # sizes are needed up front to price the transfer; metadata is the
+        # frontend's job, the blob bytes still travel through the attempts
+        try:
+            try:
+                metas = self.store.meta(context_id)
+                nbytes = sum(metas[ci].sizes[lvl] for ci, lvl in chunk_levels)
+            except (KeyError, IndexError):
+                nbytes = sum(len(b) for b in read())
+        except KeyError as e:
+            failed = FetchHandle()
+            failed._finish(None, e)
+            return failed
+        key_chunk = chunk_levels[0][0] if chunk_levels else 0
+
+        # virtual truth, computed once at issue: who wins, and when
+        outcome = self.network.fetch_outcome(
+            float(nbytes), start_t, chunk_idx=key_chunk,
+            hedge_after_s=hedge_after_s,
+        )
+        primary_dur = self.network.fetch_time(
+            float(nbytes), start_t, chunk_idx=key_chunk, attempt=0
+        )
+        hedge_issued = outcome.hedge_issued
+        attempts = [_Attempt(nbytes, primary_dur, self.time_scale)]
+        if hedge_issued:
+            hedge_dur = self.network.fetch_time(
+                float(nbytes), start_t + (hedge_after_s or 0.0),
+                chunk_idx=key_chunk, attempt=1, straggle=False,
+            )
+            attempts.append(_Attempt(nbytes, hedge_dur, self.time_scale))
+        handle = _SimHandle(attempts)
+        winner_i = 1 if outcome.hedged else 0
+
+        def coordinate():
+            threads = []
+            for i, a in enumerate(attempts):
+                th = threading.Thread(target=a.run, args=(read,), daemon=True)
+                threads.append(th)
+                if i == 0:
+                    th.start()
+            if hedge_issued:
+                # the duplicate is issued hedge_after_s after the primary
+                # (scaled into host time when pacing is on)
+                if self.time_scale > 0 and hedge_after_s:
+                    attempts[0].finished.wait(hedge_after_s * self.time_scale)
+                threads[1].start()
+            winner = attempts[winner_i]
+            winner.finished.wait()
+            # cancel the loser(s) at the winner's completion instant
+            for i, a in enumerate(attempts):
+                if i != winner_i:
+                    a.cancelled.set()
+            if winner.error is not None:
+                handle._finish(None, winner.error)
+                return
+            if winner.cancelled.is_set() or not hasattr(winner, "blobs"):
+                handle._finish(None, FetchError(
+                    f"fetch of context {context_id!r} chunks "
+                    f"{[c for c, _ in chunk_levels]} was cancelled"
+                ))
+                return
+            loser = attempts[1 - winner_i] if hedge_issued else None
+            handle._finish(FetchResult(
+                blobs=winner.blobs,
+                nbytes=nbytes,
+                start_t=start_t,
+                end_t=outcome.end_t,
+                throughput_gbps=outcome.throughput_gbps,
+                hedged=outcome.hedged,
+                hedge_issued=hedge_issued,
+                duplicate_bytes=outcome.duplicate_bytes,
+                wall_s=0.0,
+                winner="hedge" if outcome.hedged else "primary",
+                loser_cancelled=loser.cancelled.is_set() if loser else False,
+                loser_bytes_read=loser.bytes_read if loser else 0,
+                completion_order=tuple(ci for ci, _ in chunk_levels),
+            ))
+
+        threading.Thread(target=coordinate, daemon=True).start()
+        return handle
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# TcpTransport: a real socket link
+# ---------------------------------------------------------------------------
+
+_LEN = struct.Struct(">I")
+
+
+def _recv_exact(sock: socket.socket, n: int, counter=None) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        part = sock.recv(min(65536, n - len(buf)))
+        if not part:
+            raise ConnectionError("peer closed mid-frame")
+        buf += part
+        if counter is not None:
+            counter[0] += len(part)
+    return bytes(buf)
+
+
+def _send_frame(sock: socket.socket, payload: bytes) -> None:
+    sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+def _recv_frame(sock: socket.socket, counter=None) -> bytes:
+    (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size, counter))
+    return _recv_exact(sock, n, counter)
+
+
+class TcpStoreServer:
+    """Length-prefixed socket server fronting a :class:`KVStore`.
+
+    Request: one msgpack frame ``{cid, chunks: [[ci, lvl], ...], straggle,
+    attempt}``.  Response: one msgpack header frame ``{ok, sizes | error}``
+    followed by each blob as a raw frame.  ``pace_gbps`` throttles the blob
+    stream into timed slices (an actual paced link, not a sleep-at-the-end
+    model); ``straggler_p`` injects a keyed Pareto stall per
+    ``(chunk_idx, attempt)`` before the payload — the same
+    ``keyed_straggler_delay`` the virtual-clock model draws from, so a
+    hedged client (attempt 1, ``straggle=False``) escapes exactly the
+    stalls the simulator's hedge escapes.
+    """
+
+    def __init__(
+        self,
+        store: KVStore,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        *,
+        pace_gbps: Optional[float] = None,
+        straggler_p: float = 0.0,
+        straggler_scale_s: float = 0.1,
+        straggler_alpha: float = 1.5,
+        seed: int = 0,
+    ):
+        self.store = store
+        self.pace_gbps = pace_gbps
+        self.straggler_p = straggler_p
+        self.straggler_scale_s = straggler_scale_s
+        self.straggler_alpha = straggler_alpha
+        self.seed = seed
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(64)
+        self.address: Tuple[str, int] = self._sock.getsockname()[:2]
+        self._closing = threading.Event()
+        self._thread = threading.Thread(target=self._accept_loop, daemon=True)
+        self._thread.start()
+
+    # -- server internals --------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._closing.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return  # listener closed
+            threading.Thread(
+                target=self._serve_conn, args=(conn,), daemon=True
+            ).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        import msgpack
+
+        try:
+            with conn:
+                req = msgpack.unpackb(_recv_frame(conn), raw=False)
+                cid = req["cid"]
+                chunks = [(int(c), int(lv)) for c, lv in req["chunks"]]
+                try:
+                    blobs = [
+                        self.store.get_kv(cid, ci, lvl) for ci, lvl in chunks
+                    ]
+                except KeyError as e:
+                    _send_frame(conn, msgpack.packb(
+                        {"ok": False, "error": str(e.args[0])}
+                    ))
+                    return
+                _send_frame(conn, msgpack.packb(
+                    {"ok": True, "sizes": [len(b) for b in blobs]}
+                ))
+                if req.get("straggle", True) and self.straggler_p > 0:
+                    key_chunk = chunks[0][0] if chunks else 0
+                    stall = keyed_straggler_delay(
+                        self.seed, key_chunk, int(req.get("attempt", 0)),
+                        p=self.straggler_p, scale_s=self.straggler_scale_s,
+                        alpha=self.straggler_alpha,
+                    )
+                    if stall > 0:
+                        time.sleep(stall)
+                for blob in blobs:
+                    self._send_paced(conn, blob)
+        except (ConnectionError, OSError, ValueError):
+            return  # client gone (e.g. a cancelled hedge loser) — fine
+
+    def _send_paced(self, conn: socket.socket, blob: bytes) -> None:
+        conn.sendall(_LEN.pack(len(blob)))
+        if not self.pace_gbps:
+            conn.sendall(blob)
+            return
+        # timed slices: ~5 ms of link time each, so cancellation (client
+        # closing its socket) lands mid-stream, not between blobs
+        bytes_per_s = self.pace_gbps * 1e9 / 8.0
+        slice_bytes = max(1, int(bytes_per_s * 0.005))
+        sent = 0
+        t0 = time.perf_counter()
+        while sent < len(blob):
+            part = blob[sent : sent + slice_bytes]
+            conn.sendall(part)
+            sent += len(part)
+            target = sent / bytes_per_s
+            lag = target - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        self._closing.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "TcpStoreServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class _TcpAttempt:
+    def __init__(self):
+        self.sock: Optional[socket.socket] = None
+        self.counter = [0]  # bytes received (mutable cell for _recv_exact)
+        self.blobs: Optional[List[bytes]] = None
+        self.error: Optional[BaseException] = None
+        self.finished = threading.Event()
+        self.cancelled = False
+
+    @property
+    def bytes_read(self) -> int:
+        return self.counter[0]
+
+    def cancel(self) -> None:
+        self.cancelled = True
+        if self.sock is not None:
+            try:
+                self.sock.close()  # real cancellation: the stream dies now
+            except OSError:
+                pass
+
+
+class _TcpHandle(FetchHandle):
+    def __init__(self, attempts: List[_TcpAttempt]):
+        super().__init__()
+        self._attempts = attempts
+
+    def _abort(self) -> None:
+        for a in self._attempts:
+            a.cancel()
+
+
+class TcpTransport:
+    """Client for :class:`TcpStoreServer`: one connection per attempt.
+
+    Timing is measured on the wire — ``end_t = start_t + wall`` and the
+    observed throughput is realized bytes over realized seconds, so a
+    session running over this transport estimates bandwidth from an actual
+    link.  Hedging is an actual race: a second connection is opened
+    ``hedge_after_s`` (real seconds) after the first if it hasn't finished,
+    the first completion wins, and the loser's socket is closed mid-stream
+    (``duplicate_bytes`` = the loser's realized byte counter).
+    """
+
+    realtime = True  # handles resolve on actual link time
+
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        *,
+        connect_timeout_s: float = 5.0,
+        io_timeout_s: float = 30.0,
+    ):
+        self.host = host
+        self.port = port
+        self.connect_timeout_s = connect_timeout_s
+        self.io_timeout_s = io_timeout_s
+
+    @staticmethod
+    def for_server(server: TcpStoreServer, **kw) -> "TcpTransport":
+        return TcpTransport(server.address[0], server.address[1], **kw)
+
+    def _run_attempt(
+        self,
+        attempt: _TcpAttempt,
+        context_id: str,
+        chunk_levels: List[Tuple[int, int]],
+        attempt_idx: int,
+        notify: Optional[threading.Event] = None,
+    ) -> None:
+        import msgpack
+
+        try:
+            sock = socket.create_connection(
+                (self.host, self.port), timeout=self.connect_timeout_s
+            )
+            sock.settimeout(self.io_timeout_s)
+            attempt.sock = sock
+            if attempt.cancelled:
+                # cancel() landed while we were connecting (sock was None,
+                # nothing to close then) — abort before requesting anything,
+                # or the "cancelled" loser would stream the whole payload
+                raise FetchError("attempt cancelled before request")
+            _send_frame(sock, msgpack.packb({
+                "cid": context_id,
+                "chunks": [list(c) for c in chunk_levels],
+                "straggle": attempt_idx == 0,
+                "attempt": attempt_idx,
+            }))
+            header = msgpack.unpackb(_recv_frame(sock, attempt.counter), raw=False)
+            if not header.get("ok"):
+                raise KeyError(header.get("error", "storage error"))
+            blobs = [_recv_frame(sock, attempt.counter) for _ in header["sizes"]]
+            attempt.blobs = blobs
+        except BaseException as e:
+            attempt.error = e
+        finally:
+            if attempt.sock is not None:
+                try:
+                    attempt.sock.close()
+                except OSError:
+                    pass
+            attempt.finished.set()
+            if notify is not None:
+                notify.set()
+
+    def fetch_run(
+        self,
+        context_id: str,
+        chunk_levels: ChunkLevels,
+        *,
+        start_t: float = 0.0,
+        hedge_after_s: Optional[float] = None,
+    ) -> FetchHandle:
+        chunk_levels = list(chunk_levels)
+        primary = _TcpAttempt()
+        attempts = [primary]
+        handle = _TcpHandle(attempts)
+
+        def coordinate():
+            t0 = time.perf_counter()
+            any_finished = threading.Event()
+            threading.Thread(
+                target=self._run_attempt,
+                args=(primary, context_id, chunk_levels, 0, any_finished),
+                daemon=True,
+            ).start()
+            hedge: Optional[_TcpAttempt] = None
+            if hedge_after_s is not None:
+                if not primary.finished.wait(hedge_after_s):
+                    if handle.done():  # cancelled while primary connected
+                        primary.cancel()
+                        return
+                    hedge = _TcpAttempt()
+                    attempts.append(hedge)
+                    threading.Thread(
+                        target=self._run_attempt,
+                        args=(hedge, context_id, chunk_levels, 1, any_finished),
+                        daemon=True,
+                    ).start()
+                    if handle.done():  # cancel() raced the hedge spawn
+                        hedge.cancel()
+            # race: first attempt to finish with blobs wins
+            contenders = [a for a in attempts]
+            winner: Optional[_TcpAttempt] = None
+            while winner is None:
+                winner = next(
+                    (a for a in contenders
+                     if a.finished.is_set() and a.blobs is not None),
+                    None,
+                )
+                if winner is not None:
+                    break
+                if all(a.finished.is_set() for a in contenders):  # all failed
+                    err = next(
+                        (a.error for a in contenders if a.error is not None),
+                        FetchError("all fetch attempts failed"),
+                    )
+                    handle._finish(None, err)
+                    return
+                any_finished.wait()
+                any_finished.clear()
+            wall = time.perf_counter() - t0
+            loser = next((a for a in attempts if a is not winner), None)
+            if loser is not None and not loser.finished.is_set():
+                loser.cancel()
+            nbytes = sum(len(b) for b in winner.blobs)
+            # single snapshot of the loser's live counter: its recv loop may
+            # still be draining buffered data as the socket dies
+            loser_read = loser.bytes_read if loser is not None else 0
+            handle._finish(FetchResult(
+                blobs=winner.blobs,
+                nbytes=nbytes,
+                start_t=start_t,
+                end_t=start_t + wall,
+                throughput_gbps=nbytes * 8.0 / max(wall, 1e-9) / 1e9,
+                hedged=winner is not primary,
+                hedge_issued=hedge is not None,
+                duplicate_bytes=float(loser_read),
+                wall_s=wall,
+                winner="primary" if winner is primary else "hedge",
+                loser_cancelled=loser.cancelled if loser is not None else False,
+                loser_bytes_read=loser_read,
+                completion_order=tuple(ci for ci, _ in chunk_levels),
+            ))
+
+        threading.Thread(target=coordinate, daemon=True).start()
+        return handle
+
+    def close(self) -> None:
+        pass

@@ -1,0 +1,446 @@
+"""Transport / storage-backend split (ISSUE 4).
+
+Covers the redesigned fetch layer:
+  * storage backends — memory/directory round-trip through the ``KVStore``
+    frontend, and the descriptive ``KeyError`` contract on missing
+    (context, chunk, level) for both;
+  * order-independent straggler draws — keyed per (chunk_idx, attempt),
+    so hedged/concurrent simulations see the same tail regardless of
+    simulation order, and ``fetch_outcome`` is one source of truth for the
+    hedging arithmetic;
+  * differential — a ``SimTransport``-backed ``ServeSession`` makes exactly
+    the virtual-clock simulator's per-chunk decisions/bytes (the PR 2 trace
+    matrix, now over genuinely asynchronous I/O), and reports the
+    simulator's duplicate-byte accounting;
+  * hedged I/O is real — under paced SimTransport the losing attempt is
+    cancelled mid-read; under ``TcpTransport`` the loser's socket is closed
+    mid-stream with its realized bytes reported (tcp tests are slow-marked:
+    tier-1 stays socket-free; they skip cleanly where sockets are
+    unavailable);
+  * ``materialize`` over the handle API (LocalTransport default) and
+    ``as_completed`` ordering.
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import codec as kvcodec
+from repro.serving.session import ServeSession
+from repro.streaming import CacheGenStreamer, KVStore
+from repro.streaming.network import (
+    BandwidthTrace,
+    NetworkModel,
+    keyed_straggler_delay,
+)
+from repro.streaming.storage import DirectoryBackend, MemoryBackend
+from repro.streaming.transport import (
+    LocalTransport,
+    SimTransport,
+    as_completed,
+)
+
+T_CTX = 100
+CHUNK = 20  # 5 chunks
+
+
+def _socket_or_skip():
+    import socket
+
+    try:
+        s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        s.bind(("127.0.0.1", 0))
+        s.close()
+    except OSError as e:  # sandboxed CI without loopback sockets
+        pytest.skip(f"sockets unavailable: {e}")
+
+
+@pytest.fixture(scope="module")
+def tfix():
+    from repro.configs import registry
+    from repro.models import build
+    from repro.serving.engine import Engine
+    from repro.serving.kv_layout import caches_to_codec_kv
+
+    rng = np.random.default_rng(0)
+    cfg = registry.get("smollm-360m").tiny()
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, cache_capacity=T_CTX + 40)
+    tokens = rng.integers(0, cfg.vocab_size, size=(1, T_CTX)).astype(np.int32)
+    logits, caches = eng.calculate_kv({"tokens": jnp.asarray(tokens)})
+    kv = caches_to_codec_kv(caches, 0, T_CTX)
+    ctab = kvcodec.profile([kv], kvcodec.CodecConfig(precision=10))
+    store = KVStore(ctab)
+    streamer = CacheGenStreamer(store, cfg)
+    metas = store.store_kv("ctx", kv, chunk_tokens=CHUNK)
+    u = sum(m.sizes[1] for m in metas) * 8 / 1e9  # level-1 ctx in 1 s
+    return dict(cfg=cfg, eng=eng, tokens=tokens, kv=kv, ctab=ctab,
+                store=store, streamer=streamer, metas=metas, u=u)
+
+
+# ---------------------------------------------------------------------------
+# storage backends (satellite: descriptive KeyError on both)
+# ---------------------------------------------------------------------------
+
+
+def test_backends_roundtrip_and_compose_with_frontend(tfix, tmp_path):
+    ctab, kv = tfix["ctab"], tfix["kv"]
+    mem = KVStore(ctab, backend=MemoryBackend())
+    disk = KVStore(ctab, directory=str(tmp_path))
+    assert isinstance(disk.backend, DirectoryBackend)
+    mem.store_kv("c", kv, chunk_tokens=40)
+    disk.store_kv("c", kv, chunk_tokens=40)
+    for ci in range(3):
+        blob = mem.get_kv("c", ci, 1)
+        assert blob == disk.get_kv("c", ci, 1)
+        assert mem.backend.contains("c", ci, 1)
+        assert disk.backend.contains("c", ci, 1)
+    assert not mem.backend.contains("c", 0, 99)
+    with pytest.raises(ValueError, match="either directory or backend"):
+        KVStore(ctab, directory=str(tmp_path), backend=MemoryBackend())
+
+
+def test_missing_key_raises_descriptive_error_both_backends(tfix, tmp_path):
+    """A miss must name the context/chunk/level — not surface as a bare
+    tuple KeyError (memory) or an opaque FileNotFoundError path (disk)."""
+    ctab, kv = tfix["ctab"], tfix["kv"]
+    for store in (KVStore(ctab), KVStore(ctab, directory=str(tmp_path))):
+        store.store_kv("c", kv, chunk_tokens=40)
+        for cid, ci, lvl in (("nope", 0, 1), ("c", 77, 1), ("c", 0, 99)):
+            with pytest.raises(KeyError) as ei:
+                store.get_kv(cid, ci, lvl)
+            msg = str(ei.value)
+            assert f"context {cid!r}" in msg, msg
+            assert f"chunk {ci}" in msg and f"level {lvl}" in msg, msg
+    with pytest.raises(KeyError, match="no chunk metadata for context"):
+        KVStore(ctab).meta("never-stored")
+
+
+# ---------------------------------------------------------------------------
+# keyed straggler draws (satellite: order independence)
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_draws_are_order_independent():
+    net = lambda: NetworkModel(  # noqa: E731
+        BandwidthTrace.constant(1.0), straggler_p=0.6,
+        straggler_scale_s=0.5, seed=11,
+    )
+    a, b = net(), net()
+    fwd = [a.straggler_delay(ci) for ci in range(8)]
+    rev = [b.straggler_delay(ci) for ci in reversed(range(8))]
+    assert fwd == list(reversed(rev))
+    # interleaving hedge attempts doesn't perturb the primary draws
+    c = net()
+    mixed = []
+    for ci in range(8):
+        c.straggler_delay(ci, attempt=1)
+        mixed.append(c.straggler_delay(ci))
+    assert mixed == fwd
+    # attempts are distinct draw streams; delays are reproducible in the key
+    assert keyed_straggler_delay(11, 3, 0, p=1.0, scale_s=1.0, alpha=1.5) \
+        == keyed_straggler_delay(11, 3, 0, p=1.0, scale_s=1.0, alpha=1.5)
+    assert any(
+        keyed_straggler_delay(11, ci, 0, p=1.0, scale_s=1.0, alpha=1.5)
+        != keyed_straggler_delay(11, ci, 1, p=1.0, scale_s=1.0, alpha=1.5)
+        for ci in range(4)
+    )
+
+
+def test_fetch_outcome_matches_fetch_time_and_accounts_duplicates():
+    net = NetworkModel(BandwidthTrace.constant(0.008), rtt_s=0.001,
+                       straggler_p=1.0, straggler_scale_s=0.5, seed=5)
+    nbytes = 1e4  # 10 ms transmit at 8 Mbps
+    plain = net.fetch_outcome(nbytes, 0.0, chunk_idx=2)
+    assert plain.end_t == pytest.approx(
+        net.fetch_time(nbytes, 0.0, chunk_idx=2))
+    assert not plain.hedge_issued and plain.duplicate_bytes == 0.0
+    hedged = net.fetch_outcome(nbytes, 0.0, chunk_idx=2, hedge_after_s=0.005)
+    assert hedged.hedge_issued and hedged.hedged  # p=1 stall -> hedge wins
+    want = 0.005 + net.fetch_time(nbytes, 0.005, chunk_idx=2, attempt=1,
+                                  straggle=False)
+    assert hedged.end_t == pytest.approx(want)
+    # the cancelled primary moved some bytes, never more than the payload
+    assert 0.0 <= hedged.duplicate_bytes <= nbytes
+
+
+# ---------------------------------------------------------------------------
+# differential: SimTransport session == virtual-clock simulator
+# ---------------------------------------------------------------------------
+
+
+def _traces(u):
+    return {
+        "flat": BandwidthTrace.constant(400 * u),
+        "falling": BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u]),
+        "oscillating": BandwidthTrace.steps(
+            0.15, [2.0 * u, 0.4 * u, 2.0 * u, 0.4 * u]
+        ),
+        "collapsed": BandwidthTrace.constant(0.002 * u),
+    }
+
+
+def _pair(tfix, trace, *, slo_s, recompute_s, net_kwargs=None,
+          transport=None, **kw):
+    net_kwargs = net_kwargs or {}
+    plan = tfix["streamer"].stream(
+        "ctx", NetworkModel(trace, **net_kwargs), slo_s=slo_s,
+        decode_bytes_per_s=1e9, recompute_s=recompute_s,
+        **{k: v for k, v in kw.items()},
+    )
+    sess = ServeSession(
+        tfix["streamer"], tfix["eng"], slo_s=slo_s, recompute_s=recompute_s,
+        decode_bytes_per_s=1e9,
+        **{k: v for k, v in kw.items() if k != "prior_throughput_gbps"},
+    )
+    res = sess.run(
+        "ctx", tfix["tokens"], NetworkModel(trace, **net_kwargs),
+        prior_throughput_gbps=kw.get("prior_throughput_gbps"),
+        transport=transport,
+    )
+    return plan, res
+
+
+def test_sim_transport_session_differential_on_trace_matrix(tfix):
+    """Explicit SimTransport (the async read path) over the PR 2 trace
+    shapes: decisions, bytes, hedge flags, duplicate bytes, and TTFT all
+    equal the virtual-clock simulator's."""
+    u = tfix["u"]
+    net_kwargs = dict(straggler_p=0.35, straggler_scale_s=0.3, seed=9)
+    for name, trace in _traces(u).items():
+        transport = SimTransport(
+            tfix["store"], NetworkModel(trace, **net_kwargs)
+        )
+        plan, res = _pair(
+            tfix, trace, slo_s=1.25,
+            recompute_s=lambda t, p: 0.04 * t / CHUNK,
+            net_kwargs=net_kwargs, transport=transport,
+            prior_throughput_gbps=float(trace.gbps[0]),
+            hedge_after_s=0.25,
+        )
+        assert res.configs == plan.result.configs, name
+        assert [t.nbytes for t in res.timelines] == \
+            [t.nbytes for t in plan.result.timelines]
+        assert [t.hedged for t in res.timelines] == \
+            [t.hedged for t in plan.result.timelines]
+        assert [t.duplicate_bytes for t in res.timelines] == \
+            [t.duplicate_bytes for t in plan.result.timelines]
+        assert abs(res.ttft_s - plan.result.ttft_s) < 1e-9
+        assert res.duplicate_bytes == plan.result.duplicate_bytes
+
+
+def test_sim_transport_hedging_pays_and_reports_duplicates(tfix):
+    """Slow straggler-prone link with an aggressive hedge timer: stalled
+    fetches are rescued by the winning hedge (TTFT drops), unstalled slow
+    fetches see their losing hedge cancelled mid-transfer (duplicate bytes
+    > 0), and the duplicate total stays bounded by the wire bytes."""
+    u = tfix["u"]
+    results = {}
+    for hedge in (None, 0.08):
+        net_kwargs = dict(straggler_p=0.6, straggler_scale_s=0.6, seed=21)
+        _, res = _pair(
+            tfix, BandwidthTrace.constant(1.5 * u), slo_s=5.0,
+            recompute_s=lambda t, p: 100.0, net_kwargs=net_kwargs,
+            prior_throughput_gbps=1.5 * u, allow_text=False,
+            hedge_after_s=hedge,
+        )
+        results[hedge] = res
+    assert results[0.08].ttft_s < results[None].ttft_s
+    assert results[0.08].n_hedged > 0
+    assert results[None].duplicate_bytes == 0.0
+    dup = results[0.08].duplicate_bytes
+    assert 0.0 < dup <= results[0.08].total_bytes
+
+
+def test_sim_transport_paced_cancellation_is_real(tfix):
+    """With real pacing, the losing attempt is cancelled mid-read: its
+    byte counter stops short of the payload."""
+    store, u = tfix["store"], tfix["u"]
+    nbytes = tfix["metas"][0].sizes[0]
+    # primary always stalls 10x the transfer; hedge (no stall) wins fast
+    net = NetworkModel(
+        BandwidthTrace.constant(nbytes * 8 / 1e9 / 0.05),  # 50 ms transfer
+        straggler_p=1.0, straggler_scale_s=10.0, straggler_alpha=50.0, seed=1,
+    )
+    tr = SimTransport(store, net, time_scale=1.0)
+    h = tr.fetch_run("ctx", [(0, 0)], start_t=0.0, hedge_after_s=0.02)
+    res = h.result(timeout=30)
+    assert res.hedged and res.winner == "hedge"
+    assert res.blobs[0] == store.get_kv("ctx", 0, 0)
+    assert res.loser_cancelled
+    # cancelled mid-pace: the loser's reader never finished the payload
+    assert res.loser_bytes_read < res.nbytes
+    assert 0 <= res.duplicate_bytes <= res.nbytes
+
+
+def test_sim_transport_missing_key_surfaces_descriptive_error(tfix):
+    tr = SimTransport(
+        tfix["store"], NetworkModel(BandwidthTrace.constant(1.0))
+    )
+    h = tr.fetch_run("ctx", [(0, 99)])
+    with pytest.raises(KeyError, match="chunk 0 level 99"):
+        h.result(timeout=10)
+
+
+def test_as_completed_yields_in_completion_order(tfix):
+    store = tfix["store"]
+    nb = tfix["metas"][0].sizes[0]
+    gbps = nb * 8 / 1e9  # 1 s virtual transfer per chunk
+    net = NetworkModel(BandwidthTrace.constant(gbps))
+    slow = SimTransport(store, net, time_scale=0.2)
+    fast = SimTransport(store, net, time_scale=0.0)
+    h_slow = slow.fetch_run("ctx", [(0, 0)])
+    h_fast = fast.fetch_run("ctx", [(1, 0)])
+    order = [h is h_fast for h in as_completed([h_slow, h_fast])]
+    assert order == [True, False]
+
+
+def test_materialize_via_transport_matches_direct(tfix):
+    streamer, eng, tokens = tfix["streamer"], tfix["eng"], tfix["tokens"]
+    trace = BandwidthTrace.constant(100 * tfix["u"])
+    plan = streamer.stream(
+        "ctx", NetworkModel(trace), slo_s=30.0, decode_bytes_per_s=1e9,
+        recompute_s=lambda t, p: 100.0, fixed_level=0,
+        prior_throughput_gbps=100 * tfix["u"],
+    )
+    ref = streamer.materialize(plan, eng, tokens, batch=1, fused=False)
+    for transport in (None, LocalTransport(streamer.store),
+                      SimTransport(streamer.store, NetworkModel(trace))):
+        mat = streamer.materialize(
+            plan, eng, tokens, batch=1, transport=transport
+        )
+        assert np.array_equal(
+            np.asarray(mat.kv_k[:, :, :T_CTX], np.float32),
+            np.asarray(ref.kv_k[:, :, :T_CTX], np.float32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# tcp transport (slow-marked: tier-1 stays socket-free)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_tcp_roundtrip_and_missing_key(tfix):
+    _socket_or_skip()
+    from repro.streaming.transport import TcpStoreServer, TcpTransport
+
+    store = tfix["store"]
+    with TcpStoreServer(store) as server:
+        tr = TcpTransport.for_server(server)
+        h = tr.fetch_run("ctx", [(0, 1), (1, 1), (2, 0)])
+        res = h.result(timeout=30)
+        assert res.blobs == store.get_run("ctx", [(0, 1), (1, 1), (2, 0)])
+        assert res.nbytes == sum(len(b) for b in res.blobs)
+        assert res.end_t > res.start_t and res.throughput_gbps > 0
+        assert not res.hedge_issued and res.duplicate_bytes == 0.0
+        bad = tr.fetch_run("ctx", [(0, 99)])
+        with pytest.raises(KeyError, match="chunk 0 level 99"):
+            bad.result(timeout=30)
+
+
+@pytest.mark.slow
+def test_tcp_session_runs_end_to_end(tfix):
+    """A full adaptive session over the socket transport: throughput is
+    measured off the wire, the cache materializes completely."""
+    _socket_or_skip()
+    from repro.streaming.transport import TcpStoreServer, TcpTransport
+
+    store = tfix["store"]
+    level1_bytes = sum(m.sizes[1] for m in tfix["metas"])
+    pace = level1_bytes * 8 / 1e9 / 0.25  # level-1 ctx in ~250 ms
+    with TcpStoreServer(store, pace_gbps=pace) as server:
+        sess = ServeSession(
+            tfix["streamer"], tfix["eng"], slo_s=5.0,
+            recompute_s=lambda t, p: 100.0, decode_bytes_per_s=1e9,
+            allow_text=False, transport=TcpTransport.for_server(server),
+        )
+        res = sess.run(
+            "ctx", tfix["tokens"],
+            NetworkModel(BandwidthTrace.constant(pace)),
+            prior_throughput_gbps=pace,
+        )
+        assert int(res.caches.length[0]) == T_CTX
+        assert all(c >= 0 for c in res.configs)
+        # the estimator measured a real link: observed throughputs are
+        # finite, positive, and the paced fetches took real wall time
+        assert res.ttft_s > 0.1
+        ref = tfix["streamer"].materialize(
+            tfix["streamer"].stream(
+                "ctx", NetworkModel(BandwidthTrace.constant(pace)),
+                slo_s=5.0, decode_bytes_per_s=1e9,
+                recompute_s=lambda t, p: 100.0, fixed_level=res.configs[0],
+                prior_throughput_gbps=pace,
+            ),
+            tfix["eng"], tfix["tokens"], batch=1, fused=False,
+        )
+        if all(c == res.configs[0] for c in res.configs):
+            np.testing.assert_allclose(
+                np.asarray(res.caches.kv_k[:, :, :T_CTX], np.float32),
+                np.asarray(ref.kv_k[:, :, :T_CTX], np.float32),
+                atol=2e-2, rtol=2e-2,
+            )
+
+
+@pytest.mark.slow
+def test_tcp_hedge_cancels_loser_mid_stream(tfix):
+    """Stalled primary (keyed injection, attempt 0 only) + paced link: the
+    hedge wins, the loser's socket is closed mid-stream, and duplicate
+    bytes stay bounded by the payload."""
+    _socket_or_skip()
+    from repro.streaming.transport import TcpStoreServer, TcpTransport
+
+    store = tfix["store"]
+    nb = store.meta("ctx")[0].sizes[0]
+    pace = nb * 8 / 1e9 / 0.3  # ~300 ms paced transfer
+    with TcpStoreServer(
+        store, pace_gbps=pace,
+        straggler_p=1.0, straggler_scale_s=1.0, straggler_alpha=50.0, seed=3,
+    ) as server:
+        tr = TcpTransport.for_server(server)
+        t0 = time.perf_counter()
+        h = tr.fetch_run("ctx", [(0, 0)], hedge_after_s=0.05)
+        res = h.result(timeout=60)
+        wall = time.perf_counter() - t0
+        assert res.hedged and res.winner == "hedge"
+        assert res.hedge_issued and res.loser_cancelled
+        assert res.blobs[0] == store.get_kv("ctx", 0, 0)
+        assert 0 <= res.duplicate_bytes <= res.nbytes
+        assert res.loser_bytes_read == res.duplicate_bytes
+        # the hedge rescued the fetch from the >=1 s primary stall
+        assert wall < 1.0, wall
+        # and an unhedged fetch of the same chunk eats the stall
+        t0 = time.perf_counter()
+        tr.fetch_run("ctx", [(0, 0)]).result(timeout=60)
+        assert time.perf_counter() - t0 > 1.0
+
+
+# ---------------------------------------------------------------------------
+# benchmark acceptance (separate CI job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_transport_bench_acceptance(tmp_path):
+    """Reduced benchmarks/transport_session.py run: hedged p95 TTFT beats
+    unhedged under straggler injection on both transports, unhedged runs
+    report zero duplicate bytes, hedged duplicates stay bounded, and the
+    cancellation probe shows losers stopped mid-stream."""
+    _socket_or_skip()
+    from benchmarks.transport_session import run
+
+    report = run(out_path=str(tmp_path / "BENCH_transport.json"),
+                 sim_trials=10, tcp_trials=6, verbose=False)
+    acc = report["acceptance"]
+    assert acc["sim_hedged_beats_unhedged_p95"] is True
+    assert acc["tcp_hedged_beats_unhedged_p95"] is True
+    assert acc["unhedged_has_no_duplicates"] is True
+    assert acc["duplicate_bytes_bounded"] is True
+    assert acc["losers_cancelled_mid_stream"] is True
+    by = {(r["transport"], r["hedged"]): r for r in report["rows"]}
+    assert by[("sim", True)]["n_hedged_total"] > 0
+    assert by[("tcp", True)]["n_hedged_total"] > 0
+    assert 0.0 < by[("sim", True)]["duplicate_frac"] <= 0.6
