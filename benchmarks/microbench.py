@@ -11,12 +11,19 @@ workload and writes ``BENCH_codec.json`` (repo root):
 * ``stacked`` — cross-request stacking (per M in {1, 2, 4, 8}): M requests'
   chunk runs decoded as M separate ``decode_chunks`` calls vs. *one*
   ``decode_chunk_runs`` call over all of them — the concurrent scheduler's
-  hot path.
+  hot path;
+* ``stacked_prefill`` — prefill concurrency (per M in {1, 2, 4, 8}): M
+  rows' TEXT chunks recomputed in one width-masked
+  ``Engine.prefill_extend_rows`` forward vs. M per-row ``prefill_extend``
+  calls — the scheduler's coalesced TEXT path.
 
 ``streaming.calibration`` reads the fused bytes/s back as the simulator's
 ``decode_bytes_per_s`` default, so TTFT numbers track the real codec across
-PRs; the ``stacked`` aggregate rates calibrate the multi-session contention
-model (``measured_contention_factors`` → ``pipeline.ContentionModel``).
+PRs; the ``stacked`` aggregate rates calibrate the decode side of the
+multi-session contention model (``measured_contention_factors`` →
+``pipeline.ContentionModel``) and ``stacked_prefill`` calibrates its
+separate TEXT side (``measured_text_contention_factors`` →
+``ContentionModel.text_factor``) instead of reusing the decode curve.
 """
 from __future__ import annotations
 
@@ -114,6 +121,7 @@ def _codec_decode_bench(rows: List[str]) -> None:
         },
         "speedup": speedup,
         "stacked": _stacked_decode_bench(rows, ct, mk_kv),
+        "stacked_prefill": _stacked_prefill_bench(rows),
     }
     with open(_BENCH_PATH, "w") as f:
         json.dump(report, f, indent=2)
@@ -191,6 +199,74 @@ def _stacked_decode_bench(rows: List[str], ct, mk_kv) -> dict:
         rows.append(
             f"micro.codec_decode_stacked_m{m},{t_stk*1e6:.0f},"
             f"bytes_per_s={n_bytes/t_stk:.3e};vs_sequential=x{t_seq/t_stk:.2f}"
+        )
+    return out
+
+
+def _stacked_prefill_bench(rows: List[str]) -> dict:
+    """Prefill-concurrency contention: M rows' TEXT-chunk recomputes in one
+    width-masked ``prefill_extend_rows`` forward vs. M per-row
+    ``prefill_extend`` calls (the schedulers' coalesced-TEXT choice vs. the
+    serialized baseline).
+
+    The per-M batched token rate is what ``calibration.
+    measured_text_contention_factors`` turns into the TEXT side of the
+    contention model: factor(M) = M * rate(1) / rate(M) — measured, instead
+    of reusing the decode-stacking curve (attention prefill scales with each
+    row's own prefix, not with a shared rANS scan).
+    """
+    from repro.configs import registry
+    from repro.models import build
+    from repro.serving.engine import Engine
+
+    cfg = registry.get("smollm-360m").tiny()
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    t_prefix, tc = 64, 64
+    engine = Engine(cfg, params, cache_capacity=t_prefix + 2 * tc)
+    out: dict = {}
+    for m in (1, 2, 4, 8):
+        # realize a per-row prefix so the extends read a non-empty cache
+        prefix = rng.integers(0, cfg.vocab_size, size=(m, t_prefix)).astype(np.int32)
+        base = engine.empty_caches(m)
+        _, base = engine.prefill_extend_rows(
+            jnp.asarray(prefix), base, np.full((m,), t_prefix, np.int32)
+        )
+        jax.block_until_ready(base.kv_k)
+        toks = rng.integers(0, cfg.vocab_size, size=(m, tc)).astype(np.int32)
+        jt = jnp.asarray(toks)
+        widths = np.full((m,), tc, np.int32)
+
+        def batched():
+            _, c = engine.prefill_extend_rows(jt, base, widths)
+            return jax.block_until_ready(c.kv_k)
+
+        base1 = engine.empty_caches(1)
+        _, base1 = engine.prefill_extend(jnp.asarray(prefix[:1]), base1)
+        jax.block_until_ready(base1.kv_k)
+        jts = [jnp.asarray(toks[i : i + 1]) for i in range(m)]
+
+        def sequential():
+            outs = [engine.prefill_extend(t, base1)[1] for t in jts]
+            for c in outs:
+                jax.block_until_ready(c.kv_k)
+            return outs
+
+        t_b = _time_best(batched, n=5)
+        t_s = _time_best(sequential, n=5)
+        n_tok = m * tc
+        out[str(m)] = {
+            "n_requests": m,
+            "chunk_tokens": tc,
+            "prefix_tokens": t_prefix,
+            "batched": {"s_per_call": t_b, "tokens_per_s": n_tok / t_b},
+            "sequential": {"s_per_call": t_s, "tokens_per_s": n_tok / t_s},
+            "speedup": t_s / t_b,
+        }
+        rows.append(
+            f"micro.prefill_extend_rows_m{m},{t_b*1e6:.0f},"
+            f"tok_per_s={n_tok/t_b:.3e};vs_sequential=x{t_s/t_b:.2f}"
         )
     return out
 

@@ -17,6 +17,18 @@ its own trace/policy/clock, while decodes, cache insertions and TEXT
 recomputes are batched across requests, and per-session compute charges are
 stretched by the measured contention model.
 
+``--arrivals`` switches from closed waves to *open-loop* serving (ISSUE 5):
+requests arrive over virtual time (``poisson:RATE`` draws seeded
+exponential inter-arrivals at RATE requests/s; ``trace:FILE`` reads one
+ascending arrival time per line) and are admitted by the
+:class:`~repro.serving.scheduler.ContinuousScheduler` the moment one of
+``--rows`` cache rows frees — TTFT then includes queueing delay from
+arrival.  ``--preempt`` additionally lets a waiting arrival evict a live
+session whose in-flight fetch is known to land past its SLO deadline (plus
+``--preempt-margin``): the straggler's fetch handle is cancelled, its
+realized rows are suspended into a snapshot, and it resumes on the next
+free row.
+
 ``--transport`` picks the fetch path (ISSUE 4): ``sim`` (default) paces
 real asynchronous store reads against the request's bandwidth trace —
 simulator-differential, so ``--check-sim`` still holds; ``local`` reads the
@@ -35,6 +47,34 @@ import argparse
 import numpy as np
 
 
+def _parse_arrivals(spec: str, n: int, seed: int):
+    """``poisson:RATE`` (seeded exponential inter-arrivals) or
+    ``trace:FILE`` (one ascending arrival time per line) -> n arrival
+    instants on the virtual clock."""
+    kind, _, val = spec.partition(":")
+    if kind == "poisson":
+        try:
+            rate = float(val)
+        except ValueError:
+            raise SystemExit(f"--arrivals poisson:RATE needs a number, got {val!r}")
+        if not rate > 0:  # also rejects nan
+            raise SystemExit(f"--arrivals poisson rate must be > 0, got {rate}")
+        rng = np.random.default_rng(seed)
+        return np.cumsum(rng.exponential(1.0 / rate, size=n)).tolist()
+    if kind == "trace":
+        with open(val) as f:
+            ts = [float(line) for line in f if line.strip()]
+        if len(ts) < n:
+            raise SystemExit(
+                f"--arrivals trace:{val} has {len(ts)} arrivals, need {n}"
+            )
+        ts = ts[:n]
+        if any(b < a for a, b in zip(ts, ts[1:])):
+            raise SystemExit(f"--arrivals trace:{val} times must be ascending")
+        return ts
+    raise SystemExit("--arrivals must be poisson:RATE or trace:FILE")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -51,6 +91,29 @@ def main() -> None:
     ap.add_argument("--concurrency", type=int, default=1,
                     help="serve requests in waves of N concurrent context "
                          "loads batched on the shared engine")
+    ap.add_argument("--arrivals", default=None, metavar="SPEC",
+                    help="open-loop serving instead of closed waves: "
+                         "'poisson:RATE' draws seeded exponential "
+                         "inter-arrivals at RATE requests/s on the virtual "
+                         "clock; 'trace:FILE' reads one ascending arrival "
+                         "time (seconds) per line.  Requests are admitted "
+                         "to the --rows row pool as rows free up, so TTFT "
+                         "includes queueing delay from arrival")
+    ap.add_argument("--rows", type=int, default=None,
+                    help="--arrivals: row-pool capacity (concurrent context "
+                         "loads resident on the engine; default: "
+                         "--concurrency)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="--arrivals: let a waiting arrival preempt a live "
+                         "session whose in-flight fetch is known to land "
+                         "past its SLO deadline — the fetch is cancelled "
+                         "and the session's realized rows suspend into a "
+                         "snapshot until a row frees again")
+    ap.add_argument("--preempt-margin", type=float, default=0.0, metavar="S",
+                    help="extra SLO overshoot (seconds) a pending fetch "
+                         "must incur before its session is preemptible")
+    ap.add_argument("--arrival-seed", type=int, default=0,
+                    help="seed for poisson:RATE arrival draws")
     ap.add_argument("--transport", choices=("sim", "local", "tcp"),
                     default="sim",
                     help="fetch path: sim = trace-paced async reads "
@@ -170,6 +233,53 @@ def main() -> None:
             fixed_level=args.fixed_level, hedge_after_s=args.hedge_after,
         )
         return f" sim_match={res.configs == plan.result.configs}"
+
+    if args.arrivals is not None:
+        from repro.serving.scheduler import (
+            ContinuousScheduler,
+            PreemptionPolicy,
+            SessionRequest,
+        )
+
+        arrivals = _parse_arrivals(args.arrivals, args.requests, args.arrival_seed)
+        traces = [
+            BandwidthTrace.sampled(rng, 6, 0.05, 0.05, 2.0)
+            for _ in range(args.requests)
+        ]
+        scheduler = ContinuousScheduler(
+            engine,
+            rows=args.rows if args.rows is not None else args.concurrency,
+            preemption=(
+                PreemptionPolicy(margin_s=args.preempt_margin)
+                if args.preempt else None
+            ),
+        )
+        out = scheduler.run([
+            SessionRequest(
+                session, "ctx", tokens, NetworkModel(tr, rtt_s=0.002),
+                prior_throughput_gbps=float(tr.gbps[0]), start_t=arr,
+                transport=transport,
+            )
+            for tr, arr in zip(traces, arrivals)
+        ])
+        for r, (res, tl) in enumerate(zip(out.sessions, out.timeline)):
+            extra = (
+                f" arrival={tl.arrival_t*1e3:.0f}ms wait={tl.queue_wait_s*1e3:.0f}ms"
+                + (f" preempted={tl.n_preemptions}x" if tl.n_preemptions else "")
+            )
+            describe(r, res, extra)
+        ttfts = sorted(s.ttft_s for s in out.sessions)
+        p = lambda q: ttfts[min(int(q * len(ttfts)), len(ttfts) - 1)]  # noqa: E731
+        print(
+            f"[open-loop rows={out.n_rows}] ttft p50={p(0.5)*1e3:.1f} ms "
+            f"p95={p(0.95)*1e3:.1f} ms preemptions={out.n_preemptions} "
+            f"resumes={out.n_resumes} rounds={out.n_rounds} "
+            f"decode_batches={out.n_decode_batches} "
+            f"peak_rows={max(n for _, n in out.occupancy)}"
+        )
+        if tcp_server is not None:
+            tcp_server.close()
+        return
 
     if args.concurrency == 1:
         for r in range(args.requests):

@@ -10,7 +10,9 @@ def __getattr__(name):
         from repro.serving import session
 
         return getattr(session, name)
-    if name in ("ConcurrentScheduler", "SessionRequest", "SchedulerResult"):
+    if name in ("ConcurrentScheduler", "SessionRequest", "SchedulerResult",
+                "ContinuousScheduler", "ContinuousResult", "PreemptionPolicy",
+                "RequestTimeline", "RowPool"):
         from repro.serving import scheduler
 
         return getattr(scheduler, name)

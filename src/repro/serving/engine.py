@@ -67,6 +67,10 @@ class Engine:
             donate_argnums=donate,
             static_argnames=("run_tokens",),
         )
+        # row-pool support (continuous admission): suspend/resume a row's
+        # realized prefix and recycle freed rows in place
+        self._restore_row = jax.jit(kv_layout.restore_row, donate_argnums=donate)
+        self._reset_rows = jax.jit(kv_layout.reset_rows, donate_argnums=donate)
         if self._extend is not None:
             # gather -> compact prefill_extend -> scatter back: coalesced
             # TEXT recompute that only computes the participating rows
@@ -216,6 +220,61 @@ class Engine:
             jnp.asarray(list(rows), jnp.int32),
             jnp.asarray(list(starts), jnp.int32),
             run_tokens=tuple(int(t) for t in run_tokens),
+        )
+        return caches._replace(kv_k=k, kv_v=v, length=ln)
+
+    # ------------------------------------------------------------------
+    # Row-pool support (continuous admission / preemption)
+    # ------------------------------------------------------------------
+
+    def save_row(self, caches: Caches, row: int, n_tokens: int):
+        """Snapshot the first ``n_tokens`` realized tokens of one cache row
+        (suspending a preempted session).  The snapshot owns its buffers, so
+        the pool cache may be freely recycled/donated afterwards."""
+        n_rows = caches.kv_k.shape[1]
+        if not 0 <= int(row) < n_rows:
+            raise ValueError(
+                f"save_row: row {row} out of range for a {n_rows}-row cache"
+            )
+        if not 0 <= int(n_tokens) <= self.capacity:
+            raise ValueError(
+                f"save_row: {n_tokens} tokens out of range for capacity "
+                f"{self.capacity}"
+            )
+        return kv_layout.save_row(caches, int(row), int(n_tokens))
+
+    def restore_row(self, caches: Caches, snapshot, row: int) -> Caches:
+        """Re-insert a suspended session's snapshot into (possibly another)
+        ``row`` of the pool cache: one donated-buffer write, then the row
+        reads exactly as it did at suspension (length included)."""
+        n_rows = caches.kv_k.shape[1]
+        if not 0 <= int(row) < n_rows:
+            raise ValueError(
+                f"restore_row: row {row} out of range for a {n_rows}-row cache"
+            )
+        if snapshot.n_tokens > self.capacity:
+            raise ValueError(
+                f"restore_row: snapshot of {snapshot.n_tokens} tokens exceeds "
+                f"cache capacity {self.capacity}"
+            )
+        k, v, ln = self._restore_row(
+            caches.kv_k, caches.kv_v, caches.length,
+            snapshot.kv_k, snapshot.kv_v, jnp.int32(row),
+        )
+        return caches._replace(kv_k=k, kv_v=v, length=ln)
+
+    def reset_rows(self, caches: Caches, rows: Sequence[int]) -> Caches:
+        """Zero recycled rows (KV and length) before new tenants take them —
+        a recycled row must be indistinguishable from a fresh cache's row."""
+        n_rows = caches.kv_k.shape[1]
+        if any(not 0 <= int(r) < n_rows for r in rows):
+            raise ValueError(
+                f"reset_rows: rows {list(rows)} out of range for a "
+                f"{n_rows}-row cache"
+            )
+        k, v, ln = self._reset_rows(
+            caches.kv_k, caches.kv_v, caches.length,
+            jnp.asarray(list(rows), jnp.int32),
         )
         return caches._replace(kv_k=k, kv_v=v, length=ln)
 

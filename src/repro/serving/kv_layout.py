@@ -1,7 +1,12 @@
 """Bridges between the serving engine's KV cache pytrees and the codec's
-(L, 2, T, C) tensor layout, plus cache allocation helpers."""
+(L, 2, T, C) tensor layout, plus cache allocation helpers and the row-pool
+primitives (save / restore / reset of a single request's row) that let the
+continuous-admission scheduler recycle rows of one batch-of-requests cache
+across sessions and suspend a preempted session's realized KV for later
+resumption."""
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
@@ -12,11 +17,15 @@ from repro.configs.base import ArchConfig
 from repro.models.lm import Caches, masked_window_update
 
 __all__ = [
+    "RowSnapshot",
     "caches_to_codec_kv",
     "codec_kv_to_caches",
     "insert_codec_run",
     "insert_codec_runs",
     "extract_row",
+    "save_row",
+    "restore_row",
+    "reset_rows",
     "alloc_caches",
     "kv_cache_bytes",
 ]
@@ -118,6 +127,84 @@ def insert_codec_runs(
     kv_k = vrow(kv_k, row_k, row_start, row_width)
     kv_v = vrow(kv_v, row_v, row_start, row_width)
     length = jnp.maximum(length, row_start + row_width)
+    return kv_k, kv_v, length
+
+
+@dataclasses.dataclass
+class RowSnapshot:
+    """A suspended session's realized KV: the first ``n_tokens`` tokens of
+    its cache row, sliced out as standalone device arrays (independent of
+    the pool cache's buffers, so later donated inserts into the pool cannot
+    invalidate it).  Restored — possibly into a *different* row — by
+    :func:`restore_row`."""
+
+    kv_k: jnp.ndarray  # (L, T, Hkv, Dh)
+    kv_v: jnp.ndarray  # (L, T, Hkv, Dh)
+    n_tokens: int
+
+
+def save_row(caches: Caches, row: int, n_tokens: int) -> RowSnapshot:
+    """Snapshot the realized prefix of one request's cache row.
+
+    The slices force their own buffers, so the snapshot survives any number
+    of donated-buffer updates to the pool cache afterwards; the exact bytes
+    come back via :func:`restore_row` (suspend→resume is a bit-exact round
+    trip — held to that by tests/test_continuous.py).
+    """
+    n = int(n_tokens)
+    return RowSnapshot(
+        kv_k=caches.kv_k[:, row, :n],
+        kv_v=caches.kv_v[:, row, :n],
+        n_tokens=n,
+    )
+
+
+def restore_row(
+    kv_k: jnp.ndarray,  # (L, B, cap, Hkv, Dh) pool cache, donatable
+    kv_v: jnp.ndarray,
+    length: jnp.ndarray,  # (B,) int32
+    k_row: jnp.ndarray,  # (L, T, Hkv, Dh) saved tokens (RowSnapshot.kv_k)
+    v_row: jnp.ndarray,
+    row: jnp.ndarray,  # scalar int32 target row (data, not static)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Re-insert a suspended session's saved tokens at ``[0, T)`` of ``row``.
+
+    Meant to be jitted with the cache buffers donated (``Engine.
+    restore_row``); the target row is data, so resuming into whichever row
+    freed does not retrace.  The row must have been reset (length 0) before
+    restoring — the pool hands out recycled rows zeroed.
+    """
+    T = k_row.shape[1]
+    row = row.astype(jnp.int32)
+    zero = jnp.int32(0)
+    kv_k = jax.lax.dynamic_update_slice(
+        kv_k, k_row[:, None].astype(kv_k.dtype), (zero, row, zero, zero, zero)
+    )
+    kv_v = jax.lax.dynamic_update_slice(
+        kv_v, v_row[:, None].astype(kv_v.dtype), (zero, row, zero, zero, zero)
+    )
+    length = length.at[row].set(jnp.int32(T))
+    return kv_k, kv_v, length
+
+
+def reset_rows(
+    kv_k: jnp.ndarray,  # (L, B, cap, Hkv, Dh) pool cache, donatable
+    kv_v: jnp.ndarray,
+    length: jnp.ndarray,  # (B,) int32
+    rows: jnp.ndarray,  # (R,) int32 rows to recycle
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Zero recycled rows before a new session takes them.
+
+    A recycled row must look exactly like a row of a fresh
+    :func:`alloc_caches` cache: zero KV and zero length — the length reset
+    matters doubly because run insertion advances length *monotonically*
+    (``jnp.maximum``), so a stale tenant's length would corrupt the new
+    tenant's offsets.  Row membership is data (no retrace per row set).
+    """
+    rows = rows.astype(jnp.int32)
+    kv_k = kv_k.at[:, rows].set(jnp.zeros((), kv_k.dtype))
+    kv_v = kv_v.at[:, rows].set(jnp.zeros((), kv_v.dtype))
+    length = length.at[rows].set(0)
     return kv_k, kv_v, length
 
 

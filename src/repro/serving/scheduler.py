@@ -1,50 +1,83 @@
-"""Concurrent multi-session serving: N adaptive context loads, one Engine.
+"""Multi-session serving on one shared Engine: closed waves and the
+continuous-admission event loop.
 
-The paper's serving setting (§8.3, Fig. 13) loads many contexts at once;
-running them as back-to-back :class:`~repro.serving.session.ServeSession`
-calls pays N sequential decode/recompute dispatch chains.  This module keeps
-*decisions* per-request — every load owns its ``StreamClock``, Algorithm 1
-policy, bandwidth trace and double-buffered segmenter, exactly as in the
-single-session loop — but drains the resolved work of all loads into a
-shared execution queue that batches the compute hot path *across requests*:
+Two schedulers share one execution substrate:
+
+* :class:`ConcurrentScheduler` — the closed-wave form (ISSUE 3): N requests
+  are all admitted at once and the wave drains to empty.  It remains the
+  continuous scheduler's differential oracle, and the N=1 oracle is
+  ``ServeSession`` itself.
+* :class:`ContinuousScheduler` — the open-loop form (ISSUE 5): requests
+  *arrive* over virtual time (``SessionRequest.start_t`` is the arrival
+  instant), an arrival-ordered admission queue feeds a fixed-capacity
+  :class:`RowPool` over one batch-of-requests cache, and rows are recycled
+  to waiting requests the moment a session finishes.
+
+Either way, *decisions* are per-request — every load owns its
+``StreamClock``, Algorithm 1 policy, bandwidth trace and double-buffered
+segmenter, exactly as in the single-session loop — while the resolved work
+of all live loads drains into cross-request batched execution:
 
   * **decode** — ready runs from different requests are stacked into a
-    single ``codec.decode_chunk_runs`` call: one pair of lane-stacked rANS
-    scans and one jitted assemble for all of them, with run geometry (not
-    request identity) shaping the jit signature;
-  * **insert** — the decoded concat lands in a *batch-of-requests* cache
-    (one row per live session) through ``Engine.insert_runs``: a vmap'd
-    per-row-offset ``dynamic_update_slice``, one dispatch for all runs;
-  * **recompute** — TEXT chunks from different requests with a common token
-    count coalesce into one padded, width-masked ``Engine.
-    prefill_extend_rows`` forward (rows without a TEXT chunk ride along
-    with width 0 and are untouched).
+    single ``codec.decode_chunk_runs`` call (one pair of lane-stacked rANS
+    scans + one jitted assemble, run geometry — not request identity —
+    shaping the jit signature);
+  * **insert** — the decoded concat lands in the batch-of-requests cache
+    through ``Engine.insert_runs`` (vmap'd per-row-offset
+    ``dynamic_update_slice``, one dispatch for all runs);
+  * **recompute** — TEXT chunks with a common token count coalesce into one
+    padded width-masked ``Engine.prefill_extend_rows`` forward, or a
+    gather→compact→scatter ``prefill_extend_gather`` for small subsets.
 
-Contention feedback closes the loop: each task's clock charges
-decode/recompute seconds scaled by ``ContentionModel.factor(n_active)``
-(measured from the microbench's stacked-decode numbers via
-``calibration.measured_contention_factors``; conservative ``factor(n) = n``
-when unmeasured), and the same factor inflates the remaining-recompute
-estimate inside ``choose_config`` — so a loaded engine pushes adaptation
-away from TEXT recompute exactly like a collapsing link pushes it toward
-coarser levels.  ``factor(1) == 1.0`` exactly, which is what makes the N=1
-scheduler bit-identical to ``ServeSession`` (tests/test_scheduler.py).
+Event loop (continuous form).  Each iteration is keyed on the two things
+that can unblock work — arrivals and fetch completions:
 
-Rounds are virtual-time ordered: each round steps every unfinished task
-once (earliest next fetch first), then executes the round's queue —
-decodes/inserts before recomputes, preserving each session's segment order
-(a task emits at most one run followed by at most one TEXT item per round).
-Since the transport split (ISSUE 4), a task's step may instead *issue* a
-chunk fetch through its :class:`~repro.streaming.transport.Transport`
-(returning no work): while the scheduler steps the other sessions, that
-fetch — and any hedged duplicate the transport races against it — is real
-I/O in flight on worker threads, resolved on the task's next turn.
+  1. **admission** — the virtual frontier is the earliest instant any live
+     task next acts (its pending fetch's completion when peekable, else its
+     fetch start).  Waiting requests whose arrival (or suspension) instant
+     has passed the frontier take free rows in ``(ready_t, index)`` order;
+     a request admitted to a row that has been free since before it arrived
+     is backdated to its exact arrival instant, so noticing an arrival a
+     round late costs nothing on the virtual clock.  Recycled rows are
+     zeroed first (``Engine.reset_rows``).
+  2. **preemption** (optional, :class:`PreemptionPolicy`) — when a ready
+     waiter finds no free row, a live session whose in-flight fetch is
+     *known* to land past its own SLO deadline (+ margin) can be preempted:
+     its ``FetchHandle`` is cancelled (real I/O stops; the chunk is
+     re-decided on resume), its realized row prefix is suspended into a
+     :class:`~repro.serving.kv_layout.RowSnapshot` (``Engine.save_row``),
+     and the tight-deadline waiter takes the row instead of convoying.  The
+     suspended session re-enters the admission queue and is restored
+     (``Engine.restore_row`` — bit-exact round trip, possibly into a
+     different row) when a row next frees.
+  3. **round** — exactly the wave scheduler's round: live tasks step in
+     virtual-time order (wall-real transports whose fetch hasn't landed are
+     deferred, not blocked on), and the emitted work executes batched,
+     decodes/inserts before recomputes.
+
+Contention feedback runs off the *time-varying live-row count*: every
+decision samples ``ContentionModel.factor(n_live)`` for decode and
+``ContentionModel.text_factor(n_live)`` for TEXT recompute (separately
+measured prefill-concurrency curve; decode-curve fallback), so a fresh
+admission immediately inflates every other session's projected compute —
+including the remaining-recompute estimate inside ``choose_config`` — and a
+completion immediately relaxes it.
+
+Differential invariants (held by tests/test_continuous.py): with every
+arrival at t=0, preemption disabled and the pool sized to the request count
+(``rows=None``, the default), the continuous loop degenerates to exactly
+the wave scheduler — same admission order, same rounds, same batched
+dispatches, bit-identical caches and decisions — and at N=1 both degenerate
+to ``ServeSession``.  (An over-sized pool keeps per-request decisions and
+caches equivalent but may route small TEXT groups through the gather path,
+whose dispatch split keys on the pool size.)
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +97,16 @@ from repro.serving.session import (
 from repro.streaming.network import NetworkModel
 from repro.streaming.pipeline import ContentionModel
 
-__all__ = ["SessionRequest", "SchedulerResult", "ConcurrentScheduler"]
+__all__ = [
+    "SessionRequest",
+    "SchedulerResult",
+    "ConcurrentScheduler",
+    "RowPool",
+    "PreemptionPolicy",
+    "RequestTimeline",
+    "ContinuousResult",
+    "ContinuousScheduler",
+]
 
 
 @dataclasses.dataclass
@@ -73,7 +115,11 @@ class SessionRequest:
 
     ``session`` carries the per-request configuration (SLO, cost model,
     adaptation knobs, streamer/store) and must share the scheduler's Engine;
-    ``tokens`` is the (1, T) context for TEXT recomputes.
+    ``tokens`` is the (1, T) context for TEXT recomputes.  ``start_t`` is
+    the request's *arrival* instant on the virtual clock: the wave scheduler
+    starts the clock there outright; the continuous scheduler anchors the
+    SLO there and admits the request when a row frees (TTFT then includes
+    queueing delay).
     """
 
     session: ServeSession
@@ -111,8 +157,150 @@ class SchedulerResult:
     n_runs: int
 
 
+# ---------------------------------------------------------------------------
+# Shared batched executors (wave + continuous)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _SessionAccount:
+    """Per-session share of the batched dispatch times."""
+
+    decode_s: float = 0.0
+    recompute_s: float = 0.0
+    runs: int = 0
+
+
+@dataclasses.dataclass
+class _BatchStats:
+    decode_s: float = 0.0
+    recompute_s: float = 0.0
+    n_rounds: int = 0
+    n_decode_batches: int = 0
+    n_text_batches: int = 0
+    n_runs: int = 0
+
+
+def _execute_runs(
+    engine: Engine,
+    runs: List[RunWork],
+    caches: Caches,
+    acct_by_row: Mapping[int, _SessionAccount],
+    stats: _BatchStats,
+) -> Caches:
+    """Cross-request stacked decode + one batched insert per table set."""
+    if not runs:
+        return caches
+    groups: Dict[int, List[RunWork]] = {}
+    for w in runs:
+        groups.setdefault(id(w.tables), []).append(w)
+    for group in groups.values():
+        t0 = time.perf_counter()
+        # token counts come from the plan (validated against every
+        # fetched blob's header at fetch time); decode_chunk_runs
+        # cross-checks the decoded total against them
+        kv, spans = kvcodec.decode_chunk_runs(
+            [w.blobs for w in group],
+            group[0].tables,
+            out_dtype=caches.kv_k.dtype,
+            run_tokens=[w.n_tokens for w in group],
+        )
+        caches = engine.insert_runs(
+            caches,
+            kv,
+            rows=[w.row for w in group],
+            starts=[w.start for w in group],
+            run_tokens=[n for _, n in spans],
+        )
+        dt = time.perf_counter() - t0
+        stats.decode_s += dt
+        stats.n_decode_batches += 1
+        stats.n_runs += len(group)
+        total = sum(w.n_tokens for w in group)
+        for w in group:
+            acct_by_row[w.row].decode_s += dt * w.n_tokens / total
+            acct_by_row[w.row].runs += 1
+    return caches
+
+
+def _execute_texts(
+    engine: Engine,
+    texts: List[TextWork],
+    caches: Caches,
+    acct_by_row: Mapping[int, _SessionAccount],
+    stats: _BatchStats,
+) -> Caches:
+    """Coalesced TEXT recompute: one padded masked forward per chunk width
+    (rows whose request has no TEXT chunk this round are masked out with
+    width 0)."""
+    if not texts:
+        return caches
+    n = caches.length.shape[0]
+    by_tc: Dict[int, List[TextWork]] = {}
+    for w in texts:
+        by_tc.setdefault(w.n_tokens, []).append(w)
+    for tc, group in sorted(by_tc.items()):
+        t0 = time.perf_counter()
+        if 2 * len(group) >= n:
+            # most (or all) rows recompute: width-masked full-batch
+            # forward — non-participating rows ride along with width 0,
+            # no gather/scatter traffic
+            toks = np.zeros((n, tc), np.int32)
+            widths = np.zeros((n,), np.int32)
+            for w in group:
+                toks[w.row] = np.asarray(w.tokens[0], np.int32)
+                widths[w.row] = tc
+            _, caches = engine.prefill_extend_rows(
+                jnp.asarray(toks), caches, widths
+            )
+        else:
+            # a small subset: gather the participating rows into a
+            # compact sub-batch so compute scales with them, not the
+            # full batch
+            toks = np.stack(
+                [np.asarray(w.tokens[0], np.int32) for w in group]
+            )
+            _, caches = engine.prefill_extend_gather(
+                jnp.asarray(toks), caches, [w.row for w in group]
+            )
+        dt = time.perf_counter() - t0
+        stats.recompute_s += dt
+        stats.n_text_batches += 1
+        # token-weighted share, mirroring the decode accounting (groups are
+        # same-width today, so this equals an even split — but the share
+        # rule must not silently change if grouping ever mixes widths)
+        total = sum(w.n_tokens for w in group)
+        for w in group:
+            acct_by_row[w.row].recompute_s += dt * w.n_tokens / total
+    return caches
+
+
+def _validate_requests(engine: Engine, requests: List[SessionRequest]) -> None:
+    for r in requests:
+        if r.session.engine is not engine:
+            raise ValueError(
+                "every request's session must share the scheduler's Engine"
+            )
+        if r.tokens.ndim != 2 or r.tokens.shape[0] != 1:
+            raise ValueError(
+                f"scheduler requests are single-row: tokens must be (1, T), "
+                f"got {r.tokens.shape}"
+            )
+
+
+def _req_label(idx: int, r: SessionRequest) -> str:
+    return f"req{idx}:{r.context_id}"
+
+
+# ---------------------------------------------------------------------------
+# Closed waves (ISSUE 3) — the continuous scheduler's differential oracle
+# ---------------------------------------------------------------------------
+
+
 class ConcurrentScheduler:
-    """Run N adaptive context loads concurrently against one shared Engine.
+    """Run N adaptive context loads concurrently against one shared Engine,
+    as one closed wave: all requests admitted up front, the wave drains to
+    empty.
 
     ``contention=None`` calibrates from this host's measured stacked-decode
     throughput (``ContentionModel.measured()``); pass an explicit
@@ -139,16 +327,7 @@ class ConcurrentScheduler:
     def run(self, requests: List[SessionRequest]) -> SchedulerResult:
         if not requests:
             raise ValueError("ConcurrentScheduler.run needs at least one request")
-        for r in requests:
-            if r.session.engine is not self.engine:
-                raise ValueError(
-                    "every request's session must share the scheduler's Engine"
-                )
-            if r.tokens.ndim != 2 or r.tokens.shape[0] != 1:
-                raise ValueError(
-                    f"scheduler requests are single-row: tokens must be (1, T), "
-                    f"got {r.tokens.shape}"
-                )
+        _validate_requests(self.engine, requests)
         n = len(requests)
         caches = self.engine.empty_caches(n)
         if caches.kv_k is None:
@@ -156,6 +335,7 @@ class ConcurrentScheduler:
                 f"scheduler needs a KV-cache family, got {self.engine.cfg.family}"
             )
         scale = lambda: self.contention.factor(self._n_active)  # noqa: E731
+        tscale = lambda: self.contention.text_factor(self._n_active)  # noqa: E731
         tasks = [
             SessionTask(
                 r.session,
@@ -166,11 +346,14 @@ class ConcurrentScheduler:
                 prior_throughput_gbps=r.prior_throughput_gbps,
                 start_t=r.start_t,
                 compute_scale=scale,
+                text_scale=tscale,
                 transport=r.transport,
+                label=_req_label(i, r),
             )
             for i, r in enumerate(requests)
         ]
         acct = [_SessionAccount() for _ in tasks]
+        acct_by_row = {i: a for i, a in enumerate(acct)}
         stats = _BatchStats()
         self._n_active = n
         wall0 = time.perf_counter()
@@ -197,8 +380,8 @@ class ConcurrentScheduler:
                     (round_runs if isinstance(w, RunWork) else round_texts).append(w)
             # drain: decodes/inserts land before recomputes — a task emits
             # at most [run, text] per round, so this preserves its order
-            caches = self._execute_runs(round_runs, caches, acct, stats)
-            caches = self._execute_texts(round_texts, caches, acct, stats)
+            caches = _execute_runs(self.engine, round_runs, caches, acct_by_row, stats)
+            caches = _execute_texts(self.engine, round_texts, caches, acct_by_row, stats)
         jax.block_until_ready(caches.kv_k)
         wall_total = time.perf_counter() - wall0
 
@@ -224,111 +407,382 @@ class ConcurrentScheduler:
             n_runs=stats.n_runs,
         )
 
+
+# ---------------------------------------------------------------------------
+# Row pool
+# ---------------------------------------------------------------------------
+
+
+class RowPool:
+    """Fixed-capacity free-list over the batch-of-requests cache's rows.
+
+    Lowest free row first (deterministic recycling), with per-row
+    bookkeeping the continuous scheduler needs: since when a row has been
+    free (so a backdated admission charges no phantom queueing) and whether
+    it carries a previous tenant's data (so recycled rows — and only those —
+    are zeroed).  Misuse raises with the request id and the pool state
+    named: double allocation beyond capacity, releasing an unallocated row,
+    releasing another request's row.
+    """
+
+    def __init__(self, n_rows: int):
+        if n_rows < 1:
+            raise ValueError(f"RowPool needs at least one row, got {n_rows}")
+        self.n_rows = int(n_rows)
+        self._free = list(range(self.n_rows))  # heap, ascending
+        self._owner: Dict[int, str] = {}
+        self._free_since = {r: 0.0 for r in range(self.n_rows)}
+        self._dirty: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def describe(self) -> str:
+        occupied = ", ".join(
+            f"row {r} -> {o!r}" for r, o in sorted(self._owner.items())
+        )
+        return (
+            f"{self.n_free}/{self.n_rows} rows free"
+            + (f"; occupied: {occupied}" if occupied else "")
+        )
+
+    def allocate(self, owner: str) -> Tuple[int, float, bool]:
+        """Take the lowest free row for ``owner``.
+
+        Returns ``(row, free_since_t, needs_reset)``; the caller must zero
+        the row (``Engine.reset_rows``) when ``needs_reset`` — it carries a
+        previous tenant's KV and length.
+        """
+        if not self._free:
+            raise RuntimeError(
+                f"admitting request {owner!r} beyond row-pool capacity: "
+                f"{self.describe()}"
+            )
+        row = heapq.heappop(self._free)
+        if row in self._owner:  # internal invariant, should be unreachable
+            raise RuntimeError(
+                f"row pool corrupt: free row {row} already owned by "
+                f"{self._owner[row]!r} ({self.describe()})"
+            )
+        self._owner[row] = owner
+        dirty = row in self._dirty
+        self._dirty.discard(row)
+        return row, self._free_since[row], dirty
+
+    def release(self, row: int, owner: str, now_t: float) -> None:
+        """Return ``owner``'s row to the free list at virtual instant
+        ``now_t`` (session finished or was preempted)."""
+        if row not in self._owner:
+            raise RuntimeError(
+                f"releasing row {row} for request {owner!r}: row is not "
+                f"allocated ({self.describe()})"
+            )
+        if self._owner[row] != owner:
+            raise RuntimeError(
+                f"releasing row {row} for request {owner!r}: row is owned "
+                f"by {self._owner[row]!r} ({self.describe()})"
+            )
+        del self._owner[row]
+        self._free_since[row] = float(now_t)
+        self._dirty.add(row)
+        heapq.heappush(self._free, row)
+
+
+# ---------------------------------------------------------------------------
+# Continuous admission (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionPolicy:
+    """When may a waiting request evict a live session?
+
+    A live session is *preemptible* when its in-flight fetch's completion is
+    knowable (peeked from the handle / the virtual clock) and lands more
+    than ``margin_s`` past the session's own SLO deadline — it will blow its
+    SLO regardless, so holding the row only convoys the queue.  With
+    ``require_waiting_headroom`` (default) the waiter must still have SLO
+    headroom at the preemption instant; a waiter that has already blown its
+    own deadline gains nothing from thrashing a straggler's row.  Among
+    several candidates the most-straggling fetch (latest completion) is
+    evicted first.
+    """
+
+    margin_s: float = 0.0
+    require_waiting_headroom: bool = True
+
+
+@dataclasses.dataclass
+class RequestTimeline:
+    """Admission-level life of one request on the virtual clock."""
+
+    index: int
+    arrival_t: float
+    admit_t: float = float("nan")
+    finish_t: float = float("nan")
+    rows_used: List[int] = dataclasses.field(default_factory=list)
+    preempt_ts: List[float] = dataclasses.field(default_factory=list)
+    resume_ts: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.admit_t - self.arrival_t
+
+    @property
+    def n_preemptions(self) -> int:
+        return len(self.preempt_ts)
+
+
+@dataclasses.dataclass
+class ContinuousResult:
+    """Per-request results (request order) plus open-loop counters.
+
+    ``sessions[i].ttft_s`` is measured from request ``i``'s *arrival* —
+    queueing and suspension time included.  ``occupancy`` samples the live
+    row count per round ``(virtual_t, n_live)``; preemption/resume counts
+    aggregate the per-request ``timeline`` entries.
+    """
+
+    sessions: List[SessionResult]
+    timeline: List[RequestTimeline]
+    occupancy: List[Tuple[float, int]]
+    n_rows: int
+    wall_total_s: float
+    wall_decode_s: float
+    wall_recompute_s: float
+    n_rounds: int
+    n_decode_batches: int
+    n_text_batches: int
+    n_runs: int
+    n_preemptions: int
+    n_resumes: int
+
+
+class ContinuousScheduler:
+    """Open-loop serving: arrivals feed a row pool; rows recycle on finish.
+
+    ``rows=None`` sizes the pool to the request count (pure continuous
+    batching with no queueing — and, with every arrival at t=0 and
+    preemption off, exact wave-scheduler degeneration).  ``preemption=None``
+    disables preemption; pass a :class:`PreemptionPolicy` to let
+    tight-deadline waiters evict sessions whose in-flight fetches straggle
+    past their SLO.  ``contention`` as in :class:`ConcurrentScheduler`,
+    driven here by the time-varying live-row count.
+    """
+
+    # hard backstop against a pathological preempt/resume livelock: any
+    # legitimate workload preempts orders of magnitude less than this
+    MAX_PREEMPTIONS = 100_000
+
+    def __init__(
+        self,
+        engine: Engine,
+        *,
+        rows: Optional[int] = None,
+        contention: Optional[ContentionModel] = None,
+        preemption: Optional[PreemptionPolicy] = None,
+    ):
+        if rows is not None and rows < 1:
+            raise ValueError(f"ContinuousScheduler needs rows >= 1, got {rows}")
+        self.engine = engine
+        self.rows = rows
+        self.contention = (
+            contention if contention is not None else ContentionModel.measured()
+        )
+        self.preemption = preemption
+        self._n_active = 1
+
     # ------------------------------------------------------------------
 
-    def _execute_runs(
-        self,
-        runs: List[RunWork],
-        caches: Caches,
-        acct: List["_SessionAccount"],
-        stats: "_BatchStats",
-    ) -> Caches:
-        """Cross-request stacked decode + one batched insert per table set."""
-        if not runs:
-            return caches
-        groups: Dict[int, List[RunWork]] = {}
-        for w in runs:
-            groups.setdefault(id(w.tables), []).append(w)
-        for group in groups.values():
-            t0 = time.perf_counter()
-            # token counts come from the plan (validated against every
-            # fetched blob's header at fetch time); decode_chunk_runs
-            # cross-checks the decoded total against them
-            kv, spans = kvcodec.decode_chunk_runs(
-                [w.blobs for w in group],
-                group[0].tables,
-                out_dtype=caches.kv_k.dtype,
-                run_tokens=[w.n_tokens for w in group],
+    def run(self, requests: List[SessionRequest]) -> ContinuousResult:
+        if not requests:
+            raise ValueError("ContinuousScheduler.run needs at least one request")
+        _validate_requests(self.engine, requests)
+        n_rows = self.rows if self.rows is not None else len(requests)
+        caches = self.engine.empty_caches(n_rows)
+        if caches.kv_k is None:
+            raise ValueError(
+                f"scheduler needs a KV-cache family, got {self.engine.cfg.family}"
             )
-            caches = self.engine.insert_runs(
-                caches,
-                kv,
-                rows=[w.row for w in group],
-                starts=[w.start for w in group],
-                run_tokens=[n for _, n in spans],
-            )
-            dt = time.perf_counter() - t0
-            stats.decode_s += dt
-            stats.n_decode_batches += 1
-            stats.n_runs += len(group)
-            total = sum(w.n_tokens for w in group)
-            for w in group:
-                acct[w.row].decode_s += dt * w.n_tokens / total
-                acct[w.row].runs += 1
-        return caches
+        pool = RowPool(n_rows)
+        scale = lambda: self.contention.factor(self._n_active)  # noqa: E731
+        tscale = lambda: self.contention.text_factor(self._n_active)  # noqa: E731
 
-    def _execute_texts(
-        self,
-        texts: List[TextWork],
-        caches: Caches,
-        acct: List["_SessionAccount"],
-        stats: "_BatchStats",
-    ) -> Caches:
-        """Coalesced TEXT recompute: one padded masked forward per chunk
-        width (rows whose request has no TEXT chunk this round are masked
-        out with width 0)."""
-        if not texts:
-            return caches
-        n = caches.length.shape[0]
-        by_tc: Dict[int, List[TextWork]] = {}
-        for w in texts:
-            by_tc.setdefault(w.n_tokens, []).append(w)
-        for tc, group in sorted(by_tc.items()):
-            t0 = time.perf_counter()
-            if 2 * len(group) >= n:
-                # most (or all) rows recompute: width-masked full-batch
-                # forward — non-participating rows ride along with width 0,
-                # no gather/scatter traffic
-                toks = np.zeros((n, tc), np.int32)
-                widths = np.zeros((n,), np.int32)
-                for w in group:
-                    toks[w.row] = np.asarray(w.tokens[0], np.int32)
-                    widths[w.row] = tc
-                _, caches = self.engine.prefill_extend_rows(
-                    jnp.asarray(toks), caches, widths
+        tasks: List[Optional[SessionTask]] = [None] * len(requests)
+        snaps: Dict[int, object] = {}  # request idx -> RowSnapshot
+        acct = [_SessionAccount() for _ in requests]
+        timeline = [
+            RequestTimeline(index=i, arrival_t=float(r.start_t))
+            for i, r in enumerate(requests)
+        ]
+        results: List[Optional[SessionResult]] = [None] * len(requests)
+        stats = _BatchStats()
+        occupancy: List[Tuple[float, int]] = []
+        n_preempt = n_resume = 0
+
+        # admission queue: arrivals up front, suspended sessions re-enter
+        # at their suspension instant; (ready_t, index) order
+        waiting: List[Tuple[float, int]] = [
+            (float(r.start_t), i) for i, r in enumerate(requests)
+        ]
+        heapq.heapify(waiting)
+        live: List[SessionTask] = []
+        acct_by_row: Dict[int, _SessionAccount] = {}
+        row_owner: Dict[int, int] = {}  # row -> request idx
+
+        def admit(idx: int, ready_t: float) -> None:
+            nonlocal caches, n_resume
+            r = requests[idx]
+            row, free_since, dirty = pool.allocate(_req_label(idx, r))
+            if dirty:
+                caches = self.engine.reset_rows(caches, [row])
+            # a row free since before the request was ready charges no
+            # phantom queueing: admission is backdated to ready_t itself
+            admit_t = max(ready_t, free_since)
+            t = tasks[idx]
+            if t is None:
+                t = SessionTask(
+                    r.session,
+                    r.context_id,
+                    r.tokens,
+                    r.network,
+                    row=row,
+                    prior_throughput_gbps=r.prior_throughput_gbps,
+                    start_t=r.start_t,
+                    compute_scale=scale,
+                    text_scale=tscale,
+                    transport=r.transport,
+                    label=_req_label(idx, r),
                 )
+                t.begin_at(admit_t)
+                tasks[idx] = t
+                timeline[idx].admit_t = admit_t
             else:
-                # a small subset: gather the participating rows into a
-                # compact sub-batch so compute scales with them, not the
-                # full batch
-                toks = np.stack(
-                    [np.asarray(w.tokens[0], np.int32) for w in group]
+                t.resume(row, admit_t)
+                caches = self.engine.restore_row(caches, snaps.pop(idx), row)
+                timeline[idx].resume_ts.append(admit_t)
+                n_resume += 1
+            timeline[idx].rows_used.append(row)
+            row_owner[row] = idx
+            acct_by_row[row] = acct[idx]
+            live.append(t)
+
+        def preempt(victim: SessionTask, now_t: float) -> None:
+            nonlocal caches, n_preempt
+            idx = row_owner[victim.row]
+            row = victim.row
+            snaps[idx] = self.engine.save_row(caches, row, victim.realized_tokens)
+            victim.suspend(now_t)  # cancels the in-flight fetch handle
+            live.remove(victim)
+            del row_owner[row]
+            del acct_by_row[row]
+            pool.release(row, victim.label, now_t)
+            timeline[idx].preempt_ts.append(now_t)
+            n_preempt += 1
+            if n_preempt > self.MAX_PREEMPTIONS:
+                raise RuntimeError(
+                    f"preemption runaway: {n_preempt} preemptions "
+                    f"({pool.describe()})"
                 )
-                _, caches = self.engine.prefill_extend_gather(
-                    jnp.asarray(toks), caches, [w.row for w in group]
+            heapq.heappush(waiting, (now_t, idx))
+
+        wall0 = time.perf_counter()
+        while live or waiting:
+            # --- admission + preemption at the virtual frontier ------------
+            if waiting:
+                if live:
+                    frontier = min(t.horizon_t() for t in live)
+                else:
+                    frontier = waiting[0][0]
+                while waiting and waiting[0][0] <= frontier and pool.n_free > 0:
+                    ready_t, idx = heapq.heappop(waiting)
+                    admit(idx, ready_t)
+                while (
+                    self.preemption is not None
+                    and waiting
+                    and pool.n_free == 0
+                    and waiting[0][0] <= frontier
+                ):
+                    head_ready, head_idx = waiting[0]
+                    head_req = requests[head_idx]
+                    head_deadline = (
+                        float(head_req.start_t) + head_req.session.slo_s
+                    )
+                    # a candidate's eviction instant: when the waiter became
+                    # ready, but never before the candidate's in-flight
+                    # fetch started (the engine cannot cancel in the past)
+                    victim, victim_end, victim_t = None, -float("inf"), 0.0
+                    for t in live:
+                        end = t.peek_pending_end_t()
+                        if end is None:
+                            continue
+                        preempt_t = max(head_ready, t.next_fetch_t)
+                        if end <= t.deadline_t + self.preemption.margin_s:
+                            continue  # fetch lands within the SLO: keep it
+                        if (
+                            self.preemption.require_waiting_headroom
+                            and preempt_t >= head_deadline
+                        ):
+                            continue  # waiter would start already expired
+                        if end > victim_end:
+                            victim, victim_end, victim_t = t, end, preempt_t
+                    if victim is None:
+                        break
+                    heapq.heappop(waiting)
+                    preempt(victim, victim_t)
+                    admit(head_idx, head_ready)
+            if not live:
+                continue  # admission above is guaranteed to make progress
+
+            # --- one wave-identical round over the live set ----------------
+            stats.n_rounds += 1
+            round_t = min(t.next_fetch_t for t in live)
+            ordered = sorted(live, key=lambda t: t.next_fetch_t)
+            ready = [t for t in ordered if t.fetch_ready]
+            round_runs: List[RunWork] = []
+            round_texts: List[TextWork] = []
+            for t in ready if ready else ordered[:1]:
+                self._n_active = sum(1 for x in live if not x.done)
+                for w in t.step():
+                    (round_runs if isinstance(w, RunWork) else round_texts).append(w)
+            caches = _execute_runs(self.engine, round_runs, caches, acct_by_row, stats)
+            caches = _execute_texts(self.engine, round_texts, caches, acct_by_row, stats)
+
+            # --- completions: extract the row, recycle it ------------------
+            for t in [x for x in live if x.done]:
+                idx = row_owner[t.row]
+                finish_t = max(t.clock.fetch_t, t.clock.compute_t)
+                results[idx] = t.result(
+                    extract_row(caches, t.row),
+                    wall_decode_s=acct[idx].decode_s,
+                    wall_recompute_s=acct[idx].recompute_s,
+                    wall_total_s=0.0,  # filled with the realized total below
+                    n_runs=acct[idx].runs,
                 )
-            dt = time.perf_counter() - t0
-            stats.recompute_s += dt
-            stats.n_text_batches += 1
-            for w in group:
-                acct[w.row].recompute_s += dt / len(group)
-        return caches
-
-
-@dataclasses.dataclass
-class _SessionAccount:
-    """Per-session share of the batched dispatch times."""
-
-    decode_s: float = 0.0
-    recompute_s: float = 0.0
-    runs: int = 0
-
-
-@dataclasses.dataclass
-class _BatchStats:
-    decode_s: float = 0.0
-    recompute_s: float = 0.0
-    n_rounds: int = 0
-    n_decode_batches: int = 0
-    n_text_batches: int = 0
-    n_runs: int = 0
+                timeline[idx].finish_t = finish_t
+                live.remove(t)
+                del row_owner[t.row]
+                del acct_by_row[t.row]
+                pool.release(t.row, t.label, finish_t)
+            occupancy.append((round_t, len(live)))
+        jax.block_until_ready(caches.kv_k)
+        wall_total = time.perf_counter() - wall0
+        assert all(r is not None for r in results)
+        for r in results:
+            r.wall_total_s = wall_total
+        return ContinuousResult(
+            sessions=list(results),
+            timeline=timeline,
+            occupancy=occupancy,
+            n_rows=n_rows,
+            wall_total_s=wall_total,
+            wall_decode_s=stats.decode_s,
+            wall_recompute_s=stats.recompute_s,
+            n_rounds=stats.n_rounds,
+            n_decode_batches=stats.n_decode_batches,
+            n_text_batches=stats.n_text_batches,
+            n_runs=stats.n_runs,
+            n_preemptions=n_preempt,
+            n_resumes=n_resume,
+        )

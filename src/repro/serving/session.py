@@ -236,6 +236,16 @@ class SessionTask:
     resolves the handle, accounts the realized timing on the clock, and
     emits the work items whose inputs are complete.  TEXT chunks resolve in
     a single step (no storage I/O).
+
+    Preemption (ISSUE 5): a task is resumable mid-load.  :meth:`suspend`
+    cancels the in-flight fetch handle (an un-accounted chunk simply gets
+    re-decided later — ``decide`` mutates nothing, so rewinding is dropping
+    ``_pending``) and freezes the task; :meth:`resume` hands it a new cache
+    row and advances the clock frontiers to the resumption instant, with
+    everything realized so far — timelines, policy state, the segmenter's
+    half-filled buffer — carried across untouched.  The *cache* side of a
+    suspension (saving/restoring the realized row prefix) belongs to the
+    continuous scheduler via ``Engine.save_row``/``restore_row``.
     """
 
     def __init__(
@@ -249,12 +259,15 @@ class SessionTask:
         prior_throughput_gbps: Optional[float] = None,
         start_t: float = 0.0,
         compute_scale: Optional[Callable[[], float]] = None,
+        text_scale: Optional[Callable[[], float]] = None,
         transport: Optional[Transport] = None,
+        label: Optional[str] = None,
     ):
         self.session = session
         self.context_id = context_id
         self.tokens = tokens
         self.row = row
+        self.label = label if label is not None else context_id
         store = session.streamer.store
         self.store = store
         self.metas = store.meta(context_id)
@@ -277,6 +290,7 @@ class SessionTask:
             hedge_after_s=session.hedge_after_s,
             start_t=start_t,
             compute_scale=compute_scale,
+            text_scale=text_scale,
         )
         self.segmenter = RunSegmenter(session.max_run_tokens)
         # the fetch path: explicit transport, or the session's; default is
@@ -289,6 +303,11 @@ class SessionTask:
         self._i = 0
         self._offset = 0  # tokens whose work items have been emitted
         self._pending = None  # (handle, meta, config, nbytes, scale) in flight
+        # preemption bookkeeping (continuous scheduler)
+        self.suspended_at: Optional[float] = None
+        self.n_preemptions = 0
+        self.n_resumes = 0
+        self.cancelled_fetches: List[tuple] = []  # (chunk_idx, config)
 
     @property
     def done(self) -> bool:
@@ -310,6 +329,97 @@ class SessionTask:
         """When this task's next chunk fetch would start (virtual clock)."""
         return self.clock.fetch_t
 
+    @property
+    def suspended(self) -> bool:
+        return self.suspended_at is not None
+
+    @property
+    def realized_tokens(self) -> int:
+        """Tokens whose work items have been emitted (and, under the
+        schedulers' execute-in-emitting-round discipline, executed) — the
+        prefix a row snapshot must cover at suspension."""
+        return self._offset
+
+    @property
+    def deadline_t(self) -> float:
+        """Absolute virtual instant of this request's TTFT SLO."""
+        return self.clock.start_t + self.session.slo_s
+
+    def begin_at(self, t: float) -> None:
+        """Advance the clock's busy-until frontiers to the admission instant.
+
+        A request admitted later than it arrived (``start_t``) keeps its SLO
+        anchored at arrival — ``elapsed_s`` then includes the queue wait —
+        but cannot fetch or compute before it holds a row.  No-op when
+        ``t <= start_t`` (immediate admission), which is what keeps the
+        all-arrivals-at-t0 path bit-identical to the wave scheduler.
+        """
+        self.clock.fetch_t = max(self.clock.fetch_t, float(t))
+        self.clock.compute_t = max(self.clock.compute_t, float(t))
+
+    def peek_pending_end_t(self) -> Optional[float]:
+        """Completion instant of the in-flight fetch, when knowable without
+        blocking on wall-real I/O: the handle already completed, or the
+        transport resolves on the virtual clock.  ``None`` while a wall-real
+        fetch is still streaming (its completion is genuinely unknown) or
+        when nothing is pending; a failed fetch also reads ``None`` here —
+        its error surfaces through :meth:`step`."""
+        if self._pending is None:
+            return None
+        handle = self._pending[0]
+        if not handle.done() and getattr(self.transport, "realtime", False):
+            return None
+        try:
+            return handle.result().end_t
+        except Exception:
+            return None
+
+    def horizon_t(self) -> float:
+        """Virtual instant this task next acts: its pending fetch's
+        completion when peekable, else its next fetch start — the continuous
+        scheduler's admission frontier is the minimum of these over the live
+        set."""
+        end = self.peek_pending_end_t()
+        return self.next_fetch_t if end is None else end
+
+    def suspend(self, now_t: float) -> None:
+        """Preempt this task: cancel the in-flight fetch (real I/O stops;
+        the chunk is re-decided from scratch on resume) and mark the task
+        suspended.  The caller owns the row snapshot (``Engine.save_row``
+        over :attr:`realized_tokens`) and the row's release."""
+        if self.done:
+            raise RuntimeError(
+                f"preempting request {self.label!r}: session already "
+                f"finished (all {len(self.metas)} chunks realized)"
+            )
+        if self.suspended:
+            raise RuntimeError(
+                f"preempting request {self.label!r}: already suspended at "
+                f"t={self.suspended_at:.6f}"
+            )
+        if self._pending is not None:
+            handle, m, config, _nbytes, _scale = self._pending
+            self._pending = None
+            handle.cancel()
+            self.cancelled_fetches.append((m.chunk_idx, config))
+        self.suspended_at = float(now_t)
+        self.n_preemptions += 1
+
+    def resume(self, row: int, resume_t: float) -> None:
+        """Take a (possibly different) row and continue from the suspended
+        state: the next :meth:`step` re-decides the interrupted chunk at the
+        resumption instant — elapsed SLO time includes the suspension."""
+        if not self.suspended:
+            state = "finished" if self.done else f"live on row {self.row}"
+            raise RuntimeError(
+                f"resuming request {self.label!r}: not suspended "
+                f"(state: {state})"
+            )
+        self.row = row
+        self.suspended_at = None
+        self.n_resumes += 1
+        self.begin_at(resume_t)
+
     def _advance(self, m, config: int, blob: Optional[bytes]) -> List[object]:
         """Segment one accounted chunk and emit any completed work items."""
         if config == TEXT:
@@ -329,6 +439,11 @@ class SessionTask:
         only *issues* I/O returns none.  The last chunk also flushes the
         segmenter, so once :attr:`done` every item has been emitted.
         """
+        if self.suspended:
+            raise RuntimeError(
+                f"stepping request {self.label!r}: suspended at "
+                f"t={self.suspended_at:.6f}; resume() it onto a row first"
+            )
         if self._pending is not None:
             handle, m, config, nbytes, scale = self._pending
             self._pending = None

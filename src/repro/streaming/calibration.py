@@ -37,6 +37,7 @@ __all__ = [
     "clear_calibration_cache",
     "measured_decode_bytes_per_s",
     "measured_contention_factors",
+    "measured_text_contention_factors",
 ]
 
 DEFAULT_DECODE_BYTES_PER_S = 4e9
@@ -184,3 +185,46 @@ def measured_contention_factors(
 
     sig = tuple(_file_sig(p) for p in cands)
     return dict(_memoized(("contention", cands, backend), sig, compute))
+
+
+def measured_text_contention_factors(
+    path: Optional[str] = None,
+) -> Dict[int, float]:
+    """Per-session TEXT-recompute slowdown at M concurrent sessions.
+
+    Reads the microbench's ``stacked_prefill`` section: for each M it
+    recorded the aggregate token throughput of M rows' text chunks
+    recomputed in one width-masked ``prefill_extend_rows`` forward.  Same
+    arithmetic as :func:`measured_contention_factors` — ``factor(M) =
+    M * thpt(1) / thpt(M)``, clamped to >= 1.0 — but over the prefill
+    concurrency curve, which stacks differently from decode (attention cost
+    grows with each row's own prefix, not with the shared scan).  Returns
+    ``{}`` when no stacked-prefill measurement exists; callers
+    (``pipeline.ContentionModel.text_factor``) then fall back to the decode
+    curve.
+    """
+    import jax
+
+    backend = jax.default_backend()
+    cands = tuple([path] if path else bench_codec_candidates())
+
+    def extract(report):
+        rates = {
+            int(m): float(row["batched"]["tokens_per_s"])
+            for m, row in report["stacked_prefill"].items()
+        }
+        base = rates.get(1)
+        if not base or base <= 0:
+            return None
+        return {
+            m: max(1.0, m * base / r)
+            for m, r in sorted(rates.items())
+            if r > 0
+        }
+
+    def compute():
+        factors = _first_measurement(cands, backend, extract)
+        return {} if factors is None else factors
+
+    sig = tuple(_file_sig(p) for p in cands)
+    return dict(_memoized(("text_contention", cands, backend), sig, compute))

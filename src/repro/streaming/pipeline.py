@@ -30,7 +30,12 @@ count of active sessions) and applies the factor both to the charged compute
 windows *and* to the remaining-recompute estimate that feeds
 ``choose_config`` — adaptation reacts to compute pressure, not just
 bandwidth.  With no callable (or a factor of exactly 1.0, the single-session
-case) the clock is bit-identical to the pre-contention behavior.
+case) the clock is bit-identical to the pre-contention behavior.  TEXT
+recompute is priced by its own measured concurrency curve
+(``ContentionModel.text_factor`` from the microbench's stacked-prefill
+section, via the clock's separate ``text_scale`` hook) instead of reusing
+the decode curve; with no prefill measurement it falls back to the decode
+factors, bit-identically.
 """
 from __future__ import annotations
 
@@ -41,6 +46,7 @@ from repro.streaming.adaptation import TEXT, AdaptationPolicy
 from repro.streaming.calibration import (
     measured_contention_factors,
     measured_decode_bytes_per_s,
+    measured_text_contention_factors,
 )
 from repro.streaming.network import FetchOutcome, NetworkModel
 from repro.streaming.storage import ChunkMeta
@@ -68,23 +74,40 @@ class ContentionModel:
     conservative model when no stacked measurement exists.  ``factor(1)`` is
     exactly 1.0 by construction, so a single session under a ContentionModel
     is bit-identical to one without.
+
+    TEXT recompute does not stack like decode (a width-masked batched
+    ``prefill_extend_rows`` forward has its own concurrency curve), so the
+    TEXT side carries a separate measured map: ``text_factors`` comes from
+    the microbench's stacked-prefill section
+    (``calibration.measured_text_contention_factors``) and is read through
+    :meth:`text_factor`; when no prefill measurement exists it falls back to
+    the decode curve (the pre-split behavior, bit-identical).
+
+    The continuous scheduler drives both factors with the *time-varying*
+    live-row count: ``n_active`` is whatever number of sessions currently
+    holds a cache row, re-sampled at every decision, so admission and
+    completion immediately reprice every other session's projected compute —
+    including the remaining-recompute estimate inside ``choose_config``.
     """
 
     factors: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    text_factors: Mapping[int, float] = dataclasses.field(default_factory=dict)
 
     @staticmethod
     def measured(path: Optional[str] = None) -> "ContentionModel":
-        """Calibrated from this host's BENCH_codec.json stacked section."""
-        return ContentionModel(measured_contention_factors(path))
+        """Calibrated from this host's BENCH_codec.json stacked sections."""
+        return ContentionModel(
+            measured_contention_factors(path),
+            measured_text_contention_factors(path),
+        )
 
-    def factor(self, n_active: int) -> float:
-        n = max(int(n_active), 1)
-        if n == 1:
-            return 1.0
-        pts = sorted((int(k), float(v)) for k, v in self.factors.items())
+    @staticmethod
+    def _interp(factors: Mapping[int, float], n: int) -> Optional[float]:
+        """Linear interpolation over measured points; None when unmeasured."""
+        pts = sorted((int(k), float(v)) for k, v in factors.items())
         pts = [(k, v) for k, v in pts if k >= 1]
         if not pts:
-            return float(n)  # fully serialized: no batching benefit assumed
+            return None
         if pts[0][0] != 1:
             pts.insert(0, (1, 1.0))
         for (n0, f0), (n1, f1) in zip(pts, pts[1:]):
@@ -100,6 +123,23 @@ class ContentionModel:
         else:
             (n1, f1), slope = pts[-1], 0.0
         return max(1.0, f1 + slope * (n - n1))
+
+    def factor(self, n_active: int) -> float:
+        n = max(int(n_active), 1)
+        if n == 1:
+            return 1.0
+        v = self._interp(self.factors, n)
+        # fully serialized: no batching benefit assumed when unmeasured
+        return float(n) if v is None else v
+
+    def text_factor(self, n_active: int) -> float:
+        """TEXT-recompute slowdown at ``n_active`` sessions; falls back to
+        the decode curve when no prefill-concurrency measurement exists."""
+        n = max(int(n_active), 1)
+        if n == 1:
+            return 1.0
+        v = self._interp(self.text_factors, n)
+        return self.factor(n) if v is None else v
 
 
 @dataclasses.dataclass
@@ -185,6 +225,10 @@ class StreamClock:
     # live compute-pressure hook: returns the current per-session slowdown
     # (ContentionModel.factor(n_active)); None == 1.0 == uncontended
     compute_scale: Optional[Callable[[], float]] = None
+    # TEXT-recompute counterpart (ContentionModel.text_factor(n_active));
+    # None falls back to compute_scale — the decode curve priced TEXT too
+    # before the prefill-concurrency measurement existed
+    text_scale: Optional[Callable[[], float]] = None
 
     def __post_init__(self):
         self.fetch_t = self.start_t  # network busy-until
@@ -195,12 +239,15 @@ class StreamClock:
         """Algorithm 1 choice for chunk ``i`` at the current virtual instant.
 
         Returns ``(config, nbytes, scale)``; ``scale`` is the contention
-        factor sampled *now* (decision time) and must be passed back to
-        :meth:`account` so the charged compute window uses the same value
-        even when the fetch resolves later (async transports).
+        factor sampled *now* (decision time) for the chosen config's compute
+        category — the TEXT factor for a TEXT chunk, the decode factor
+        otherwise — and must be passed back to :meth:`account` so the
+        charged compute window uses the same value even when the fetch
+        resolves later (async transports).
         """
         m = metas[i]
         scale = 1.0 if self.compute_scale is None else float(self.compute_scale())
+        tscale = scale if self.text_scale is None else float(self.text_scale())
         remaining_sizes, remaining_text, rem_recompute = remaining_work(
             metas, i, self.prefix_tokens, self.recompute_s
         )
@@ -208,10 +255,10 @@ class StreamClock:
             elapsed_s=self.fetch_t - self.start_t,
             remaining_sizes=remaining_sizes,
             remaining_text_bytes=remaining_text,
-            remaining_recompute_s=rem_recompute * scale,
+            remaining_recompute_s=rem_recompute * tscale,
         )
         nbytes = float(m.text_bytes if cfg.config == TEXT else m.sizes[cfg.config])
-        return cfg.config, nbytes, scale
+        return cfg.config, nbytes, (tscale if cfg.config == TEXT else scale)
 
     def virtual_fetch(self, nbytes: float, chunk_idx: int) -> FetchOutcome:
         """The decided chunk's fetch, resolved purely on the virtual clock

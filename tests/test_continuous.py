@@ -1,0 +1,551 @@
+"""Differential + property harness for the continuous-admission scheduler.
+
+Invariants (ISSUE 5):
+  * t=0 degeneration — with every arrival at t=0, preemption disabled and
+    the pool sized to the request count, the continuous scheduler is
+    bit-identical to
+    the wave ``ConcurrentScheduler``: same per-chunk decisions, bytes,
+    virtual TTFTs and bit-exact per-request caches, across the PR 2 trace
+    matrix (flat / falling / oscillating / collapsed / sampled — the fast
+    subset in tier-1, the full matrix in the slow job), and under an
+    evolving (serialized) contention model;
+  * N=1 degeneration — a single request through the continuous scheduler is
+    bit-identical to ``ServeSession``;
+  * admission — with fewer rows than requests, later requests queue: TTFT
+    (measured from arrival) includes the wait, the admission instant equals
+    the previous tenant's finish, and a row freed before an arrival charges
+    no phantom queueing (backdated admission);
+  * preemption — a tight-deadline arrival evicts a straggling session whose
+    in-flight fetch is known to blow its SLO: the fetch handle is cancelled,
+    the realized rows suspend into a snapshot, and the resumed session's
+    final cache still matches the ``fused=False`` per-chunk oracle of its
+    realized plan bit-exactly (suspend/restore round trip);
+  * row pool — property test (hypothesis via tests/_hyp.py): random
+    admit/finish/preempt sequences never double-allocate or leak rows, and
+    misuse raises with the request id and pool state named;
+  * contention — ``ContentionModel.text_factor`` interpolates a separate
+    measured TEXT curve and falls back to the decode curve, and the
+    stacked-prefill calibration parses factor(M) = M*rate(1)/rate(M).
+"""
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.core import codec as kvcodec
+from repro.serving.scheduler import (
+    ConcurrentScheduler,
+    ContinuousScheduler,
+    PreemptionPolicy,
+    RowPool,
+    SessionRequest,
+)
+from repro.serving.session import ServeSession
+from repro.streaming import CacheGenStreamer, KVStore
+from repro.streaming.adaptation import TEXT
+from repro.streaming.network import BandwidthTrace, NetworkModel
+from repro.streaming.pipeline import ContentionModel
+from repro.streaming.streamer import FetchPlan
+
+T_CTX = 100
+CHUNK = 20  # 5 chunks
+
+IDEAL = ContentionModel({1: 1.0, 2: 1.0})  # factor-1 at any N
+SERIALIZED = ContentionModel({})  # factor(n) = n: n_active evolution matters
+
+
+@pytest.fixture(scope="module")
+def cfix():
+    from repro.configs import registry
+    from repro.models import build
+    from repro.serving.engine import Engine
+    from repro.serving.kv_layout import caches_to_codec_kv
+
+    rng = np.random.default_rng(0)
+    cfg = registry.get("smollm-360m").tiny()
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, cache_capacity=T_CTX + 40)
+    tokens = rng.integers(0, cfg.vocab_size, size=(1, T_CTX)).astype(np.int32)
+    logits, caches = eng.calculate_kv({"tokens": jnp.asarray(tokens)})
+    kv = caches_to_codec_kv(caches, 0, T_CTX)
+    ctab = kvcodec.profile([kv], kvcodec.CodecConfig(precision=10))
+    store = KVStore(ctab)
+    streamer = CacheGenStreamer(store, cfg)
+    metas = store.store_kv("ctx", kv, chunk_tokens=CHUNK)
+    u = sum(m.sizes[1] for m in metas) * 8 / 1e9  # level-1 ctx in 1 s
+    return dict(cfg=cfg, eng=eng, tokens=tokens, store=store,
+                streamer=streamer, metas=metas, u=u)
+
+
+def _mk_session(cfix, **kw):
+    kw.setdefault("slo_s", 1.25)
+    kw.setdefault("recompute_s", lambda t, p: 0.15 * 1.25 * t / CHUNK)
+    kw.setdefault("decode_bytes_per_s", 1e9)
+    kw.setdefault("max_run_tokens", 2 * CHUNK)
+    return ServeSession(cfix["streamer"], cfix["eng"], **kw)
+
+
+def _trace_matrix(u):
+    return {
+        "flat": BandwidthTrace.constant(400 * u),
+        "falling": BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u]),
+        "oscillating": BandwidthTrace.steps(
+            0.15, [2.0 * u, 0.4 * u, 2.0 * u, 0.4 * u]
+        ),
+        "collapsed": BandwidthTrace.constant(0.002 * u),
+    }
+
+
+def _kv_np(caches):
+    return (
+        np.asarray(caches.kv_k[:, :, :T_CTX], np.float32),
+        np.asarray(caches.kv_v[:, :, :T_CTX], np.float32),
+    )
+
+
+def _oracle(cfix, result):
+    """fused=False per-chunk materialization of a session's realized plan."""
+    plan = FetchPlan(
+        context_id="ctx", result=result.stream_result(), metas=cfix["metas"]
+    )
+    return cfix["streamer"].materialize(
+        plan, cfix["eng"], cfix["tokens"], batch=1, fused=False
+    )
+
+
+def _requests(cfix, traces, sess_kw=None, arrivals=None, priors=True):
+    sess_kw = sess_kw or [{} for _ in traces]
+    arrivals = arrivals if arrivals is not None else [0.0] * len(traces)
+    return [
+        SessionRequest(
+            _mk_session(cfix, **kw), "ctx", cfix["tokens"], NetworkModel(tr),
+            prior_throughput_gbps=float(tr.gbps[0]) if priors else None,
+            start_t=arr,
+        )
+        for tr, kw, arr in zip(traces, sess_kw, arrivals)
+    ]
+
+
+def _assert_sessions_bit_identical(a, b, what):
+    assert a.configs == b.configs, (what, a.configs, b.configs)
+    assert [t.nbytes for t in a.timelines] == [t.nbytes for t in b.timelines]
+    assert [t.hedged for t in a.timelines] == [t.hedged for t in b.timelines]
+    assert abs(a.ttft_s - b.ttft_s) < 1e-12
+    for x, y in zip(_kv_np(a.caches), _kv_np(b.caches)):
+        assert np.array_equal(x, y), f"{what}: caches differ"
+
+
+# ---------------------------------------------------------------------------
+# t=0 / N=1 degeneration differentials
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_t0_bit_identical_to_wave(cfix):
+    """All arrivals at t=0, preemption off, rows = N: the event loop must
+    degenerate to exactly the wave scheduler — decisions, TTFT and caches —
+    on a heterogeneous mix (no priors: chunk 0 streams at the default level,
+    so levels, TEXT and batched decodes all appear)."""
+    u = cfix["u"]
+    m = _trace_matrix(u)
+    traces = [m["flat"], m["falling"], m["oscillating"],
+              BandwidthTrace.constant(3 * u)]
+    for contention in (IDEAL, SERIALIZED):
+        wave = ConcurrentScheduler(cfix["eng"], contention=contention).run(
+            _requests(cfix, traces, priors=False)
+        )
+        cont = ContinuousScheduler(cfix["eng"], contention=contention).run(
+            _requests(cfix, traces, priors=False)
+        )
+        assert cont.n_rows == len(traces)
+        assert cont.n_preemptions == 0 and cont.n_resumes == 0
+        assert cont.n_rounds == wave.n_rounds
+        assert cont.n_decode_batches == wave.n_decode_batches
+        assert cont.n_text_batches == wave.n_text_batches
+        for i, (a, b) in enumerate(zip(cont.sessions, wave.sessions)):
+            _assert_sessions_bit_identical(a, b, f"req {i}")
+        if contention is IDEAL:
+            # the scenario actually exercised the batched paths
+            all_configs = [c for s in cont.sessions for c in s.configs]
+            assert TEXT in all_configs and any(c != TEXT for c in all_configs)
+            assert cont.n_decode_batches >= 1
+
+
+def test_continuous_n1_bit_identical_to_session(cfix):
+    u = cfix["u"]
+    for trace, kw in (
+        (BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u]), {}),
+        (BandwidthTrace.constant(3 * u), dict(fixed_level=0)),
+    ):
+        prior = float(trace.gbps[0])
+        res = _mk_session(cfix, **kw).run(
+            "ctx", cfix["tokens"], NetworkModel(trace),
+            prior_throughput_gbps=prior,
+        )
+        out = ContinuousScheduler(cfix["eng"], contention=IDEAL).run([
+            SessionRequest(_mk_session(cfix, **kw), "ctx", cfix["tokens"],
+                           NetworkModel(trace), prior_throughput_gbps=prior)
+        ])
+        _assert_sessions_bit_identical(out.sessions[0], res, "N=1")
+
+
+@pytest.mark.slow
+def test_continuous_t0_differential_matrix(cfix):
+    """Full PR 2 trace matrix (named shapes + sampled traces) x recompute
+    regimes: t=0 continuous == wave, bit-identical."""
+    u = cfix["u"]
+    shapes = list(_trace_matrix(u).values())
+    rng = np.random.default_rng(7)
+    shapes += [
+        BandwidthTrace.sampled(rng, 6, 0.12, 0.2 * u, 4.0 * u)
+        for _ in range(3)
+    ]
+    r_slow = lambda t, p: 100.0  # noqa: E731  (GPU busy: no TEXT)
+    r_mid = lambda t, p: 0.15 * 1.25 * t / CHUNK  # noqa: E731
+    for recompute_s in (r_slow, r_mid):
+        sess_kw = [dict(recompute_s=recompute_s) for _ in shapes]
+        wave = ConcurrentScheduler(cfix["eng"], contention=IDEAL).run(
+            _requests(cfix, shapes, sess_kw)
+        )
+        cont = ContinuousScheduler(cfix["eng"], contention=IDEAL).run(
+            _requests(cfix, shapes, sess_kw)
+        )
+        for i, (a, b) in enumerate(zip(cont.sessions, wave.sessions)):
+            _assert_sessions_bit_identical(a, b, f"matrix req {i}")
+
+
+# ---------------------------------------------------------------------------
+# admission: queueing, recycling, backdating
+# ---------------------------------------------------------------------------
+
+
+def test_admission_queues_and_recycles_rows(cfix):
+    """rows=1, two t=0 arrivals: the second is admitted exactly when the
+    first finishes (its row recycled + zeroed), its TTFT includes the wait,
+    and both caches land their whole context — the recycled-row tenant
+    bit-exact against the fused=False oracle (a stale row would corrupt it)."""
+    u = cfix["u"]
+    traces = [_trace_matrix(u)["falling"], BandwidthTrace.constant(3 * u)]
+    out = ContinuousScheduler(cfix["eng"], rows=1, contention=IDEAL).run(
+        _requests(cfix, traces, sess_kw=[{}, dict(fixed_level=0)])
+    )
+    t0, t1 = out.timeline
+    assert t0.admit_t == 0.0 and t0.queue_wait_s == 0.0
+    assert t1.admit_t == pytest.approx(t0.finish_t)
+    assert t1.queue_wait_s > 0.0
+    assert t0.rows_used == [0] and t1.rows_used == [0]  # recycled
+    # TTFT from arrival covers the wait plus the load itself
+    assert out.sessions[1].ttft_s > t1.queue_wait_s
+    for s, exact in zip(out.sessions, (False, True)):
+        assert int(s.caches.length[0]) == T_CTX
+        ref = _oracle(cfix, s)
+        for a, b in zip(_kv_np(s.caches), _kv_np(ref)):
+            if exact:  # level-0 tenant of the recycled row: bit-exact
+                assert np.array_equal(a, b), "recycled row != oracle"
+            else:
+                np.testing.assert_allclose(a, b, atol=2e-2, rtol=2e-2)
+
+
+def test_admission_backdates_to_arrival_on_free_row(cfix):
+    """An arrival during another session's long fetch must not be charged
+    phantom queueing: its row was free the whole time, so admission is
+    backdated to the exact arrival instant and its decisions match a solo
+    session started there."""
+    u = cfix["u"]
+    slow = BandwidthTrace.constant(0.05 * u)  # r0 fetches for a long time
+    fast = BandwidthTrace.constant(3 * u)
+    arrive_late = 0.4
+    out = ContinuousScheduler(cfix["eng"], rows=2, contention=IDEAL).run(
+        _requests(
+            cfix, [slow, fast],
+            sess_kw=[dict(fixed_level=0), {}],
+            arrivals=[0.0, arrive_late],
+        )
+    )
+    tl = out.timeline[1]
+    assert tl.admit_t == pytest.approx(arrive_late)
+    assert tl.queue_wait_s == pytest.approx(0.0)
+    solo = _mk_session(cfix).run(
+        "ctx", cfix["tokens"], NetworkModel(fast),
+        prior_throughput_gbps=float(fast.gbps[0]), start_t=arrive_late,
+    )
+    _assert_sessions_bit_identical(out.sessions[1], solo, "late arrival")
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_straggler_yields_row_and_resumes(cfix):
+    """A pinned-level session on a collapsing link holds the only row with
+    an in-flight fetch that blows its SLO; a tight-deadline arrival preempts
+    it (fetch cancelled, rows suspended), finishes fast, and the straggler
+    resumes and completes — both caches bit-exact vs. the fused=False
+    oracle of their realized plans."""
+    u = cfix["u"]
+    slow = BandwidthTrace.steps(0.1, [3.0 * u, 0.0005 * u])
+    fast = BandwidthTrace.constant(50 * u)
+    reqs = _requests(
+        cfix, [slow, fast],
+        sess_kw=[dict(fixed_level=0), dict(fixed_level=0)],
+        arrivals=[0.0, 0.3],
+    )
+    out = ContinuousScheduler(
+        cfix["eng"], rows=1, contention=IDEAL, preemption=PreemptionPolicy()
+    ).run(reqs)
+    assert out.n_preemptions == 1 and out.n_resumes == 1
+    t0, t1 = out.timeline
+    assert t0.preempt_ts == [pytest.approx(0.3)]
+    assert len(t0.resume_ts) == 1
+    # the tight arrival took the row and finished before the straggler
+    assert t1.admit_t == pytest.approx(0.3)
+    assert t1.finish_t < t0.finish_t
+    assert out.sessions[1].ttft_s < reqs[1].session.slo_s
+    # the straggler's cancelled fetch is recorded and was re-decided
+    assert len(out.sessions[0].timelines) == len(cfix["metas"])
+    for s in out.sessions:
+        assert int(s.caches.length[0]) == T_CTX
+        ref = _oracle(cfix, s)
+        for a, b in zip(_kv_np(s.caches), _kv_np(ref)):
+            assert np.array_equal(a, b), "preempted cache != oracle"
+
+
+def test_preemption_disabled_means_fifo_convoy(cfix):
+    """The same scenario without a PreemptionPolicy must convoy: the tight
+    arrival waits out the straggler's whole load and blows its SLO."""
+    u = cfix["u"]
+    slow = BandwidthTrace.steps(0.1, [3.0 * u, 0.0005 * u])
+    fast = BandwidthTrace.constant(50 * u)
+    out = ContinuousScheduler(cfix["eng"], rows=1, contention=IDEAL).run(
+        _requests(
+            cfix, [slow, fast],
+            sess_kw=[dict(fixed_level=0), dict(fixed_level=0)],
+            arrivals=[0.0, 0.3],
+        )
+    )
+    assert out.n_preemptions == 0
+    assert out.sessions[1].ttft_s > out.sessions[1].slo_s
+    assert out.timeline[1].admit_t == pytest.approx(out.timeline[0].finish_t)
+
+
+def test_preemption_respects_waiter_headroom(cfix):
+    """A waiter whose SLO will already have expired by the earliest instant
+    it could take the victim's row (the victim's straggling fetch starts
+    after the waiter's deadline) gains nothing; the default policy refuses
+    to thrash the straggler's row for it."""
+    u = cfix["u"]
+    sizes = [m.sizes[0] for m in cfix["metas"]]
+    # fast segment sized so chunks 0 and 1 (level 0) finish just inside it;
+    # chunk 2's fetch — the only one that can blow the victim's SLO — then
+    # starts at ~0.30, after the waiter's 0.05 + 0.1 = 0.15 deadline
+    rate_fast = (sizes[0] + sizes[1]) * 8.0 / 1e9 / 0.30
+    slow = BandwidthTrace.steps(0.31, [rate_fast, 0.0005 * u])
+    fast = BandwidthTrace.constant(50 * u)
+    out = ContinuousScheduler(
+        cfix["eng"], rows=1, contention=IDEAL, preemption=PreemptionPolicy()
+    ).run(
+        _requests(
+            cfix, [slow, fast],
+            sess_kw=[dict(fixed_level=0), dict(fixed_level=0, slo_s=0.1)],
+            arrivals=[0.0, 0.05],
+        )
+    )
+    assert out.n_preemptions == 0, "expired waiter must not preempt"
+    # the same waiter with headroom does preempt (control)
+    out2 = ContinuousScheduler(
+        cfix["eng"], rows=1, contention=IDEAL, preemption=PreemptionPolicy()
+    ).run(
+        _requests(
+            cfix, [slow, fast],
+            sess_kw=[dict(fixed_level=0), dict(fixed_level=0, slo_s=1.25)],
+            arrivals=[0.0, 0.05],
+        )
+    )
+    assert out2.n_preemptions == 1
+
+
+# ---------------------------------------------------------------------------
+# descriptive errors (row pool, resume/preempt misuse)
+# ---------------------------------------------------------------------------
+
+
+def test_row_pool_errors_name_request_and_state():
+    pool = RowPool(2)
+    pool.allocate("req0:ctx")
+    pool.allocate("req1:ctx")
+    with pytest.raises(RuntimeError, match=r"req2:ctx.*beyond row-pool "
+                                           r"capacity.*0/2 rows free"):
+        pool.allocate("req2:ctx")
+    with pytest.raises(RuntimeError, match=r"row 7.*req0:ctx.*not allocated"):
+        pool.release(7, "req0:ctx", 1.0)
+    with pytest.raises(RuntimeError, match=r"row 1.*req0:ctx.*owned by "
+                                           r"'req1:ctx'"):
+        pool.release(1, "req0:ctx", 1.0)
+    with pytest.raises(ValueError, match="at least one row"):
+        RowPool(0)
+
+
+def test_resume_and_preempt_misuse_raise(cfix):
+    u = cfix["u"]
+    trace = BandwidthTrace.constant(3 * u)
+    out = ContinuousScheduler(cfix["eng"], contention=IDEAL).run(
+        _requests(cfix, [trace], [dict(fixed_level=0)])
+    )
+    # reconstruct a finished task state via a fresh scheduler run's session
+    from repro.serving.session import SessionTask
+
+    task = SessionTask(
+        _mk_session(cfix, fixed_level=0), "ctx", cfix["tokens"],
+        NetworkModel(trace), label="req0:ctx",
+    )
+    with pytest.raises(RuntimeError, match=r"resuming request 'req0:ctx'.*"
+                                           r"not suspended"):
+        task.resume(0, 1.0)
+    while not task.done:
+        task.step()
+    with pytest.raises(RuntimeError, match=r"preempting request 'req0:ctx'.*"
+                                           r"already finished"):
+        task.suspend(1.0)
+    assert out.sessions[0].configs  # scheduler run above completed
+
+
+# ---------------------------------------------------------------------------
+# row-pool property test (hypothesis via tests/_hyp.py)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30)
+@given(seed=st.integers(0, 10**6), n_rows=st.integers(1, 8))
+def test_row_pool_never_double_allocates_or_leaks(seed, n_rows):
+    """Random admit/finish/preempt sequences: every allocation is unique and
+    in range, free + allocated always partitions the pool, a row freed by a
+    finish/preempt always comes back flagged dirty (needs reset), and
+    over-capacity admission raises."""
+    rng = np.random.default_rng(seed)
+    pool = RowPool(n_rows)
+    allocated = {}  # row -> owner
+    ever_released = set()
+    t = 0.0
+    next_req = 0
+    for _ in range(200):
+        t += float(rng.uniform(0.0, 1.0))
+        op = int(rng.integers(3))
+        if op == 0:  # admit
+            owner = f"req{next_req}:ctx"
+            if pool.n_free == 0:
+                with pytest.raises(RuntimeError, match="beyond row-pool"):
+                    pool.allocate(owner)
+                continue
+            row, free_since, dirty = pool.allocate(owner)
+            next_req += 1
+            assert 0 <= row < n_rows
+            assert row not in allocated, "double allocation"
+            assert free_since <= t
+            assert dirty == (row in ever_released), "dirty flag wrong"
+            allocated[row] = owner
+        elif allocated:  # finish and preempt both release the row
+            row = list(allocated)[int(rng.integers(len(allocated)))]
+            pool.release(row, allocated.pop(row), t)
+            ever_released.add(row)
+        assert pool.n_free == n_rows - len(allocated), "leaked rows"
+    # drain: everything comes back, and recycled rows read as dirty
+    for row in list(allocated):
+        pool.release(row, allocated.pop(row), t)
+        ever_released.add(row)
+    assert pool.n_free == n_rows
+    for i in range(n_rows):
+        row, _, dirty = pool.allocate(f"post{i}:ctx")
+        assert dirty == (row in ever_released)
+
+
+# ---------------------------------------------------------------------------
+# contention: separate TEXT factor + calibration parsing
+# ---------------------------------------------------------------------------
+
+
+def test_text_factor_interpolates_and_falls_back():
+    both = ContentionModel({1: 1.0, 4: 3.0}, text_factors={1: 1.0, 4: 2.0})
+    assert both.factor(4) == 3.0
+    assert both.text_factor(4) == 2.0
+    assert both.text_factor(1) == 1.0
+    assert both.text_factor(2) == pytest.approx(4.0 / 3.0)  # interpolated
+    decode_only = ContentionModel({1: 1.0, 4: 3.0})
+    assert decode_only.text_factor(4) == 3.0  # falls back to decode curve
+    empty = ContentionModel({})
+    assert empty.text_factor(5) == 5.0  # serialized fallback of the fallback
+
+
+def test_stacked_prefill_calibration_parses(tmp_path, monkeypatch):
+    from repro.streaming import calibration
+
+    path = tmp_path / "BENCH_codec.json"
+    path.write_text(json.dumps({
+        "host_backend": jax.default_backend(),
+        "fused": {"bytes_per_s": 1.0},
+        "stacked_prefill": {
+            "1": {"batched": {"tokens_per_s": 100.0}},
+            "4": {"batched": {"tokens_per_s": 250.0}},
+            "8": {"batched": {"tokens_per_s": 1600.0}},  # super-linear: clamp
+        },
+    }))
+    monkeypatch.setenv("CACHEGEN_BENCH_CODEC", str(path))
+    calibration.clear_calibration_cache()
+    try:
+        factors = calibration.measured_text_contention_factors()
+        assert factors == {1: 1.0, 4: pytest.approx(1.6), 8: 1.0}
+    finally:
+        calibration.clear_calibration_cache()
+
+
+def test_text_factor_steers_decisions_separately(cfix):
+    """With decode stacking expensive but TEXT stacking free, a loaded
+    engine must keep TEXT chunks it would shed under the decode-priced
+    model (the pre-split behavior)."""
+    u = cfix["u"]
+    mk = lambda: _mk_session(cfix)  # noqa: E731
+    trace = lambda: BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u])  # noqa: E731
+
+    def n_text(contention):
+        out = ConcurrentScheduler(cfix["eng"], contention=contention).run([
+            SessionRequest(mk(), "ctx", cfix["tokens"], NetworkModel(trace()),
+                           prior_throughput_gbps=1.0 * u)
+            for _ in range(4)
+        ])
+        return sum(1 for s in out.sessions for c in s.configs if c == TEXT)
+
+    priced_by_decode = ContentionModel({})  # serialized, TEXT falls back
+    text_free = ContentionModel({}, text_factors={1: 1.0, 8: 1.0})
+    assert n_text(text_free) > n_text(priced_by_decode), (
+        "a free TEXT curve must keep TEXT chunks the decode-priced model sheds"
+    )
+
+
+# ---------------------------------------------------------------------------
+# benchmark acceptance (separate CI job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_continuous_serving_bench_acceptance(tmp_path):
+    """Reduced benchmarks/continuous_serving.py run: continuous admission
+    beats closed waves on p95 TTFT at the higher arrival rate, and the
+    straggler mix actually exercises preemption + resume with complete
+    contexts.  All virtual-clock: deterministic per seed."""
+    import benchmarks.continuous_serving as cs
+
+    report = cs.run(out_path=str(tmp_path / "BENCH_serving.json"),
+                    n_requests=16, verbose=False)
+    acc = report["acceptance"]
+    assert acc["p95_improved_at_high_rate"] is True
+    assert acc["preemption_exercised"] is True
+    assert acc["preempted_contexts_complete"] is True
+    high = report["rates"][-1]
+    assert high["continuous"]["ttft_p95_s"] < high["wave"]["ttft_p95_s"]
+    assert high["continuous"]["peak_live_rows"] <= cs.ROWS
+    assert report["preemption"]["on"]["n_preemptions"] >= 1
+    assert report["preemption"]["on"]["n_resumes"] >= 1
