@@ -5,15 +5,49 @@ rANS streams are stored *packed* — only the valid words of every lane are
 concatenated — because the padded per-lane buffers used during encoding are
 not the wire representation.  ``unpack_stream`` re-pads for the vectorized
 decoder.
+
+Integrity (ISSUE 6): every :func:`pack`-ed blob carries an 8-byte trailer —
+a 4-byte magic plus the CRC32 of the msgpack payload — so a blob corrupted
+in storage or in transit is *detected* (:class:`IntegrityError`, a
+``ValueError`` the serving layer treats as a retryable fetch failure)
+instead of crashing the rANS decoder or silently materializing garbage KV.
+:func:`verify_checksum` is the O(blob) gate run at store read and again
+before decode; :func:`unpack` verifies by default.  Blobs without the
+trailer (foreign producers, pre-checksum writers) still parse — there is
+simply nothing to verify — and any msgpack-level parse failure is reported
+as an :class:`IntegrityError` too, since it is indistinguishable from
+corruption that happened to hit the framing bytes.
 """
 from __future__ import annotations
 
+import struct
+import zlib
 from typing import Dict, Tuple
 
 import msgpack
 import numpy as np
 
-__all__ = ["pack", "unpack", "peek_header", "pack_stream", "unpack_stream"]
+__all__ = [
+    "IntegrityError",
+    "has_checksum",
+    "pack",
+    "peek_header",
+    "pack_stream",
+    "unpack",
+    "unpack_stream",
+    "verify_checksum",
+]
+
+# trailer: 4-byte magic + CRC32 (big-endian) of the msgpack payload bytes
+_CRC_MAGIC = b"KVC1"
+_CRC_TAIL = struct.Struct(">I")
+_TRAILER_LEN = len(_CRC_MAGIC) + _CRC_TAIL.size
+
+
+class IntegrityError(ValueError):
+    """A packed chunk failed its checksum or could not be parsed — the
+    bytes were corrupted in storage or in transit (retryable, unlike a
+    plan/header mismatch which points at the wrong blob being returned)."""
 
 
 def _arr_to_wire(a: np.ndarray) -> dict:
@@ -30,21 +64,61 @@ def pack(header: dict, arrays: Dict[str, np.ndarray]) -> bytes:
         "h": header,
         "a": {name: _arr_to_wire(np.asarray(a)) for name, a in arrays.items()},
     }
-    return msgpack.packb(payload, use_bin_type=True)
+    body = msgpack.packb(payload, use_bin_type=True)
+    return body + _CRC_MAGIC + _CRC_TAIL.pack(zlib.crc32(body) & 0xFFFFFFFF)
 
 
-def unpack(blob: bytes) -> Tuple[dict, Dict[str, np.ndarray]]:
-    payload = msgpack.unpackb(blob, raw=True, strict_map_key=False)
-    header = {
-        k.decode() if isinstance(k, bytes) else k: v for k, v in payload[b"h"].items()
-    }
-    header = {
-        k: (v.decode() if isinstance(v, bytes) else v) for k, v in header.items()
-    }
-    arrays = {
-        (k.decode() if isinstance(k, bytes) else k): _arr_from_wire(v)
-        for k, v in payload[b"a"].items()
-    }
+def has_checksum(blob: bytes) -> bool:
+    """True if ``blob`` ends with this module's integrity trailer."""
+    return len(blob) >= _TRAILER_LEN and blob[-_TRAILER_LEN:-_CRC_TAIL.size] == _CRC_MAGIC
+
+
+def verify_checksum(blob: bytes) -> bool:
+    """Check the integrity trailer without parsing the payload.
+
+    Returns ``True`` when a trailer is present and the CRC matches, ``False``
+    when no trailer is present (legacy / foreign blob: nothing to verify).
+    Raises :class:`IntegrityError` on a mismatch.
+    """
+    if not has_checksum(blob):
+        return False
+    (expected,) = _CRC_TAIL.unpack(blob[-_CRC_TAIL.size:])
+    actual = zlib.crc32(blob[:-_TRAILER_LEN]) & 0xFFFFFFFF
+    if actual != expected:
+        raise IntegrityError(
+            f"chunk checksum mismatch: crc32 {actual:#010x} != stored "
+            f"{expected:#010x} over {len(blob) - _TRAILER_LEN} payload bytes"
+        )
+    return True
+
+
+def unpack(blob: bytes, *, verify: bool = True) -> Tuple[dict, Dict[str, np.ndarray]]:
+    if verify:
+        verify_checksum(blob)
+    body = blob[:-_TRAILER_LEN] if has_checksum(blob) else blob
+    try:
+        payload = msgpack.unpackb(body, raw=True, strict_map_key=False)
+        if not isinstance(payload, dict):
+            raise ValueError(f"top-level wire object is {type(payload).__name__}, not a map")
+        header = {
+            k.decode() if isinstance(k, bytes) else k: v
+            for k, v in payload[b"h"].items()
+        }
+        header = {
+            k: (v.decode() if isinstance(v, bytes) else v) for k, v in header.items()
+        }
+        arrays = {
+            (k.decode() if isinstance(k, bytes) else k): _arr_from_wire(v)
+            for k, v in payload[b"a"].items()
+        }
+    except IntegrityError:
+        raise
+    except Exception as e:
+        # a trailer-less blob whose framing bytes were hit by corruption
+        # fails here rather than at verify_checksum — same diagnosis
+        raise IntegrityError(
+            f"chunk payload is corrupt, truncated, or from a foreign producer: {e}"
+        ) from e
     return header, arrays
 
 

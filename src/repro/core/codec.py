@@ -56,6 +56,7 @@ __all__ = [
     "profile",
     "encode_chunk",
     "peek_chunk_header",
+    "verify_chunk",
     "decode_chunk",
     "decode_chunks",
     "decode_chunk_runs",
@@ -288,6 +289,18 @@ def peek_chunk_header(blob: bytes) -> dict:
     bitstream must fail loudly, not corrupt the cache silently.
     """
     return bitstream.peek_header(blob)
+
+
+def verify_chunk(blob: bytes) -> bool:
+    """Checksum-gate a chunk bitstream before decode (``bitstream.verify_checksum``).
+
+    Returns ``True`` if the blob carries a valid integrity trailer, ``False``
+    for legacy/foreign blobs without one; raises ``bitstream.IntegrityError``
+    on corruption.  The serving layer runs this at store read and again on
+    every fetched blob so corrupt bytes surface as a retryable failure
+    instead of a rANS crash or silent garbage KV.
+    """
+    return bitstream.verify_checksum(blob)
 
 
 def encode_chunk(

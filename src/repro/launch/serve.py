@@ -39,6 +39,16 @@ then measures a real link, so ``--check-sim`` is meaningless there.
 ``--hedge-after S`` issues a duplicate fetch for any chunk still in flight
 after S seconds; the loser is cancelled and its bytes are reported as
 duplicate overhead.
+
+``--fault-*`` injects seeded chaos into the fetch path (ISSUE 6):
+``--fault-drop/-stall/-corrupt`` perturb in-flight fetches (via
+:class:`~repro.streaming.faults.FaultyTransport` on sim/local, server-side
+on tcp), ``--fault-missing`` deletes store entries behind the readers'
+backs (:func:`~repro.streaming.faults.with_faulty_backend`).  ``--retry N``
+arms the session's :class:`~repro.streaming.transport.RetryPolicy`
+(bounded attempts, backoff charged to the virtual clock, degrade to
+coarser levels / TEXT unless ``--no-degrade``); without it, injected
+faults reproduce the legacy crash-through behavior.
 """
 from __future__ import annotations
 
@@ -126,6 +136,31 @@ def main() -> None:
                          "cancelled")
     ap.add_argument("--tcp-pace-gbps", type=float, default=0.2,
                     help="--transport tcp: server-side link pacing")
+    ap.add_argument("--fault-drop", type=float, default=0.0, metavar="P",
+                    help="probability a fetch attempt is dropped (link dies)")
+    ap.add_argument("--fault-stall", type=float, default=0.0, metavar="P",
+                    help="probability a fetch attempt stalls (Pareto tail)")
+    ap.add_argument("--fault-corrupt", type=float, default=0.0, metavar="P",
+                    help="probability a fetched payload is bit-flipped")
+    ap.add_argument("--fault-missing", type=float, default=0.0, metavar="P",
+                    help="probability a (chunk, level) entry is missing "
+                         "from the store")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault plan")
+    ap.add_argument("--fault-stall-scale", type=float, default=0.2,
+                    metavar="S", help="injected stall scale (seconds)")
+    ap.add_argument("--retry", type=int, default=0, metavar="N",
+                    help="fault tolerance: total fetch attempts per chunk "
+                         "level (0 = legacy crash-through on any failure)")
+    ap.add_argument("--retry-backoff", type=float, default=0.02, metavar="S",
+                    help="--retry: initial exponential backoff (seconds)")
+    ap.add_argument("--retry-timeout", type=float, default=None, metavar="S",
+                    help="--retry: per-attempt timeout (virtual seconds on "
+                         "sim, wall seconds on local/tcp)")
+    ap.add_argument("--no-degrade", action="store_true",
+                    help="--retry: fail the session once retries are "
+                         "exhausted instead of falling back to coarser "
+                         "levels / TEXT recompute")
     args = ap.parse_args()
     if args.concurrency < 1:
         raise SystemExit("--concurrency must be >= 1")
@@ -181,17 +216,73 @@ def main() -> None:
 
     # fetch path: sim (default, per-request trace pacing), local, or a real
     # in-process socket server with paced sends
-    from repro.streaming import LocalTransport, TcpStoreServer, TcpTransport
+    from repro.streaming import (
+        FaultPlan,
+        FaultyTransport,
+        LocalTransport,
+        RetryPolicy,
+        SimTransport,
+        TcpStoreServer,
+        TcpTransport,
+        with_faulty_backend,
+    )
+
+    fault_plan = None
+    if args.fault_drop or args.fault_stall or args.fault_corrupt or args.fault_missing:
+        fault_plan = FaultPlan(
+            seed=args.fault_seed,
+            drop_p=args.fault_drop,
+            stall_p=args.fault_stall,
+            corrupt_p=args.fault_corrupt,
+            missing_p=args.fault_missing,
+            stall_scale_s=args.fault_stall_scale,
+        )
+        print(f"[serve] fault plan armed: {fault_plan}")
+    # storage faults live behind the readers; in-flight faults wrap the
+    # transport (sim/local) or run server-side (tcp)
+    serve_store = (
+        with_faulty_backend(store, fault_plan)
+        if fault_plan is not None and args.fault_missing > 0
+        else store
+    )
+    inflight_faults = fault_plan is not None and bool(
+        args.fault_drop or args.fault_stall or args.fault_corrupt
+    )
 
     tcp_server = None
-    transport = None  # sim: SessionTask builds SimTransport per request
+    transport = None  # sim: a SimTransport is built per request below
     if args.transport == "local":
-        transport = LocalTransport(store)
+        transport = LocalTransport(serve_store)
+        if inflight_faults:
+            transport = FaultyTransport(transport, fault_plan)
     elif args.transport == "tcp":
-        tcp_server = TcpStoreServer(store, pace_gbps=args.tcp_pace_gbps)
+        tcp_server = TcpStoreServer(
+            serve_store, pace_gbps=args.tcp_pace_gbps,
+            fault_plan=fault_plan if inflight_faults else None,
+        )
         transport = TcpTransport.for_server(tcp_server)
         print(f"[serve] tcp store server on {tcp_server.address} "
               f"paced at {args.tcp_pace_gbps} Gbps")
+
+    def mk_transport(net):
+        """Per-request fetch path with the fault plan applied."""
+        if transport is not None:
+            return transport
+        if serve_store is store and not inflight_faults:
+            return None  # default: SessionTask builds a clean SimTransport
+        t = SimTransport(serve_store, net)
+        return FaultyTransport(t, fault_plan) if inflight_faults else t
+
+    retry_policy = None
+    if args.retry >= 1:
+        retry_policy = RetryPolicy(
+            max_attempts=args.retry,
+            backoff_s=args.retry_backoff,
+            timeout_s=None if args.transport != "sim" else args.retry_timeout,
+            wall_timeout_s=args.retry_timeout if args.transport != "sim" else None,
+            degrade=not args.no_degrade,
+        )
+        print(f"[serve] retry policy armed: {retry_policy}")
 
     recompute_s = lambda t, p: 0.02 * t / 64  # noqa: E731
     session = ServeSession(
@@ -205,11 +296,37 @@ def main() -> None:
         max_run_tokens=args.max_run_tokens,
         hedge_after_s=args.hedge_after,
         transport=transport,
+        retry_policy=retry_policy,
     )
+
+    def close_server():
+        if tcp_server is None:
+            return
+        tcp_server.close()
+        if fault_plan is not None:
+            print(
+                f"[serve] tcp server: conns={tcp_server.n_connections} "
+                f"dropped={tcp_server.n_dropped_connections} "
+                f"malformed={tcp_server.n_malformed} "
+                f"injected={tcp_server.n_injected_faults}"
+            )
 
     names = {TEXT: "TEXT"}
 
     def describe(r, res, extra=""):
+        fault = ""
+        if retry_policy is not None or fault_plan is not None:
+            fault = (
+                f" retries={res.n_retries} degrades={res.n_degrades} "
+                f"faults={res.fault_counts}"
+            )
+        if res.failed:
+            print(
+                f"[req {r}] FAILED ({res.failure}) "
+                f"configs={[names.get(c, f'L{c}') for c in res.configs]}"
+                + fault + extra
+            )
+            return
         first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
         gen = engine.generate_with_kv(res.caches, first, args.gen)
         hedge = (
@@ -220,7 +337,7 @@ def main() -> None:
             f"[req {r}] configs={[names.get(c, f'L{c}') for c in res.configs]} "
             f"ttft={res.ttft_s*1e3:.1f} ms ok={not res.slo_violated} "
             f"runs={res.n_runs} wall_decode={res.wall_decode_s*1e3:.1f} ms "
-            f"tokens={gen[0].tolist()}" + hedge + extra
+            f"tokens={gen[0].tolist()}" + hedge + fault + extra
         )
 
     def check_sim(res, trace, prior):
@@ -254,13 +371,14 @@ def main() -> None:
                 if args.preempt else None
             ),
         )
+        nets = [NetworkModel(tr, rtt_s=0.002) for tr in traces]
         out = scheduler.run([
             SessionRequest(
-                session, "ctx", tokens, NetworkModel(tr, rtt_s=0.002),
+                session, "ctx", tokens, net,
                 prior_throughput_gbps=float(tr.gbps[0]), start_t=arr,
-                transport=transport,
+                transport=mk_transport(net),
             )
-            for tr, arr in zip(traces, arrivals)
+            for tr, net, arr in zip(traces, nets, arrivals)
         ])
         for r, (res, tl) in enumerate(zip(out.sessions, out.timeline)):
             extra = (
@@ -275,25 +393,26 @@ def main() -> None:
             f"p95={p(0.95)*1e3:.1f} ms preemptions={out.n_preemptions} "
             f"resumes={out.n_resumes} rounds={out.n_rounds} "
             f"decode_batches={out.n_decode_batches} "
-            f"peak_rows={max(n for _, n in out.occupancy)}"
+            f"peak_rows={max(n for _, n in out.occupancy)} "
+            f"failed={out.n_failed}"
         )
-        if tcp_server is not None:
-            tcp_server.close()
+        close_server()
         return
 
     if args.concurrency == 1:
         for r in range(args.requests):
             trace = BandwidthTrace.sampled(rng, 6, 0.05, 0.05, 2.0)
             prior = float(trace.gbps[0])
+            net = NetworkModel(trace, rtt_s=0.002)
             res = session.run(
                 "ctx",
                 tokens,
-                NetworkModel(trace, rtt_s=0.002),
+                net,
                 prior_throughput_gbps=prior,
+                transport=mk_transport(net),
             )
             describe(r, res, check_sim(res, trace, prior))
-        if tcp_server is not None:
-            tcp_server.close()
+        close_server()
         return
 
     from repro.serving.scheduler import ConcurrentScheduler, SessionRequest
@@ -315,24 +434,24 @@ def main() -> None:
     while served < args.requests:
         wave = min(args.concurrency, args.requests - served)
         traces = [BandwidthTrace.sampled(rng, 6, 0.05, 0.05, 2.0) for _ in range(wave)]
+        nets = [NetworkModel(tr, rtt_s=0.002) for tr in traces]
         out = scheduler.run([
             SessionRequest(
-                session, "ctx", tokens, NetworkModel(tr, rtt_s=0.002),
+                session, "ctx", tokens, net,
                 prior_throughput_gbps=float(tr.gbps[0]),
-                transport=transport,
+                transport=mk_transport(net),
             )
-            for tr in traces
+            for tr, net in zip(traces, nets)
         ])
         for i, res in enumerate(out.sessions):
             describe(served + i, res, check_sim(res, traces[i], float(traces[i].gbps[0])))
         print(
             f"[wave of {wave}] decode_batches={out.n_decode_batches} "
             f"text_batches={out.n_text_batches} runs={out.n_runs} "
-            f"wall_total={out.wall_total_s*1e3:.1f} ms"
+            f"wall_total={out.wall_total_s*1e3:.1f} ms failed={out.n_failed}"
         )
         served += wave
-    if tcp_server is not None:
-        tcp_server.close()
+    close_server()
 
 
 if __name__ == "__main__":

@@ -63,6 +63,20 @@ admission immediately inflates every other session's projected compute —
 including the remaining-recompute estimate inside ``choose_config`` — and a
 completion immediately relaxes it.
 
+Failure isolation (ISSUE 6).  When a request's session carries a
+``retry_policy``, every fetch fault is absorbed *inside* its own
+``SessionTask`` — classified, retried with backoff charged to that task's
+clock, degraded to coarser levels / TEXT — and a task whose chunk fails
+past all fallbacks simply reads ``done`` with ``status == "failed"``: its
+final step emits only the flushed valid prefix, so nothing corrupt ever
+enters a cross-request decode/insert batch; the continuous loop's normal
+completion handling then releases its row to waiters like any other
+finish.  Co-scheduled tenants see at most the contention relaxing.  The
+per-result failure status and retry/degrade/fallback counters surface in
+``sessions[i]`` and aggregate as ``n_failed``.  Without a retry policy the
+legacy contract stands: a fetch error raises out of ``run()`` (pinned by
+tests), taking the wave with it — opt in to isolation per session.
+
 Differential invariants (held by tests/test_continuous.py): with every
 arrival at t=0, preemption disabled and the pool sized to the request count
 (``rows=None``, the default), the continuous loop degenerates to exactly
@@ -155,6 +169,12 @@ class SchedulerResult:
     n_decode_batches: int
     n_text_batches: int
     n_runs: int
+
+    @property
+    def n_failed(self) -> int:
+        """Requests that finished with a failure status (isolated, not
+        raised): their rows were recycled and no batch was poisoned."""
+        return sum(1 for s in self.sessions if s.status != "ok")
 
 
 # ---------------------------------------------------------------------------
@@ -557,6 +577,12 @@ class ContinuousResult:
     n_runs: int
     n_preemptions: int
     n_resumes: int
+
+    @property
+    def n_failed(self) -> int:
+        """Requests that finished with a failure status (isolated, not
+        raised): their rows were recycled and no batch was poisoned."""
+        return sum(1 for s in self.sessions if s.status != "ok")
 
 
 class ContinuousScheduler:

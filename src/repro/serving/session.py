@@ -61,6 +61,20 @@ offset, so all earlier chunks must have landed; the task asserts contiguous
 segment coverage with a host-side token counter (reading ``caches.length``
 back would sync the device per segment).
 
+Fault tolerance (ISSUE 6)
+-------------------------
+With a ``retry_policy`` (:class:`~repro.streaming.transport.RetryPolicy`)
+the task survives injected and real fetch faults: every resolved blob is
+checksum-gated before decode, failed attempts are classified
+(``transport.classify_failure``), retried with exponential backoff charged
+to the ``StreamClock`` (Algorithm-1 re-planning sees the lost time), then
+the chunk is re-decided with the failed level and everything finer
+excluded — coarser levels, ultimately TEXT recompute — and only when every
+configuration is exhausted does the task finish with a clean
+``SessionResult.status == "failed"`` carrying the realized prefix.  Without
+a policy the legacy behavior is unchanged: the first fetch error raises
+straight through ``run()``.
+
 The session emits :class:`~repro.streaming.pipeline.ChunkTimeline`-
 compatible records (``SessionResult.stream_result()``), so everything that
 consumes simulator output — SLO accounting, figure scripts — reads session
@@ -81,12 +95,17 @@ import numpy as np
 from repro.core import codec as kvcodec
 from repro.models.lm import Caches
 from repro.serving.engine import Engine
-from repro.streaming.adaptation import TEXT, make_policy
+from repro.streaming.adaptation import TEXT, NoFeasibleConfigError, make_policy
 from repro.streaming.calibration import measured_decode_bytes_per_s
 from repro.streaming.network import NetworkModel
 from repro.streaming.pipeline import ChunkTimeline, StreamClock, StreamResult
 from repro.streaming.streamer import CacheGenStreamer, PlanSegment, RunSegmenter
-from repro.streaming.transport import SimTransport, Transport
+from repro.streaming.transport import (
+    RetryPolicy,
+    SimTransport,
+    Transport,
+    classify_failure,
+)
 
 __all__ = [
     "ServeSession",
@@ -120,6 +139,19 @@ class SessionResult:
     wall_recompute_s: float
     wall_total_s: float
     n_runs: int
+    # fault tolerance (ISSUE 6): "ok" or "failed"; a failed load's caches
+    # hold only the realized prefix and ttft_s is +inf (an SLO miss)
+    status: str = "ok"
+    failure: Optional[str] = None
+    n_retries: int = 0  # failed attempts that were retried
+    n_degrades: int = 0  # level re-decisions forced by exhausted retries
+    n_fault_text: int = 0  # chunks that fell all the way back to TEXT
+    n_failed_attempts: int = 0  # every fetch attempt that did not deliver
+    fault_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def failed(self) -> bool:
+        return self.status != "ok"
 
     @property
     def slo_violated(self) -> bool:
@@ -193,7 +225,13 @@ class TextWork:
 
 
 def validate_blob(blob: bytes, meta, level: int) -> None:
-    """Reject a fetched bitstream that does not match its plan entry."""
+    """Reject a fetched bitstream that does not match its plan entry.
+
+    The checksum gate runs first: a corrupted blob raises
+    ``bitstream.IntegrityError`` here, *before* any header parse or decode
+    touches the bytes (corruption is detected, never interpreted).
+    """
+    kvcodec.verify_chunk(blob)
     h = kvcodec.peek_chunk_header(blob)
     # chunk_idx is present on store-written blobs; standalone encodes
     # (no identity known) skip that part of the check.  Missing v1 keys
@@ -308,10 +346,28 @@ class SessionTask:
         self.n_preemptions = 0
         self.n_resumes = 0
         self.cancelled_fetches: List[tuple] = []  # (chunk_idx, config)
+        # fault-tolerance bookkeeping (ISSUE 6; active when the session has
+        # a retry_policy — without one the legacy raise-through path runs)
+        self._failure: Optional[str] = None
+        self._banned: set = set()  # configs excluded for the current chunk
+        self._attempt = 0  # attempts at the current chunk's current config
+        self._chunk_retries = 0  # retries across the current chunk's configs
+        self._issue_wall: Optional[float] = None
+        self.n_retries = 0
+        self.n_degrades = 0
+        self.n_fault_text = 0
+        self.n_failed_attempts = 0
+        self.fault_counts: Dict[str, int] = {}
 
     @property
     def done(self) -> bool:
+        if self._failure is not None:
+            return True
         return self._i >= len(self.metas) and self._pending is None
+
+    @property
+    def failed(self) -> bool:
+        return self._failure is not None
 
     @property
     def fetch_ready(self) -> bool:
@@ -427,6 +483,10 @@ class SessionTask:
         else:
             segs = self.segmenter.push(m, config, blob)
         self._i += 1
+        # per-chunk fault state resets once the chunk lands
+        self._banned.clear()
+        self._attempt = 0
+        self._chunk_retries = 0
         if self._i == len(self.metas):
             segs = segs + self.segmenter.flush()
         return [self._to_work(s) for s in segs]
@@ -444,21 +504,37 @@ class SessionTask:
                 f"stepping request {self.label!r}: suspended at "
                 f"t={self.suspended_at:.6f}; resume() it onto a row first"
             )
+        policy = self.session.retry_policy
         if self._pending is not None:
             handle, m, config, nbytes, scale = self._pending
-            self._pending = None
-            res = handle.result()
-            if self.session.validate_blobs:
-                validate_blob(res.blobs[0], m, config)
-            self.timelines.append(
-                self.clock.account(m, config, nbytes, res, scale)
+            if policy is None:
+                # legacy path: any fetch failure raises straight through
+                self._pending = None
+                res = handle.result()
+                if self.session.validate_blobs:
+                    validate_blob(res.blobs[0], m, config)
+                self.timelines.append(
+                    self.clock.account(m, config, nbytes, res, scale)
+                )
+                return self._advance(m, config, res.blobs[0])
+            return self._resolve_with_policy(
+                policy, handle, m, config, nbytes, scale
             )
-            return self._advance(m, config, res.blobs[0])
         if self.done:
             return []
         i = self._i
         m = self.metas[i]
-        config, nbytes, scale = self.clock.decide(self.metas, i)
+        if policy is not None and self._banned:
+            try:
+                config, nbytes, scale = self.clock.decide(
+                    self.metas, i, exclude=self._banned
+                )
+            except NoFeasibleConfigError as e:
+                return self._fail(e)
+            if config == TEXT:
+                self.n_fault_text += 1
+        else:
+            config, nbytes, scale = self.clock.decide(self.metas, i)
         if config == TEXT:
             # text is already local — its transfer is modeled, not fetched
             outcome = self.clock.virtual_fetch(nbytes, m.chunk_idx)
@@ -466,6 +542,10 @@ class SessionTask:
                 self.clock.account(m, config, nbytes, outcome, scale)
             )
             return self._advance(m, TEXT, None)
+        self._issue_fetch(m, config, nbytes, scale)
+        return []
+
+    def _issue_fetch(self, m, config: int, nbytes: float, scale: float) -> None:
         handle = self.transport.fetch_run(
             self.context_id,
             [(m.chunk_idx, config)],
@@ -473,7 +553,127 @@ class SessionTask:
             hedge_after_s=self.session.hedge_after_s,
         )
         self._pending = (handle, m, config, nbytes, scale)
+        if self.session.retry_policy is not None:
+            self._issue_wall = time.perf_counter()
+
+    # -- fault-tolerant resolve (retry_policy set) -------------------------
+
+    def _resolve_with_policy(
+        self, policy: RetryPolicy, handle, m, config, nbytes, scale
+    ) -> List[object]:
+        realtime = bool(getattr(self.transport, "realtime", False))
+        timeout = policy.wall_timeout_s if realtime else None
+        try:
+            res = handle.result(timeout=timeout)
+        except Exception as e:
+            return self._on_fetch_failure(e, handle, m, config, nbytes, scale)
+        try:
+            # checksum first (corruption is detected, never interpreted),
+            # then the plan match — even with validate_blobs off, corrupt
+            # bytes must not reach the rANS decoder
+            kvcodec.verify_chunk(res.blobs[0])
+            if self.session.validate_blobs:
+                validate_blob(res.blobs[0], m, config)
+        except ValueError as e:
+            return self._on_fetch_failure(
+                e, handle, m, config, nbytes, scale, res=res
+            )
+        if (
+            policy.timeout_s is not None
+            and not realtime
+            and res.end_t - res.start_t > policy.timeout_s
+        ):
+            # virtual-clock stall past the attempt budget: the client would
+            # have given up timeout_s in, not waited out the whole stall
+            return self._on_fetch_failure(
+                TimeoutError(
+                    f"fetch of chunk {m.chunk_idx} level {config} took "
+                    f"{res.end_t - res.start_t:.3f}s virtual "
+                    f"(> timeout {policy.timeout_s}s)"
+                ),
+                handle, m, config, nbytes, scale, res=res,
+            )
+        self._pending = None
+        tl = self.clock.account(m, config, nbytes, res, scale)
+        tl.n_retries = self._chunk_retries
+        tl.fault_fallback = bool(self._banned)
+        self.timelines.append(tl)
+        return self._advance(m, config, res.blobs[0])
+
+    def _on_fetch_failure(
+        self, err, handle, m, config, nbytes, scale, *, res=None
+    ) -> List[object]:
+        """Classify a failed attempt; retry, degrade, or fail the session."""
+        policy = self.session.retry_policy
+        kind = classify_failure(err)
+        if kind == "fatal":
+            raise err  # programming error — never masked by retries
+        self._pending = None
+        if kind == "timeout" and not handle.done():
+            handle.cancel()  # the stalled attempt keeps no claim on the link
+        self.n_failed_attempts += 1
+        self.fault_counts[kind] = self.fault_counts.get(kind, 0) + 1
+        self._attempt += 1
+
+        # detection latency on this task's clock: wall-derived on realtime
+        # transports, the timeout budget for a timed-out virtual attempt,
+        # else the transport-reported failure instant
+        if kind == "timeout" and policy.timeout_s is not None and res is not None:
+            detect_s = policy.timeout_s
+        elif self._issue_wall is not None and bool(
+            getattr(self.transport, "realtime", False)
+        ):
+            detect_s = max(time.perf_counter() - self._issue_wall, 0.0)
+        else:
+            fail_t = getattr(err, "fail_t", None)
+            if fail_t is None and res is not None:
+                fail_t = res.end_t
+            detect_s = (
+                max(float(fail_t) - self.clock.fetch_t, 0.0)
+                if fail_t is not None
+                else 0.0
+            )
+
+        # "missing" is permanent at this level — retrying the same key
+        # cannot succeed, go straight to the degrade ladder
+        if kind != "missing" and self._attempt < policy.max_attempts:
+            backoff = policy.backoff(self._attempt)
+            self.clock.charge_failure(detect_s + backoff)
+            if getattr(self.transport, "realtime", False) and backoff > 0:
+                time.sleep(min(backoff, 1.0))  # tcp: reconnect with backoff
+            self.n_retries += 1
+            self._chunk_retries += 1
+            self._issue_fetch(m, config, nbytes, scale)
+            return []
+
+        self.clock.charge_failure(detect_s)
+        if not policy.degrade:
+            return self._fail(err)
+        # degrade: ban the failed level and everything finer (a coarser
+        # level is a different stored blob and a smaller transfer; TEXT is
+        # fetch-free and never banned here) and let Algorithm 1 re-decide
+        order = list(self.clock.policy.levels_quality_order)
+        if config in order:
+            self._banned.update(order[: order.index(config) + 1])
+        else:
+            self._banned.add(config)
+        self._attempt = 0
+        self.n_degrades += 1
         return []
+
+    def _fail(self, err) -> List[object]:
+        """Terminal failure: record it, flush the segmenter, and emit the
+        valid realized prefix (the schedulers then release this task's row
+        without poisoning any batch)."""
+        kind = (
+            "exhausted"
+            if isinstance(err, NoFeasibleConfigError)
+            else classify_failure(err)
+        )
+        self._failure = f"{kind}: {err}"
+        self._pending = None
+        segs = self.segmenter.flush()
+        return [self._to_work(s) for s in segs]
 
     def _to_work(self, seg: PlanSegment):
         # positional bookkeeping: every segment must start exactly where
@@ -514,13 +714,26 @@ class SessionTask:
         return SessionResult(
             timelines=list(self.timelines),
             configs=[t.config for t in self.timelines],
-            ttft_s=self.clock.ttft_s(self.timelines, self.session.final_step_s),
+            # a failed load never produced a first token: ttft is +inf, so
+            # failures always count as SLO misses downstream
+            ttft_s=(
+                float("inf")
+                if self.failed
+                else self.clock.ttft_s(self.timelines, self.session.final_step_s)
+            ),
             slo_s=self.session.slo_s,
             caches=caches,
             wall_decode_s=wall_decode_s,
             wall_recompute_s=wall_recompute_s,
             wall_total_s=wall_total_s,
             n_runs=n_runs,
+            status="failed" if self.failed else "ok",
+            failure=self._failure,
+            n_retries=self.n_retries,
+            n_degrades=self.n_degrades,
+            n_fault_text=self.n_fault_text,
+            n_failed_attempts=self.n_failed_attempts,
+            fault_counts=dict(self.fault_counts),
         )
 
 
@@ -552,6 +765,7 @@ class ServeSession:
         max_run_tokens: Optional[int] = None,
         validate_blobs: bool = True,
         transport: Optional[Transport] = None,
+        retry_policy: Optional[RetryPolicy] = None,
     ):
         self.streamer = streamer
         self.engine = engine
@@ -574,6 +788,12 @@ class ServeSession:
         self.final_step_s = final_step_s
         self.max_run_tokens = max_run_tokens
         self.validate_blobs = validate_blobs
+        # None -> legacy behavior: any fetch failure raises straight through
+        # the caller's run loop (pinned by tests).  A RetryPolicy arms the
+        # full ISSUE-6 machinery: classify -> bounded retries with backoff
+        # charged to the StreamClock -> degrade to coarser levels / TEXT ->
+        # clean failure status, never an uncaught exception.
+        self.retry_policy = retry_policy
 
     # ------------------------------------------------------------------
 

@@ -1,5 +1,17 @@
-from repro.streaming.adaptation import TEXT, AdaptationPolicy, make_policy  # noqa: F401
+from repro.streaming.adaptation import (  # noqa: F401
+    TEXT,
+    AdaptationPolicy,
+    NoFeasibleConfigError,
+    make_policy,
+)
 from repro.streaming.calibration import measured_decode_bytes_per_s  # noqa: F401
+from repro.streaming.faults import (  # noqa: F401
+    Fault,
+    FaultPlan,
+    FaultyBackend,
+    FaultyTransport,
+    with_faulty_backend,
+)
 from repro.streaming.network import (  # noqa: F401
     BandwidthTrace,
     FetchOutcome,
@@ -19,12 +31,15 @@ from repro.streaming.streamer import (  # noqa: F401
     segment_plan,
 )
 from repro.streaming.transport import (  # noqa: F401
+    FetchError,
     FetchHandle,
     FetchResult,
     LocalTransport,
+    RetryPolicy,
     SimTransport,
     TcpStoreServer,
     TcpTransport,
     Transport,
     as_completed,
+    classify_failure,
 )

@@ -9,21 +9,32 @@ chunks) still meets the TTFT SLO.
 Quality ordering (least loss first): TEXT (no loss, but costs GPU prefill
 compute) > level 0 (lossless-after-8bit) > level 1 > ... > level n (coarsest).
 If nothing fits the SLO, the smallest representation is chosen (best effort).
+
+Failure fallback (ISSUE 6): the serving layer generalizes §C.1's bandwidth
+fallback into a *failure* fallback by re-deciding a chunk with the
+configurations that already failed (and everything finer) ``exclude``-d.
+When every candidate is excluded there is nothing left to try —
+:class:`NoFeasibleConfigError` — and the session reports a clean failure.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Collection, Dict, List, Optional, Sequence
 
 __all__ = [
     "StreamConfig",
     "TEXT",
+    "NoFeasibleConfigError",
     "choose_config",
     "AdaptationPolicy",
     "make_policy",
 ]
 
 TEXT = -1  # sentinel streaming configuration: send text + recompute
+
+
+class NoFeasibleConfigError(RuntimeError):
+    """Every streaming configuration (all levels and TEXT) is excluded."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,17 +62,30 @@ def choose_config(
     time_left_s: float,
     levels_quality_order: Sequence[int],
     allow_text: bool = True,
+    exclude: Collection[int] = (),
 ) -> StreamConfig:
-    """Algorithm 1 step: pick the best-quality feasible configuration."""
+    """Algorithm 1 step: pick the best-quality feasible configuration.
+
+    ``exclude`` removes configurations (levels or TEXT) that already failed
+    past their retry budget for this chunk — the failure-fallback ladder.
+    """
     candidates: List[StreamConfig] = []
-    if allow_text:
+    if allow_text and TEXT not in exclude:
         proj = _projected_delay(
             remaining_text_bytes, throughput_gbps, remaining_recompute_s
         )
         candidates.append(StreamConfig(TEXT, proj))
     for lvl in levels_quality_order:
+        if lvl in exclude:
+            continue
         proj = _projected_delay(remaining_sizes[lvl], throughput_gbps)
         candidates.append(StreamConfig(lvl, proj))
+    if not candidates:
+        raise NoFeasibleConfigError(
+            f"all streaming configurations excluded "
+            f"(levels {list(levels_quality_order)}, allow_text={allow_text}, "
+            f"exclude={sorted(exclude)})"
+        )
     for c in candidates:  # quality order: first feasible wins
         if c.projected_s <= time_left_s:
             return c
@@ -92,9 +116,25 @@ class AdaptationPolicy:
         remaining_sizes: Dict[int, float],
         remaining_text_bytes: float,
         remaining_recompute_s: float,
+        exclude: Collection[int] = (),
     ) -> StreamConfig:
         if self._throughput is None:
-            return StreamConfig(self.default_level, float("nan"))
+            # no bandwidth estimate yet: default level, else the finest
+            # non-excluded level, else TEXT — quality order still applies
+            if not exclude:
+                return StreamConfig(self.default_level, float("nan"))
+            if self.default_level not in exclude:
+                return StreamConfig(self.default_level, float("nan"))
+            for lvl in self.levels_quality_order:
+                if lvl not in exclude:
+                    return StreamConfig(lvl, float("nan"))
+            if self.allow_text and TEXT not in exclude:
+                return StreamConfig(TEXT, float("nan"))
+            raise NoFeasibleConfigError(
+                f"all streaming configurations excluded "
+                f"(levels {list(self.levels_quality_order)}, "
+                f"allow_text={self.allow_text}, exclude={sorted(exclude)})"
+            )
         return choose_config(
             remaining_sizes=remaining_sizes,
             remaining_text_bytes=remaining_text_bytes,
@@ -103,6 +143,7 @@ class AdaptationPolicy:
             time_left_s=self.slo_s - elapsed_s,
             levels_quality_order=self.levels_quality_order,
             allow_text=self.allow_text,
+            exclude=exclude,
         )
 
     def observe_throughput(self, gbps: float) -> None:

@@ -153,6 +153,8 @@ class ChunkTimeline:
     compute_end: float
     hedged: bool = False
     duplicate_bytes: float = 0.0  # bytes the cancelled hedge loser moved
+    n_retries: int = 0  # failed fetch attempts retried before this one landed
+    fault_fallback: bool = False  # config was re-decided after fetch failures
 
 
 @dataclasses.dataclass
@@ -235,8 +237,11 @@ class StreamClock:
         self.compute_t = self.start_t  # accelerator busy-until
         self.prefix_tokens = 0
 
-    def decide(self, metas: List[ChunkMeta], i: int) -> tuple:
+    def decide(self, metas: List[ChunkMeta], i: int, exclude=()) -> tuple:
         """Algorithm 1 choice for chunk ``i`` at the current virtual instant.
+
+        ``exclude`` removes configurations that already failed past their
+        retry budget for this chunk (the failure-fallback ladder, ISSUE 6).
 
         Returns ``(config, nbytes, scale)``; ``scale`` is the contention
         factor sampled *now* (decision time) for the chosen config's compute
@@ -256,9 +261,17 @@ class StreamClock:
             remaining_sizes=remaining_sizes,
             remaining_text_bytes=remaining_text,
             remaining_recompute_s=rem_recompute * tscale,
+            exclude=exclude,
         )
         nbytes = float(m.text_bytes if cfg.config == TEXT else m.sizes[cfg.config])
         return cfg.config, nbytes, (tscale if cfg.config == TEXT else scale)
+
+    def charge_failure(self, lost_s: float) -> None:
+        """Advance the network clock past a failed fetch attempt plus its
+        retry backoff, *without* observing throughput — the next Algorithm-1
+        decision then sees the lost time in ``elapsed_s`` and can re-plan
+        (e.g. pick a coarser level to still make the SLO)."""
+        self.fetch_t += max(float(lost_s), 0.0)
 
     def virtual_fetch(self, nbytes: float, chunk_idx: int) -> FetchOutcome:
         """The decided chunk's fetch, resolved purely on the virtual clock

@@ -86,6 +86,10 @@ class StorageBackend(Protocol):
     def contains(self, context_id: str, chunk_idx: int, level: int) -> bool:
         ...
 
+    def delete(self, context_id: str, chunk_idx: int, level: int) -> bool:
+        """Remove one entry; True if it existed (no error when absent)."""
+        ...
+
 
 class MemoryBackend:
     """In-process dict backend — the default."""
@@ -104,6 +108,9 @@ class MemoryBackend:
 
     def contains(self, context_id: str, chunk_idx: int, level: int) -> bool:
         return (context_id, chunk_idx, level) in self._mem
+
+    def delete(self, context_id: str, chunk_idx: int, level: int) -> bool:
+        return self._mem.pop((context_id, chunk_idx, level), None) is not None
 
 
 class DirectoryBackend:
@@ -132,6 +139,13 @@ class DirectoryBackend:
 
     def contains(self, context_id: str, chunk_idx: int, level: int) -> bool:
         return os.path.exists(self._path(context_id, chunk_idx, level))
+
+    def delete(self, context_id: str, chunk_idx: int, level: int) -> bool:
+        try:
+            os.remove(self._path(context_id, chunk_idx, level))
+            return True
+        except FileNotFoundError:
+            return False
 
 
 class KVStore:
@@ -212,8 +226,26 @@ class KVStore:
 
     def get_kv(self, context_id: str, chunk_idx: int, level: int) -> bytes:
         """Blob for one (chunk, level); raises a descriptive ``KeyError``
-        naming context/chunk/level when missing (either backend)."""
-        return self.backend.get(context_id, chunk_idx, level)
+        naming context/chunk/level when missing (either backend), and a
+        ``bitstream.IntegrityError`` naming the same when the blob's
+        checksum trailer does not match — corruption at rest is caught at
+        the store boundary, before any bytes cross a link."""
+        blob = self.backend.get(context_id, chunk_idx, level)
+        try:
+            kvcodec.verify_chunk(blob)
+        except ValueError as e:  # IntegrityError is a ValueError
+            raise type(e)(
+                f"stored bitstream for context {context_id!r} chunk "
+                f"{chunk_idx} level {level} failed integrity check: {e}"
+            ) from e
+        return blob
+
+    def delete_kv(self, context_id: str, chunk_idx: int, level: int) -> bool:
+        """Remove one (chunk, level) blob; True if it existed.  Metadata is
+        left intact — a reader then sees the descriptive ``KeyError`` of a
+        missing entry, which is exactly the fault the retry machinery
+        classifies as permanent-at-level."""
+        return self.backend.delete(context_id, chunk_idx, level)
 
     def get_run(
         self, context_id: str, chunk_levels: List[Tuple[int, int]]

@@ -36,16 +36,45 @@ duplicate attempt after that delay, uses the winner's bytes, *cancels* the
 loser (sim: cancellation event stops its paced read; tcp: the loser's
 socket is closed mid-stream), and reports the loser's transferred bytes as
 ``duplicate_bytes``.
+
+Failure model (ISSUE 6).  A fetch can fail five ways, and each maps to one
+:func:`classify_failure` kind the session's retry machinery acts on:
+
+  * ``"missing"`` (``KeyError``) — the store has no such ``(context, chunk,
+    level)``.  Permanent at that level: retrying the same key cannot
+    succeed, so the session skips straight to the degrade ladder.
+  * ``"integrity"`` (``bitstream.IntegrityError`` / plan-mismatch
+    ``ValueError``) — bytes arrived but are corrupt or are the wrong blob.
+    Retryable: the next attempt re-reads the store / re-crosses the link.
+  * ``"timeout"`` (``TimeoutError``) — the attempt out-waited the policy's
+    budget (wall for realtime transports, virtual for sim).  Retryable; the
+    in-flight handle is cancelled first.
+  * ``"io"`` (:class:`FetchError`, ``ConnectionError``, ``OSError``) — the
+    link died: dropped fetch, severed TCP stream, refused reconnect.
+    Retryable; on tcp each attempt opens a fresh connection, so retrying
+    *is* reconnect-with-backoff.
+  * ``"fatal"`` (anything else) — a programming error; never masked, always
+    re-raised.
+
+Retryable kinds are retried up to :class:`RetryPolicy` bounds with
+exponential backoff; detection latency + backoff are charged to the
+session's ``StreamClock`` so Algorithm-1 re-planning sees the lost time.
+Once the per-level budget is exhausted the chunk is re-decided with that
+level (and everything finer) excluded — coarser levels, ultimately TEXT
+recompute — generalizing the paper's §C.1 bandwidth fallback into a
+failure fallback.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import socket
 import struct
 import threading
 import time
 from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
+from repro.core.bitstream import IntegrityError
 from repro.streaming.network import NetworkModel, keyed_straggler_delay
 from repro.streaming.storage import KVStore
 
@@ -54,18 +83,93 @@ __all__ = [
     "FetchHandle",
     "FetchResult",
     "LocalTransport",
+    "RetryPolicy",
     "SimTransport",
     "TcpStoreServer",
     "TcpTransport",
     "Transport",
     "as_completed",
+    "classify_failure",
 ]
+
+logger = logging.getLogger(__name__)
 
 ChunkLevels = Sequence[Tuple[int, int]]  # [(chunk_idx, level), ...]
 
 
 class FetchError(RuntimeError):
-    """A fetch failed or was cancelled before completing."""
+    """A fetch failed or was cancelled before completing.
+
+    Carries the context id and ``(chunk, level)`` list when the issuing
+    transport knows them, so failures under concurrency are attributable;
+    ``fail_t`` (when set) is the transport-clock instant the failure was
+    detected — what the session charges to its ``StreamClock``.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        context_id: Optional[str] = None,
+        chunk_levels: Optional[ChunkLevels] = None,
+        fail_t: Optional[float] = None,
+    ):
+        detail = ""
+        if context_id is not None or chunk_levels is not None:
+            parts = []
+            if context_id is not None:
+                parts.append(f"context {context_id!r}")
+            if chunk_levels is not None:
+                parts.append(f"(chunk, level)={[tuple(c) for c in chunk_levels]}")
+            detail = f" [{', '.join(parts)}]"
+        super().__init__(message + detail)
+        self.context_id = context_id
+        self.chunk_levels = list(chunk_levels) if chunk_levels is not None else None
+        self.fail_t = fail_t
+
+
+def classify_failure(err: BaseException) -> str:
+    """Map a fetch exception to a retry-machinery kind (see module docstring).
+
+    Order matters: ``IntegrityError`` is a ``ValueError``, and ``FetchError``
+    is a ``RuntimeError`` — most-specific first.
+    """
+    if isinstance(err, KeyError):
+        return "missing"
+    if isinstance(err, IntegrityError):
+        return "integrity"
+    if isinstance(err, TimeoutError):
+        return "timeout"
+    if isinstance(err, (FetchError, ConnectionError, OSError)):
+        return "io"
+    if isinstance(err, ValueError):
+        return "integrity"  # plan/header mismatch: wrong blob delivered
+    return "fatal"
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded-retry budget for one chunk fetch at one level.
+
+    ``max_attempts`` counts total tries (1 = no retry); ``backoff(k)`` is the
+    pause charged before re-attempt ``k`` (exponential).  ``timeout_s``
+    bounds a *virtual-clock* attempt (sim transport: a stall that resolves
+    past it is treated as a timeout failure); ``wall_timeout_s`` bounds a
+    *wall-clock* attempt on realtime transports (tcp/local/paced sim).
+    ``degrade=False`` disables the coarser-level/TEXT fallback — the session
+    fails cleanly once retries are exhausted.
+    """
+
+    max_attempts: int = 3
+    backoff_s: float = 0.02
+    backoff_mult: float = 2.0
+    timeout_s: Optional[float] = None
+    wall_timeout_s: Optional[float] = None
+    degrade: bool = True
+
+    def backoff(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (1-based: first retry = 1)."""
+        return self.backoff_s * self.backoff_mult ** max(attempt - 1, 0)
 
 
 @dataclasses.dataclass
@@ -124,12 +228,18 @@ class FetchHandle:
     :func:`as_completed`.
     """
 
-    def __init__(self):
+    def __init__(
+        self,
+        context_id: Optional[str] = None,
+        chunk_levels: Optional[ChunkLevels] = None,
+    ):
         self._done = threading.Event()
         self._result: Optional[FetchResult] = None
         self._error: Optional[BaseException] = None
         self._callbacks: List = []
         self._lock = threading.Lock()
+        self.context_id = context_id
+        self.chunk_levels = list(chunk_levels) if chunk_levels is not None else None
 
     # -- completion plumbing (transport side) ------------------------------
 
@@ -167,7 +277,11 @@ class FetchHandle:
     def cancel(self) -> None:
         """Abort all attempts; a pending ``result()`` raises FetchError."""
         self._abort()
-        self._finish(None, FetchError("fetch cancelled by caller"))
+        self._finish(None, FetchError(
+            "fetch cancelled by caller",
+            context_id=self.context_id,
+            chunk_levels=self.chunk_levels,
+        ))
 
     def _abort(self) -> None:  # transport-specific teardown
         pass
@@ -223,8 +337,8 @@ class LocalTransport:
         start_t: float = 0.0,
         hedge_after_s: Optional[float] = None,  # no link -> nothing to hedge
     ) -> FetchHandle:
-        handle = FetchHandle()
         chunk_levels = list(chunk_levels)
+        handle = FetchHandle(context_id, chunk_levels)
 
         def work():
             t0 = time.perf_counter()
@@ -299,8 +413,8 @@ class _Attempt:
 
 
 class _SimHandle(FetchHandle):
-    def __init__(self, attempts: List[_Attempt]):
-        super().__init__()
+    def __init__(self, attempts: List[_Attempt], context_id=None, chunk_levels=None):
+        super().__init__(context_id, chunk_levels)
         self._attempts = attempts
 
     def _abort(self) -> None:
@@ -356,7 +470,9 @@ class SimTransport:
             except (KeyError, IndexError):
                 nbytes = sum(len(b) for b in read())
         except KeyError as e:
-            failed = FetchHandle()
+            # 404 after one round trip on the virtual clock
+            e.fail_t = start_t + float(getattr(self.network, "rtt_s", 0.0))
+            failed = FetchHandle(context_id, chunk_levels)
             failed._finish(None, e)
             return failed
         key_chunk = chunk_levels[0][0] if chunk_levels else 0
@@ -377,7 +493,7 @@ class SimTransport:
                 chunk_idx=key_chunk, attempt=1, straggle=False,
             )
             attempts.append(_Attempt(nbytes, hedge_dur, self.time_scale))
-        handle = _SimHandle(attempts)
+        handle = _SimHandle(attempts, context_id, chunk_levels)
         winner_i = 1 if outcome.hedged else 0
 
         def coordinate():
@@ -400,12 +516,21 @@ class SimTransport:
                 if i != winner_i:
                     a.cancelled.set()
             if winner.error is not None:
+                # bytes travelled (or the read failed) on the virtual window;
+                # the failure is detected at the transfer's modeled end
+                if getattr(winner.error, "fail_t", None) is None:
+                    try:
+                        winner.error.fail_t = outcome.end_t
+                    except AttributeError:
+                        pass  # exception type with __slots__
                 handle._finish(None, winner.error)
                 return
             if winner.cancelled.is_set() or not hasattr(winner, "blobs"):
                 handle._finish(None, FetchError(
-                    f"fetch of context {context_id!r} chunks "
-                    f"{[c for c, _ in chunk_levels]} was cancelled"
+                    "fetch was cancelled",
+                    context_id=context_id,
+                    chunk_levels=chunk_levels,
+                    fail_t=outcome.end_t,
                 ))
                 return
             loser = attempts[1 - winner_i] if hedge_issued else None
@@ -472,6 +597,19 @@ class TcpStoreServer:
     ``keyed_straggler_delay`` the virtual-clock model draws from, so a
     hedged client (attempt 1, ``straggle=False``) escapes exactly the
     stalls the simulator's hedge escapes.
+
+    Connection-failure accounting: every accepted connection increments
+    ``n_connections``; a connection that dies mid-exchange (client gone,
+    socket error) increments ``n_dropped_connections``; a request frame that
+    does not parse increments ``n_malformed``.  The most recent reasons are
+    kept in ``last_errors`` (bounded) and logged at debug level — a flaky
+    peer is observable on the server object, not silently swallowed.
+
+    ``fault_plan`` (``streaming/faults.FaultPlan``) injects server-side
+    chaos per request: a "drop" severs the stream mid-frame (header + half
+    the first blob, then close), a "stall" sleeps past the client's timeout,
+    a "corrupt" flips payload bytes before sending.  ``n_injected_faults``
+    counts them.
     """
 
     def __init__(
@@ -485,6 +623,7 @@ class TcpStoreServer:
         straggler_scale_s: float = 0.1,
         straggler_alpha: float = 1.5,
         seed: int = 0,
+        fault_plan=None,
     ):
         self.store = store
         self.pace_gbps = pace_gbps
@@ -492,6 +631,14 @@ class TcpStoreServer:
         self.straggler_scale_s = straggler_scale_s
         self.straggler_alpha = straggler_alpha
         self.seed = seed
+        self.fault_plan = fault_plan
+        self.n_connections = 0
+        self.n_dropped_connections = 0
+        self.n_malformed = 0
+        self.n_injected_faults = 0
+        self.last_errors: List[str] = []  # bounded, most recent last
+        self._attempt_counts: dict = {}  # (cid, chunk, level) -> tries seen
+        self._stats_lock = threading.Lock()
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -513,14 +660,40 @@ class TcpStoreServer:
                 target=self._serve_conn, args=(conn,), daemon=True
             ).start()
 
+    def _note_error(self, reason: str) -> None:
+        with self._stats_lock:
+            self.last_errors.append(reason)
+            del self.last_errors[:-16]
+        logger.debug("tcp store server: %s", reason)
+
+    def _draw_fault(self, cid, chunks):
+        """One injected fault decision per request (first chunk keys it)."""
+        if self.fault_plan is None or not chunks:
+            return None, 0
+        ci, lvl = chunks[0]
+        with self._stats_lock:
+            attempt = self._attempt_counts.get((cid, ci, lvl), 0)
+            self._attempt_counts[(cid, ci, lvl)] = attempt + 1
+        return self.fault_plan.draw(cid, ci, lvl, attempt), attempt
+
     def _serve_conn(self, conn: socket.socket) -> None:
         import msgpack
 
+        with self._stats_lock:
+            self.n_connections += 1
         try:
             with conn:
-                req = msgpack.unpackb(_recv_frame(conn), raw=False)
-                cid = req["cid"]
-                chunks = [(int(c), int(lv)) for c, lv in req["chunks"]]
+                try:
+                    req = msgpack.unpackb(_recv_frame(conn), raw=False)
+                    cid = req["cid"]
+                    chunks = [(int(c), int(lv)) for c, lv in req["chunks"]]
+                except ConnectionError:
+                    raise  # peer vanished before sending a full request
+                except Exception as e:
+                    with self._stats_lock:
+                        self.n_malformed += 1
+                    self._note_error(f"malformed request frame: {e!r}")
+                    return
                 try:
                     blobs = [
                         self.store.get_kv(cid, ci, lvl) for ci, lvl in chunks
@@ -530,9 +703,30 @@ class TcpStoreServer:
                         {"ok": False, "error": str(e.args[0])}
                     ))
                     return
+                fault, attempt = self._draw_fault(cid, chunks)
+                if fault is not None:
+                    with self._stats_lock:
+                        self.n_injected_faults += 1
+                    self._note_error(
+                        f"injected {fault.kind} fault for {cid!r} chunks {chunks}"
+                    )
+                    if fault.kind == "stall":
+                        time.sleep(fault.delay_s)
+                    elif fault.kind == "corrupt":
+                        blobs = [
+                            self.fault_plan.corrupt_bytes(b, cid, ci, lvl, attempt)
+                            for b, (ci, lvl) in zip(blobs, chunks)
+                        ]
                 _send_frame(conn, msgpack.packb(
                     {"ok": True, "sizes": [len(b) for b in blobs]}
                 ))
+                if fault is not None and fault.kind == "drop":
+                    # sever mid-frame: length prefix + half the payload,
+                    # then the with-block closes the socket — the client
+                    # sees ConnectionError("peer closed mid-frame")
+                    half = blobs[0][: max(len(blobs[0]) // 2, 1)]
+                    conn.sendall(_LEN.pack(len(blobs[0])) + half)
+                    return
                 if req.get("straggle", True) and self.straggler_p > 0:
                     key_chunk = chunks[0][0] if chunks else 0
                     stall = keyed_straggler_delay(
@@ -544,8 +738,13 @@ class TcpStoreServer:
                         time.sleep(stall)
                 for blob in blobs:
                     self._send_paced(conn, blob)
-        except (ConnectionError, OSError, ValueError):
-            return  # client gone (e.g. a cancelled hedge loser) — fine
+        except (ConnectionError, OSError, ValueError) as e:
+            # client gone (a cancelled hedge loser, a dropped peer) — the
+            # request is over, but the event is counted and attributable
+            with self._stats_lock:
+                self.n_dropped_connections += 1
+            self._note_error(f"connection dropped mid-exchange: {e!r}")
+            return
 
     def _send_paced(self, conn: socket.socket, blob: bytes) -> None:
         conn.sendall(_LEN.pack(len(blob)))
@@ -606,8 +805,8 @@ class _TcpAttempt:
 
 
 class _TcpHandle(FetchHandle):
-    def __init__(self, attempts: List[_TcpAttempt]):
-        super().__init__()
+    def __init__(self, attempts: List[_TcpAttempt], context_id=None, chunk_levels=None):
+        super().__init__(context_id, chunk_levels)
         self._attempts = attempts
 
     def _abort(self) -> None:
@@ -701,7 +900,7 @@ class TcpTransport:
         chunk_levels = list(chunk_levels)
         primary = _TcpAttempt()
         attempts = [primary]
-        handle = _TcpHandle(attempts)
+        handle = _TcpHandle(attempts, context_id, chunk_levels)
 
         def coordinate():
             t0 = time.perf_counter()
@@ -740,7 +939,11 @@ class TcpTransport:
                 if all(a.finished.is_set() for a in contenders):  # all failed
                     err = next(
                         (a.error for a in contenders if a.error is not None),
-                        FetchError("all fetch attempts failed"),
+                        FetchError(
+                            "all fetch attempts failed",
+                            context_id=context_id,
+                            chunk_levels=chunk_levels,
+                        ),
                     )
                     handle._finish(None, err)
                     return

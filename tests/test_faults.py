@@ -1,0 +1,607 @@
+"""Fault-tolerant context loading (ISSUE 6).
+
+Covers the fault-injection + integrity + retry/degrade stack:
+  * checksum trailer on every packed chunk — flips are detected at
+    ``verify_checksum``/``unpack``/``verify_chunk`` and at store read,
+    before any corrupt payload can reach the decoder; legacy trailer-less
+    blobs still parse;
+  * seeded :class:`~repro.streaming.faults.FaultPlan` draws are
+    deterministic and order-independent; ``FaultyBackend`` counts every
+    faulted read for reconciliation;
+  * retry/degrade: a session under a faulty transport completes with its
+    fault counters exactly reconciling against the injected counts — and a
+    zero-fault plan leaves a policy-armed session *bit-identical* to the
+    legacy path (session and both schedulers);
+  * failure isolation: without a policy a doomed request still crashes the
+    whole ``ConcurrentScheduler`` wave (the pinned pre-ISSUE-6 behavior);
+    with one it fails alone, batchmates complete, and the
+    ``ContinuousScheduler`` recycles its row;
+  * property test (`tests/_hyp` shim): random fault plans never escape —
+    every run either completes bit-exact-at-realized-levels against the
+    clean store or fails cleanly with ``ttft = inf``;
+  * tcp (slow-marked): server-side injection is survivable through the
+    retry policy, and the server counts malformed frames / dropped
+    connections without dying.
+"""
+import socket
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bitstream
+from repro.core import codec as kvcodec
+from repro.serving.session import ServeSession
+from repro.streaming import (
+    CacheGenStreamer,
+    FaultPlan,
+    FaultyTransport,
+    FetchError,
+    KVStore,
+    MemoryBackend,
+    RetryPolicy,
+    SimTransport,
+    with_faulty_backend,
+)
+from repro.streaming.network import BandwidthTrace, NetworkModel
+from repro.streaming.streamer import FetchPlan
+
+from tests._hyp import given, settings, st
+
+T_CTX = 100
+CHUNK = 20  # 5 chunks
+
+_ASSETS = None
+
+
+def _assets():
+    """Module-level lazy build: shared by fixtures AND the property test
+    (the `_hyp` fallback wraps @given tests zero-arg, so no fixtures)."""
+    global _ASSETS
+    if _ASSETS is None:
+        from repro.configs import registry
+        from repro.models import build
+        from repro.serving.engine import Engine
+        from repro.serving.kv_layout import caches_to_codec_kv
+
+        rng = np.random.default_rng(0)
+        cfg = registry.get("smollm-360m").tiny()
+        model = build(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, cache_capacity=T_CTX + 40)
+        tokens = rng.integers(0, cfg.vocab_size, size=(1, T_CTX)).astype(np.int32)
+        _, caches = eng.calculate_kv({"tokens": jnp.asarray(tokens)})
+        kv = caches_to_codec_kv(caches, 0, T_CTX)
+        ctab = kvcodec.profile([kv], kvcodec.CodecConfig(precision=10))
+        store = KVStore(ctab)
+        streamer = CacheGenStreamer(store, cfg)
+        metas = store.store_kv("ctx", kv, chunk_tokens=CHUNK)
+        u = sum(m.sizes[1] for m in metas) * 8 / 1e9
+        _ASSETS = dict(cfg=cfg, eng=eng, tokens=tokens, kv=kv, ctab=ctab,
+                       store=store, streamer=streamer, metas=metas, u=u)
+    return _ASSETS
+
+
+@pytest.fixture(scope="module")
+def ffix():
+    return _assets()
+
+
+# expensive recompute: TEXT is never first-feasible, so chunks actually ride
+# the (faulty) fetch path instead of short-circuiting to recompute
+_R_SLOW = lambda t, p: 100.0  # noqa: E731
+
+
+def _mk_session(fx, **kw) -> ServeSession:
+    return ServeSession(
+        fx["streamer"], fx["eng"], slo_s=1.0, recompute_s=kw.pop("rc", _R_SLOW),
+        decode_bytes_per_s=1e9, **kw,
+    )
+
+
+def _kv_np(caches):
+    return (
+        np.asarray(caches.kv_k[:, :, :T_CTX], np.float32),
+        np.asarray(caches.kv_v[:, :, :T_CTX], np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# bitstream integrity (tentpole: checksum in the packed wire format)
+# ---------------------------------------------------------------------------
+
+
+def test_checksum_roundtrip_flip_detection_and_legacy(ffix):
+    blob = ffix["store"].get_kv("ctx", 0, 1)
+    assert bitstream.has_checksum(blob)
+    assert bitstream.verify_checksum(blob) is True
+    assert kvcodec.verify_chunk(blob) is True
+    header, arrays = bitstream.unpack(blob)
+    assert header["n_tokens"] == CHUNK
+
+    # a single byte flip anywhere in the body must be caught before decode
+    for pos in (0, len(blob) // 2, len(blob) - 9):
+        bad = bytearray(blob)
+        bad[pos] ^= 0x01
+        bad = bytes(bad)
+        with pytest.raises(bitstream.IntegrityError):
+            bitstream.verify_checksum(bad)
+        with pytest.raises(bitstream.IntegrityError):
+            bitstream.unpack(bad)
+
+    # trailer-less (legacy / foreign producer) blobs still parse
+    legacy = blob[: -len(bitstream._CRC_MAGIC) - 4]
+    assert not bitstream.has_checksum(legacy)
+    assert bitstream.verify_checksum(legacy) is False
+    h2, _ = bitstream.unpack(legacy)
+    assert h2["n_tokens"] == header["n_tokens"]
+    # and the header peek is trailer-agnostic
+    assert kvcodec.peek_chunk_header(blob)["n_tokens"] == CHUNK
+
+    # garbage never escapes as a foreign exception type
+    with pytest.raises(bitstream.IntegrityError):
+        bitstream.unpack(b"not a chunk bitstream at all")
+
+
+def test_store_read_verifies_and_names_the_entry(ffix):
+    store = KVStore(ffix["ctab"], backend=MemoryBackend())
+    store.store_kv("c", ffix["kv"], chunk_tokens=CHUNK)
+    blob = store.get_kv("c", 1, 2)
+    bad = bytearray(blob)
+    bad[len(bad) // 3] ^= 0xFF
+    store.backend.put("c", 1, 2, bytes(bad))
+    with pytest.raises(ValueError) as ei:
+        store.get_kv("c", 1, 2)
+    msg = str(ei.value)
+    assert "context 'c'" in msg and "chunk 1" in msg and "level 2" in msg, msg
+
+
+def test_delete_kv_surfaces_as_missing_entry(ffix):
+    store = KVStore(ffix["ctab"], backend=MemoryBackend())
+    store.store_kv("c", ffix["kv"], chunk_tokens=CHUNK)
+    assert store.delete_kv("c", 2, 1) is True
+    assert store.delete_kv("c", 2, 1) is False  # already gone
+    with pytest.raises(KeyError, match="chunk 2 level 1"):
+        store.get_kv("c", 2, 1)
+    # metadata intact: other entries unaffected
+    assert store.get_kv("c", 2, 2)
+    assert len(store.meta("c")) == T_CTX // CHUNK
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: seeded, deterministic, order-independent
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_draws_are_deterministic_and_keyed():
+    plan = FaultPlan(seed=7, drop_p=0.2, stall_p=0.2, corrupt_p=0.2,
+                     missing_p=0.3, store_corrupt_p=0.3)
+    # same key -> same draw, every time and in any order
+    draws = [plan.draw("ctx", c, l, a)
+             for c in range(4) for l in range(3) for a in range(3)]
+    redraws = [plan.draw("ctx", c, l, a)
+               for c in range(4) for l in range(3) for a in range(3)]
+    assert draws == redraws
+    kinds = {d.kind for d in draws if d is not None}
+    assert kinds == {"drop", "stall", "corrupt"}  # all arms exercised
+    assert any(d is None for d in draws)
+    # attempts are independent keys: a dropped first attempt does not doom
+    # the retries
+    per_attempt = [plan.draw("ctx", 0, 0, a) for a in range(16)]
+    assert len({(d.kind if d else None) for d in per_attempt}) > 1
+    # persistent faults ignore the attempt index entirely
+    assert plan.missing("ctx", 1, 0) == plan.missing("ctx", 1, 0)
+    # different cid/seed decorrelate
+    other = FaultPlan(seed=8, drop_p=0.2, stall_p=0.2, corrupt_p=0.2)
+    assert [other.draw("ctx", c, 0, 0) for c in range(16)] != \
+        [plan.draw("ctx", c, 0, 0) for c in range(16)]
+    with pytest.raises(ValueError, match="exceeds 1"):
+        FaultPlan(drop_p=0.6, stall_p=0.3, corrupt_p=0.2)
+
+
+def test_fault_plan_corrupt_bytes_always_differs():
+    plan = FaultPlan(seed=3)
+    blob = bytes(range(256)) * 4
+    bad = plan.corrupt_bytes(blob, "ctx", 0, 1)
+    assert bad != blob and len(bad) == len(blob)
+    assert bad == plan.corrupt_bytes(blob, "ctx", 0, 1)  # keyed-deterministic
+    assert plan.corrupt_bytes(b"", "ctx", 0, 1) == b""
+    tiny = plan.corrupt_bytes(b"\x00", "ctx", 0, 1)
+    assert tiny != b"\x00"
+
+
+def test_faulty_backend_counts_reconcile(ffix):
+    plan = FaultPlan(seed=11, missing_p=0.4, store_corrupt_p=0.3)
+    fstore = with_faulty_backend(ffix["store"], plan)
+    missing = corrupt = ok = 0
+    for ci in range(T_CTX // CHUNK):
+        for lvl in (0, 1, 2):
+            try:
+                blob = fstore.get_kv("ctx", ci, lvl)
+            except KeyError:
+                missing += 1
+            except ValueError:
+                corrupt += 1
+            else:
+                ok += 1
+                assert blob == ffix["store"].get_kv("ctx", ci, lvl)
+    assert missing == fstore.backend.n_missing_reads > 0
+    assert corrupt == fstore.backend.n_corrupt_reads > 0
+    assert ok > 0
+    # deterministic: a fresh wrap over the same plan sees the same faults
+    again = with_faulty_backend(ffix["store"], plan)
+    n2 = 0
+    for ci in range(T_CTX // CHUNK):
+        for lvl in (0, 1, 2):
+            try:
+                again.get_kv("ctx", ci, lvl)
+            except (KeyError, ValueError):
+                n2 += 1
+    assert n2 == missing + corrupt
+    # the underlying store is untouched
+    assert ffix["store"].get_kv("ctx", 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# retry / degrade / recompute fallback (CI fault smoke)
+# ---------------------------------------------------------------------------
+
+
+def test_retry_degrade_completes_and_counters_reconcile(ffix):
+    plan = FaultPlan(seed=3, drop_p=0.15, stall_p=0.1, corrupt_p=0.1,
+                     missing_p=0.1)
+    trace = BandwidthTrace.constant(400 * ffix["u"])
+    fstore = with_faulty_backend(ffix["store"], plan)
+    net = NetworkModel(trace)
+    ft = FaultyTransport(SimTransport(fstore, net), plan)
+    res = _mk_session(
+        ffix, retry_policy=RetryPolicy(max_attempts=3, timeout_s=0.5)
+    ).run("ctx", ffix["tokens"], net, transport=ft)
+    assert res.status == "ok" and not res.failed
+    assert int(res.caches.length[0]) == T_CTX
+    # exact reconciliation: every injected transient fault was detected and
+    # classified; stalls only count when they tripped the timeout
+    assert res.fault_counts.get("io", 0) == ft.n_injected["drop"]
+    assert res.fault_counts.get("integrity", 0) == ft.n_injected["corrupt"]
+    assert res.fault_counts.get("timeout", 0) <= ft.n_injected["stall"]
+    assert res.fault_counts.get("missing", 0) == fstore.backend.n_missing_reads
+    assert res.n_failed_attempts == sum(res.fault_counts.values())
+    assert res.n_retries + res.n_degrades + res.n_fault_text > 0
+    assert sum(t.n_retries for t in res.timelines) == res.n_retries
+    # lost time was charged: the faulted run cannot be faster than clean
+    clean = _mk_session(
+        ffix, retry_policy=RetryPolicy(max_attempts=3, timeout_s=0.5)
+    ).run("ctx", ffix["tokens"], NetworkModel(trace))
+    assert res.ttft_s >= clean.ttft_s
+
+
+def test_stall_timeout_path_recovers(ffix):
+    # every attempt stalls far past the timeout: the session must time out,
+    # retry, exhaust, degrade, and finally complete via TEXT recompute
+    plan = FaultPlan(seed=0, stall_p=1.0, stall_scale_s=30.0)
+    trace = BandwidthTrace.constant(400 * ffix["u"])
+    net = NetworkModel(trace)
+    ft = FaultyTransport(SimTransport(ffix["store"], net), plan)
+    res = _mk_session(
+        ffix,
+        retry_policy=RetryPolicy(max_attempts=2, backoff_s=0.01, timeout_s=0.2),
+    ).run("ctx", ffix["tokens"], net, transport=ft)
+    assert res.status == "ok"
+    assert res.fault_counts.get("timeout", 0) > 0
+    assert res.n_fault_text == len(res.configs)  # nothing else could land
+    assert int(res.caches.length[0]) == T_CTX
+
+
+def test_exhaustion_without_text_fails_cleanly(ffix):
+    plan = FaultPlan(seed=1, drop_p=1.0)
+    trace = BandwidthTrace.constant(400 * ffix["u"])
+    net = NetworkModel(trace)
+    ft = FaultyTransport(SimTransport(ffix["store"], net), plan)
+    res = _mk_session(
+        ffix, allow_text=False,
+        retry_policy=RetryPolicy(max_attempts=2, backoff_s=0.01),
+    ).run("ctx", ffix["tokens"], net, transport=ft)
+    assert res.failed and res.status == "failed"
+    assert res.failure is not None and "exhausted" in res.failure
+    assert res.ttft_s == float("inf") and res.slo_violated
+    # the realized prefix is still a valid cache (no torn runs)
+    assert 0 <= int(res.caches.length[0]) < T_CTX
+
+
+def test_legacy_no_policy_crash_is_pinned_with_context(ffix):
+    plan = FaultPlan(seed=1, drop_p=1.0)
+    trace = BandwidthTrace.constant(400 * ffix["u"])
+    net = NetworkModel(trace)
+    ft = FaultyTransport(SimTransport(ffix["store"], net), plan)
+    with pytest.raises(FetchError) as ei:
+        _mk_session(ffix).run("ctx", ffix["tokens"], net, transport=ft)
+    msg = str(ei.value)
+    assert "context 'ctx'" in msg and "(chunk, level)=" in msg, msg
+
+
+# ---------------------------------------------------------------------------
+# zero-fault differential: the policy must cost nothing when nothing fails
+# ---------------------------------------------------------------------------
+
+
+def test_zero_fault_policy_is_bit_identical(ffix):
+    trace = BandwidthTrace.steps(0.2, [2.0 * ffix["u"], 0.6 * ffix["u"]])
+    base = _mk_session(ffix, rc=lambda t, p: 0.04 * t / CHUNK).run(
+        "ctx", ffix["tokens"], NetworkModel(trace)
+    )
+    pol = _mk_session(
+        ffix, rc=lambda t, p: 0.04 * t / CHUNK,
+        retry_policy=RetryPolicy(max_attempts=3, timeout_s=10.0),
+    ).run("ctx", ffix["tokens"], NetworkModel(trace))
+    assert pol.status == "ok" and pol.n_retries == 0 and pol.n_degrades == 0
+    assert pol.configs == base.configs
+    assert [t.nbytes for t in pol.timelines] == [t.nbytes for t in base.timelines]
+    assert abs(pol.ttft_s - base.ttft_s) < 1e-12
+    for a, b in zip(_kv_np(pol.caches), _kv_np(base.caches)):
+        assert np.array_equal(a, b)
+
+
+def test_zero_fault_schedulers_bit_identical(ffix):
+    from repro.serving.scheduler import (
+        ConcurrentScheduler,
+        ContinuousScheduler,
+        SessionRequest,
+    )
+
+    u = ffix["u"]
+    traces = [
+        BandwidthTrace.constant(2.0 * u),
+        BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u]),
+        BandwidthTrace.steps(0.15, [2.0 * u, 0.4 * u] * 2),
+    ]
+    rc = lambda t, p: 0.04 * t / CHUNK  # noqa: E731
+
+    def reqs(policy, arrivals=None):
+        return [
+            SessionRequest(
+                _mk_session(ffix, rc=rc, retry_policy=policy), "ctx",
+                ffix["tokens"], NetworkModel(tr),
+                prior_throughput_gbps=float(tr.gbps[0]),
+                start_t=0.0 if arrivals is None else arrivals[i],
+            )
+            for i, tr in enumerate(traces)
+        ]
+
+    policy = RetryPolicy(max_attempts=3, timeout_s=10.0)
+    base = ConcurrentScheduler(ffix["eng"]).run(reqs(None))
+    pol = ConcurrentScheduler(ffix["eng"]).run(reqs(policy))
+    assert pol.n_failed == 0
+    for a, b in zip(pol.sessions, base.sessions):
+        assert a.configs == b.configs
+        assert abs(a.ttft_s - b.ttft_s) < 1e-12
+        for x, y in zip(_kv_np(a.caches), _kv_np(b.caches)):
+            assert np.array_equal(x, y)
+
+    arr = [0.0, 0.1, 0.2]
+    cbase = ContinuousScheduler(ffix["eng"], rows=2).run(reqs(None, arr))
+    cpol = ContinuousScheduler(ffix["eng"], rows=2).run(reqs(policy, arr))
+    assert cpol.n_failed == 0
+    for a, b in zip(cpol.sessions, cbase.sessions):
+        assert a.configs == b.configs
+        assert abs(a.ttft_s - b.ttft_s) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# failure isolation in both schedulers (satellite c)
+# ---------------------------------------------------------------------------
+
+
+def _iso_requests(ffix, policy, arrivals=None):
+    from repro.serving.scheduler import SessionRequest
+
+    u = ffix["u"]
+    doomed_plan = FaultPlan(seed=0, drop_p=1.0)
+    traces = [BandwidthTrace.constant(2.0 * u) for _ in range(3)]
+    out = []
+    for i, tr in enumerate(traces):
+        net = NetworkModel(tr)
+        transport = (
+            FaultyTransport(SimTransport(ffix["store"], net), doomed_plan)
+            if i == 0 else None
+        )
+        out.append(
+            SessionRequest(
+                _mk_session(ffix, allow_text=(i != 0), retry_policy=policy),
+                "ctx", ffix["tokens"], net,
+                prior_throughput_gbps=float(tr.gbps[0]),
+                start_t=0.0 if arrivals is None else arrivals[i],
+                transport=transport,
+            )
+        )
+    return out
+
+
+def test_fetch_error_without_policy_still_crashes_the_wave(ffix):
+    """Pinned pre-ISSUE-6 behavior: one bad link poisons the whole batch."""
+    from repro.serving.scheduler import ConcurrentScheduler
+
+    with pytest.raises(FetchError):
+        ConcurrentScheduler(ffix["eng"]).run(_iso_requests(ffix, None))
+
+
+def test_failed_session_is_isolated_in_concurrent_wave(ffix):
+    from repro.serving.scheduler import ConcurrentScheduler
+
+    policy = RetryPolicy(max_attempts=2, backoff_s=0.01)
+    out = ConcurrentScheduler(ffix["eng"]).run(_iso_requests(ffix, policy))
+    assert out.n_failed == 1
+    assert out.sessions[0].failed and out.sessions[0].ttft_s == float("inf")
+    for s in out.sessions[1:]:
+        assert not s.failed
+        assert int(s.caches.length[0]) == T_CTX
+
+
+def test_failed_session_releases_row_in_continuous_scheduler(ffix):
+    from repro.serving.scheduler import ContinuousScheduler
+
+    policy = RetryPolicy(max_attempts=2, backoff_s=0.01)
+    # rows=1: everyone funnels through the row the doomed session must free
+    out = ContinuousScheduler(ffix["eng"], rows=1).run(
+        _iso_requests(ffix, policy, arrivals=[0.0, 0.05, 0.1])
+    )
+    assert out.n_failed == 1
+    assert out.sessions[0].failed
+    for s in out.sessions[1:]:
+        assert not s.failed and int(s.caches.length[0]) == T_CTX
+    assert max(n for _, n in out.occupancy) == 1
+
+
+# ---------------------------------------------------------------------------
+# property test: random fault plans never crash (satellite d)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**20),
+    drop_p=st.floats(0.0, 0.3),
+    stall_p=st.floats(0.0, 0.2),
+    corrupt_p=st.floats(0.0, 0.3),
+    missing_p=st.floats(0.0, 0.3),
+    backend_faults=st.booleans(),
+    degrade=st.booleans(),
+    allow_text=st.booleans(),
+)
+def test_random_fault_plans_never_crash(
+    seed, drop_p, stall_p, corrupt_p, missing_p, backend_faults, degrade,
+    allow_text,
+):
+    fx = _assets()
+    # one fault layer per example: a transport-drawn corruption on a fetch
+    # whose entry is also missing surfaces as "missing", so mixing layers
+    # would (correctly) break the per-layer exact reconciliation below
+    if backend_faults:
+        plan = FaultPlan(seed=seed, missing_p=missing_p,
+                         store_corrupt_p=corrupt_p)
+    else:
+        plan = FaultPlan(seed=seed, drop_p=drop_p, stall_p=stall_p,
+                         corrupt_p=corrupt_p, stall_scale_s=5.0)
+    trace = BandwidthTrace.constant(400 * fx["u"])
+    fstore = with_faulty_backend(fx["store"], plan)
+    net = NetworkModel(trace)
+    ft = FaultyTransport(SimTransport(fstore, net), plan)
+    res = _mk_session(
+        fx, allow_text=allow_text,
+        retry_policy=RetryPolicy(
+            max_attempts=2, backoff_s=0.01, timeout_s=0.5, degrade=degrade
+        ),
+    ).run("ctx", fx["tokens"], net, transport=ft)
+
+    # counters always reconcile, success or not
+    if backend_faults:
+        assert res.fault_counts.get("missing", 0) == fstore.backend.n_missing_reads
+        assert res.fault_counts.get("integrity", 0) == fstore.backend.n_corrupt_reads
+    else:
+        assert res.fault_counts.get("io", 0) == ft.n_injected["drop"]
+        assert res.fault_counts.get("integrity", 0) == ft.n_injected["corrupt"]
+        assert res.fault_counts.get("timeout", 0) <= ft.n_injected["stall"]
+    assert res.n_failed_attempts == sum(res.fault_counts.values())
+
+    if res.failed:
+        # clean failure: inf ttft, a valid (possibly empty) realized prefix
+        assert res.ttft_s == float("inf")
+        assert 0 <= int(res.caches.length[0]) < T_CTX
+        return
+    assert int(res.caches.length[0]) == T_CTX
+    # exact at the realized levels: rebuilding this exact plan from the
+    # CLEAN store must reproduce the cache (repo-standard fused-vs-unfused
+    # tolerance, cf. tests/test_session.py's oracle differentials) — no
+    # corrupted payload can have leaked into the realized rows
+    oracle_plan = FetchPlan(
+        context_id="ctx", result=res.stream_result(), metas=fx["metas"]
+    )
+    ref = fx["streamer"].materialize(
+        oracle_plan, fx["eng"], fx["tokens"], batch=1, fused=False
+    )
+    for a, b in ((res.caches.kv_k, ref.kv_k), (res.caches.kv_v, ref.kv_v)):
+        np.testing.assert_allclose(
+            np.asarray(a[:, :, :T_CTX], np.float32),
+            np.asarray(b[:, :, :T_CTX], np.float32),
+            atol=2e-2, rtol=2e-2,
+        )
+
+
+# ---------------------------------------------------------------------------
+# tcp: server-side injection + malformed-frame accounting (slow-marked)
+# ---------------------------------------------------------------------------
+
+
+def _socket_or_skip():
+    try:
+        s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        s.bind(("127.0.0.1", 0))
+        s.close()
+    except OSError as e:  # sandboxed CI without loopback sockets
+        pytest.skip(f"sockets unavailable: {e}")
+
+
+@pytest.mark.slow
+def test_tcp_server_faults_are_survivable_with_retry(ffix):
+    _socket_or_skip()
+    from repro.streaming.transport import TcpStoreServer, TcpTransport
+
+    plan = FaultPlan(seed=2, drop_p=0.25, corrupt_p=0.15, stall_p=0.05,
+                     stall_scale_s=0.05, wall_cap_s=0.2)
+    server = TcpStoreServer(ffix["store"], pace_gbps=0.5, fault_plan=plan)
+    try:
+        transport = TcpTransport.for_server(server)
+        trace = BandwidthTrace.constant(2.0 * ffix["u"])
+        res = _mk_session(
+            ffix,
+            retry_policy=RetryPolicy(
+                max_attempts=4, backoff_s=0.01, degrade=True
+            ),
+        ).run("ctx", ffix["tokens"], NetworkModel(trace), transport=transport)
+        assert res.status == "ok"
+        assert int(res.caches.length[0]) == T_CTX
+        assert server.n_injected_faults > 0
+        assert server.n_connections > 0
+        # injected drops/corruptions surfaced as detected failures client-side
+        # (injected stalls under the client timeout merely slow the fetch)
+        assert res.n_failed_attempts > 0
+        assert res.n_retries > 0
+    finally:
+        server.close()
+
+
+@pytest.mark.slow
+def test_tcp_server_counts_malformed_frames_and_lives_on(ffix):
+    _socket_or_skip()
+    import struct
+
+    from repro.streaming.transport import TcpStoreServer, TcpTransport
+
+    server = TcpStoreServer(ffix["store"])
+    try:
+        # 1. raw garbage that never frames a request
+        s = socket.create_connection(server.address, timeout=5)
+        s.sendall(struct.pack(">I", 12) + b"\xde\xad\xbe\xef not msgpack")
+        s.close()
+        # 2. a well-framed but semantically bogus request
+        s = socket.create_connection(server.address, timeout=5)
+        import msgpack
+
+        s.sendall(
+            struct.pack(">I", len(msgpack.packb([42])))
+            + msgpack.packb([42])
+        )
+        s.close()
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and server.n_malformed < 1:
+            time.sleep(0.01)
+        assert server.n_malformed >= 1
+        assert server.last_errors  # reasons retained for debugging
+        # the server still serves real fetches afterwards
+        transport = TcpTransport.for_server(server)
+        h = transport.fetch_run("ctx", [(0, 1)])
+        res = h.result(timeout=10)
+        assert res.blobs[0] == ffix["store"].get_kv("ctx", 0, 1)
+    finally:
+        server.close()

@@ -298,6 +298,43 @@ def test_as_completed_yields_in_completion_order(tfix):
     assert order == [True, False]
 
 
+def test_as_completed_timeout_raises_with_stragglers_in_flight(tfix):
+    """The total-wait timeout must surface as TimeoutError (ISSUE 6 uses
+    this to bound how long a scheduler waits on a wedged link), and handles
+    that did complete before expiry are still yielded first."""
+    store = tfix["store"]
+    nb = tfix["metas"][0].sizes[0]
+    gbps = nb * 8 / 1e9  # 1 s virtual transfer per chunk
+    net = NetworkModel(BandwidthTrace.constant(gbps))
+    slow = SimTransport(store, net, time_scale=30.0)  # ~30 s wall: wedged
+    fast = SimTransport(store, net, time_scale=0.0)
+    h_slow = slow.fetch_run("ctx", [(0, 0)])
+    h_fast = fast.fetch_run("ctx", [(1, 0)])
+    gen = as_completed([h_slow, h_fast], timeout=0.5)
+    assert next(gen) is h_fast
+    with pytest.raises(TimeoutError, match="still in flight"):
+        next(gen)
+    h_slow.cancel()
+
+
+def test_cancelled_fetch_error_names_context_and_chunks(tfix):
+    """cancel() must produce an attributable FetchError: under concurrent
+    serving a bare 'fetch cancelled' is undebuggable (ISSUE 6 satellite)."""
+    from repro.streaming.transport import FetchError
+
+    store = tfix["store"]
+    nb = tfix["metas"][0].sizes[0]
+    net = NetworkModel(BandwidthTrace.constant(nb * 8 / 1e9))
+    tr = SimTransport(store, net, time_scale=30.0)
+    h = tr.fetch_run("ctx", [(0, 1), (1, 1)])
+    h.cancel()
+    with pytest.raises(FetchError) as ei:
+        h.result(timeout=10)
+    msg = str(ei.value)
+    assert "context 'ctx'" in msg, msg
+    assert "(chunk, level)=[(0, 1), (1, 1)]" in msg, msg
+
+
 def test_materialize_via_transport_matches_direct(tfix):
     streamer, eng, tokens = tfix["streamer"], tfix["eng"], tfix["tokens"]
     trace = BandwidthTrace.constant(100 * tfix["u"])
