@@ -1,0 +1,300 @@
+"""Content-addressed tiered KV store: dedup + hot-tier economics (ISSUE 7).
+
+A multi-tenant serving wave where every tenant's context opens with the
+same document (the RAG / system-prompt sharing pattern the paper's §8
+"context sharing" discussion anticipates): ``SHARED_CHUNKS`` of each
+tenant's ``N_CHUNKS`` are byte-identical prefixes, and only the tail
+diverges per tenant.  Because causal attention makes a token's KV a
+function of its prefix alone, the shared chunks carry identical KV — the
+chain-hashed :class:`~repro.streaming.storage.TieredKVStore` stores them
+once, where the flat :class:`~repro.streaming.storage.KVStore` stores one
+copy per tenant.
+
+Measured, mode by mode (same tenants, same traces, virtual clock):
+
+* ``flat``      — the PR 1 store: per-context blobs, no sharing, no tiers;
+* ``tiered``    — never-evict capacity: dedup only (the differential mode —
+  must be bit-identical to ``flat`` end to end);
+* ``warm``      — hot tier sized to the *unique* working set: everything
+  stays hot, TTFT must match ``flat`` while holding ~1/dedup the bytes;
+* ``cold``      — ``hot_bytes=0``: every read pays the modeled cold-tier
+  surcharge (``tier_penalty``), the TTFT floor the hot tier buys back;
+* ``pressure``  — hot tier at a fraction of the working set: eviction +
+  demotion churn with reads still bit-correct (counters reported).
+
+Acceptance (written into the report):
+
+* storage bytes drop >= 2x vs flat on the shared-prefix tenant wave
+  (``dedup_ratio = flat_bytes / tiered_unique_bytes``);
+* the warm hot tier's hit rate strictly exceeds the cold baseline's, with
+  TTFT no worse than flat at equal capacity;
+* the no-evict tiered-vs-flat differential is bit-identical (configs,
+  TTFT, caches) for every tenant — also enforced in tier-1
+  ``tests/test_store.py``;
+* under pressure every read stays bit-identical to flat and no demotion
+  ever loses the last replica (misses == 0).
+
+Results go to ``BENCH_store.json`` at the repo root (CI artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+BENCH_STORE_FILENAME = "BENCH_store.json"
+_BENCH_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", BENCH_STORE_FILENAME
+)
+
+ARCH = "smollm-360m"
+CTX_LEN = 100
+CHUNK_TOKENS = 20
+N_CHUNKS = CTX_LEN // CHUNK_TOKENS  # 5
+SHARED_CHUNKS = 4  # tenants share a 4-chunk document prefix, tails diverge
+N_TENANTS = 8
+SLO_S = 1.25
+PRESSURE_FRAC = 0.35  # hot tier sized to ~1/3 of the unique working set
+
+
+def build_assets(seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import registry
+    from repro.core import codec as kvcodec
+    from repro.models import build
+    from repro.serving.engine import Engine
+    from repro.serving.kv_layout import caches_to_codec_kv
+
+    cfg = registry.get(ARCH).tiny()
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    engine = Engine(cfg, params, cache_capacity=CTX_LEN + 32)
+    rng = np.random.default_rng(seed)
+    doc = rng.integers(
+        0, cfg.vocab_size, size=SHARED_CHUNKS * CHUNK_TOKENS
+    ).astype(np.int32)
+    tenants = []
+    for i in range(N_TENANTS):
+        tail = rng.integers(
+            0, cfg.vocab_size, size=CTX_LEN - len(doc)
+        ).astype(np.int32)
+        toks = np.concatenate([doc, tail])[None, :]  # (1, CTX_LEN)
+        _, caches = engine.calculate_kv({"tokens": jnp.asarray(toks)})
+        kv = caches_to_codec_kv(caches, 0, CTX_LEN)
+        tenants.append((f"tenant{i}", toks, kv))
+    ctab = kvcodec.profile([tenants[0][2]], kvcodec.CodecConfig(precision=10))
+    return dict(cfg=cfg, engine=engine, ctab=ctab, tenants=tenants)
+
+
+def run(
+    *,
+    out_path: Optional[str] = _BENCH_PATH,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    import jax
+
+    from repro.serving.session import ServeSession
+    from repro.streaming import (
+        BandwidthTrace,
+        CacheGenStreamer,
+        KVStore,
+        NetworkModel,
+        TieredKVStore,
+    )
+
+    assets = build_assets(seed)
+    cfg, engine, ctab, tenants = (
+        assets["cfg"], assets["engine"], assets["ctab"], assets["tenants"],
+    )
+    recompute_s = lambda t, p: 40.0 * SLO_S * t / CTX_LEN  # noqa: E731
+
+    def fill(store):
+        for cid, toks, kv in tenants:
+            tokens = (
+                toks[0].tolist() if hasattr(store, "chunk_hashes") else None
+            )
+            store.store_kv(cid, kv, chunk_tokens=CHUNK_TOKENS, tokens=tokens)
+        return store
+
+    # -- storage: dedup ratio on the shared-prefix wave ---------------------
+    flat = fill(KVStore(ctab))
+    tiered = fill(TieredKVStore(ctab))
+    flat_bytes = sum(flat.storage_bytes(cid) for cid, _, _ in tenants)
+    unique_bytes = tiered.unique_storage_bytes()
+    assert tiered.logical_storage_bytes() == flat_bytes
+    dedup_ratio = flat_bytes / max(unique_bytes, 1)
+    n_unique_chunks = SHARED_CHUNKS + N_TENANTS * (N_CHUNKS - SHARED_CHUNKS)
+    storage = {
+        "n_tenants": N_TENANTS,
+        "shared_chunks": SHARED_CHUNKS,
+        "n_chunks_per_tenant": N_CHUNKS,
+        "flat_bytes": int(flat_bytes),
+        "tiered_unique_bytes": int(unique_bytes),
+        "dedup_ratio": float(dedup_ratio),
+        "dedup_chunks": int(tiered.n_dedup_chunks),
+        "encoded_chunks": int(tiered.n_encoded_chunks),
+        "expected_unique_chunks": n_unique_chunks,
+    }
+    if verbose:
+        print(
+            f"[storage] flat={flat_bytes / 1e3:.1f} KB "
+            f"unique={unique_bytes / 1e3:.1f} KB "
+            f"dedup={dedup_ratio:.2f}x "
+            f"(encoded {tiered.n_encoded_chunks}, "
+            f"deduped {tiered.n_dedup_chunks} chunks)"
+        )
+
+    # -- serving: one session per tenant, same traces per mode --------------
+    u = sum(m.sizes[1] for m in flat.meta("tenant0")) * 8.0 / 1e9
+    rng = np.random.default_rng(seed + 1)
+    traces = [
+        [
+            BandwidthTrace.constant(2.0 * u),
+            BandwidthTrace.steps(0.2, [1.5 * u, 0.8 * u]),
+            BandwidthTrace.sampled(rng, 6, 0.2, 0.6 * u, 4.0 * u),
+        ][i % 3]
+        for i in range(N_TENANTS)
+    ]
+
+    def run_wave(store) -> dict:
+        streamer = CacheGenStreamer(store, cfg)
+        sessions = []
+        for (cid, toks, _), tr in zip(tenants, traces):
+            sess = ServeSession(
+                streamer, engine, slo_s=SLO_S, recompute_s=recompute_s,
+                decode_bytes_per_s=1e9, max_run_tokens=2 * CHUNK_TOKENS,
+            )
+            sessions.append(
+                sess.run(cid, toks, NetworkModel(tr),
+                         prior_throughput_gbps=float(tr.gbps[0]))
+            )
+        ttfts = [s.ttft_s for s in sessions]
+        row = {
+            "ttft_p50_s": float(np.median(ttfts)),
+            "ttft_max_s": float(np.max(ttfts)),
+            "slo_hit_rate": float(np.mean([t <= SLO_S for t in ttfts])),
+            "n_cold_hit_fetches": int(sum(s.n_cold_hits for s in sessions)),
+        }
+        counters = getattr(store, "tier_counters", None)
+        if callable(counters):
+            c = counters()
+            served = c["hot_hits"] + c["cold_hits"]
+            row["tier"] = c
+            row["hot_hit_rate"] = c["hot_hits"] / max(served, 1)
+        return row, sessions
+
+    modes = {}
+    modes["flat"], flat_sessions = run_wave(fill(KVStore(ctab)))
+    modes["tiered"], tiered_sessions = run_wave(fill(TieredKVStore(ctab)))
+    modes["warm"], _ = run_wave(
+        fill(TieredKVStore(ctab, hot_bytes=unique_bytes))
+    )
+    modes["cold"], _ = run_wave(
+        fill(TieredKVStore(ctab, hot_bytes=0, promote_on_read=False))
+    )
+    pressure_store = fill(
+        TieredKVStore(ctab, hot_bytes=int(PRESSURE_FRAC * unique_bytes),
+                      level_priorities={})
+    )
+    modes["pressure"], _ = run_wave(pressure_store)
+    if verbose:
+        for name, row in modes.items():
+            extra = (
+                f" hot_hit_rate={row['hot_hit_rate']:.2f}"
+                if "hot_hit_rate" in row else ""
+            )
+            print(
+                f"[{name:>8}] ttft_p50={row['ttft_p50_s'] * 1e3:.1f} ms "
+                f"slo_hit={row['slo_hit_rate']:.2f} "
+                f"cold_fetches={row['n_cold_hit_fetches']}{extra}"
+            )
+
+    # -- differential: never-evict tiered == flat, tenant by tenant ---------
+    differential = {
+        "configs_equal": bool(all(
+            a.configs == b.configs
+            for a, b in zip(tiered_sessions, flat_sessions)
+        )),
+        "ttft_equal": bool(all(
+            abs(a.ttft_s - b.ttft_s) < 1e-12
+            for a, b in zip(tiered_sessions, flat_sessions)
+        )),
+        "caches_bit_identical": bool(all(
+            np.array_equal(np.asarray(a.caches.kv_k), np.asarray(b.caches.kv_k))
+            and np.array_equal(
+                np.asarray(a.caches.kv_v), np.asarray(b.caches.kv_v)
+            )
+            for a, b in zip(tiered_sessions, flat_sessions)
+        )),
+        "no_cold_reads": bool(
+            modes["tiered"]["n_cold_hit_fetches"] == 0
+        ),
+    }
+
+    # -- pressure-mode correctness: churn never corrupts or loses a blob ----
+    pc = pressure_store.tier_counters()
+    pressure_ok = pc["misses"] == 0
+    for cid, _, _ in tenants:
+        for ci in range(N_CHUNKS):
+            for lvl in range(ctab.config.n_levels):
+                pressure_ok = pressure_ok and (
+                    pressure_store.get_kv(cid, ci, lvl)
+                    == flat.get_kv(cid, ci, lvl)
+                )
+
+    acceptance = {
+        "dedup_ratio_at_least_2x": dedup_ratio >= 2.0,
+        "warm_hit_rate_beats_cold_baseline": (
+            modes["warm"]["hot_hit_rate"] > modes["cold"]["hot_hit_rate"]
+        ),
+        "warm_ttft_no_worse_than_flat": (
+            modes["warm"]["ttft_p50_s"] <= modes["flat"]["ttft_p50_s"] + 1e-9
+        ),
+        "cold_ttft_slower_than_warm": (
+            modes["cold"]["ttft_p50_s"] > modes["warm"]["ttft_p50_s"]
+        ),
+        "no_evict_differential_bit_identical": all(differential.values()),
+        "pressure_reads_bit_identical_no_loss": pressure_ok,
+    }
+    acceptance = {k: bool(v) for k, v in acceptance.items()}
+    report = {
+        "host_backend": jax.default_backend(),
+        "workload": {
+            "arch": ARCH,
+            "ctx_len": CTX_LEN,
+            "chunk_tokens": CHUNK_TOKENS,
+            "n_tenants": N_TENANTS,
+            "shared_chunks": SHARED_CHUNKS,
+            "slo_s": SLO_S,
+            "pressure_frac": PRESSURE_FRAC,
+            "seed": seed,
+        },
+        "storage": storage,
+        "modes": modes,
+        "differential": differential,
+        "pressure_counters": pc,
+        "acceptance": acceptance,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        if verbose:
+            print(f"wrote {os.path.abspath(out_path)}")
+    if verbose:
+        print("acceptance:", acceptance)
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(seed=args.seed)

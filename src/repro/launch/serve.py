@@ -29,6 +29,16 @@ session whose in-flight fetch is known to land past its SLO deadline (plus
 realized rows are suspended into a snapshot, and it resumes on the next
 free row.
 
+``--store tiered`` (ISSUE 7) swaps the flat context-keyed store for the
+content-addressed :class:`~repro.streaming.storage.TieredKVStore`: chunks
+are chain-hashed over the token prefix (shared document prefixes dedup
+across contexts), a ``--hot-bytes``-bounded hot tier sits over the cold
+tier (``--store-dir`` for an on-disk cold backend), eviction is level-aware
+LRU with demotion write-through, and cold-tier hits report their slower
+fetch timing to the session's throughput estimator.  Per-tier counters are
+printed at exit; over ``--transport tcp`` the protocol carries the hash
+keys and the server reads content-addressed.
+
 ``--transport`` picks the fetch path (ISSUE 4): ``sim`` (default) paces
 real asynchronous store reads against the request's bandwidth trace —
 simulator-differential, so ``--check-sim`` still holds; ``local`` reads the
@@ -124,6 +134,19 @@ def main() -> None:
                          "must incur before its session is preemptible")
     ap.add_argument("--arrival-seed", type=int, default=0,
                     help="seed for poisson:RATE arrival draws")
+    ap.add_argument("--store", choices=("flat", "tiered"), default="flat",
+                    help="storage layout: flat = context-keyed, keeps "
+                         "everything forever; tiered = content-addressed "
+                         "(chain-hashed token prefixes dedup across "
+                         "contexts) with a capacity-bounded hot tier over "
+                         "cold, level-aware LRU eviction, and cold-read "
+                         "penalties fed to the throughput estimator")
+    ap.add_argument("--hot-bytes", type=int, default=None, metavar="N",
+                    help="--store tiered: hot-tier capacity in bytes "
+                         "(default: never evict; 0 = everything cold)")
+    ap.add_argument("--store-dir", default=None, metavar="DIR",
+                    help="--store tiered: directory for the cold tier "
+                         "(default: in-memory cold backend)")
     ap.add_argument("--transport", choices=("sim", "local", "tcp"),
                     default="sim",
                     help="fetch path: sim = trace-paced async reads "
@@ -209,9 +232,23 @@ def main() -> None:
     n_cached = args.ctx_len + (cfg.n_prefix_tokens if cfg.family == "vlm" else 0)
     kv = caches_to_codec_kv(caches, 0, n_cached)
     tables = kvcodec.profile([kv], kvcodec.CodecConfig(precision=11))
-    store = KVStore(tables)
+    if args.store == "tiered":
+        from repro.streaming import DirectoryBackend, TieredKVStore
+
+        store = TieredKVStore(
+            tables,
+            hot_bytes=args.hot_bytes,
+            cold=DirectoryBackend(args.store_dir) if args.store_dir else None,
+        )
+    else:
+        store = KVStore(tables)
     streamer = CacheGenStreamer(store, cfg)
-    store.store_kv("ctx", kv, chunk_tokens=max(args.ctx_len // 4, 50))
+    store.store_kv(
+        "ctx", kv, chunk_tokens=max(args.ctx_len // 4, 50),
+        # canonical token-chain hashing when the KV rows are 1:1 with
+        # text tokens; a vlm's prefix rows aren't, so hash KV bytes there
+        tokens=tokens[0].tolist() if tokens.shape[1] == n_cached else None,
+    )
     print(f"[serve] context stored: {store.storage_bytes('ctx')/1e3:.1f} KB all levels")
 
     # fetch path: sim (default, per-request trace pacing), local, or a real
@@ -260,7 +297,12 @@ def main() -> None:
             serve_store, pace_gbps=args.tcp_pace_gbps,
             fault_plan=fault_plan if inflight_faults else None,
         )
-        transport = TcpTransport.for_server(tcp_server)
+        transport = TcpTransport.for_server(
+            tcp_server,
+            # content-addressed protocol: the client sends hash keys when
+            # the store has them, and the server reads by (hash, level)
+            hash_lookup=getattr(serve_store, "try_hash", None),
+        )
         print(f"[serve] tcp store server on {tcp_server.address} "
               f"paced at {args.tcp_pace_gbps} Gbps")
 
@@ -300,6 +342,18 @@ def main() -> None:
     )
 
     def close_server():
+        counters = getattr(serve_store, "tier_counters", None)
+        if callable(counters):
+            c = counters()
+            print(
+                f"[serve] tiered store: hot_hits={c['hot_hits']} "
+                f"cold_hits={c['cold_hits']} misses={c['misses']} "
+                f"demotions={c['demotions']} evictions={c['evictions']} "
+                f"dedup_chunks={c['dedup_chunks']} "
+                f"hot={c['hot_used_bytes']/1e3:.1f}/"
+                f"{min(c['hot_capacity_bytes'], 1 << 40)/1e3:.1f} KB "
+                f"unique={c['unique_bytes']/1e3:.1f} KB"
+            )
         if tcp_server is None:
             return
         tcp_server.close()

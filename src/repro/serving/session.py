@@ -171,6 +171,12 @@ class SessionResult:
     def n_hedged(self) -> int:
         return sum(1 for t in self.timelines if t.hedged)
 
+    @property
+    def n_cold_hits(self) -> int:
+        """Chunk fetches that touched the tiered store's cold tier (their
+        slower realized timing already fed the throughput estimator)."""
+        return sum(1 for t in self.timelines if t.cold_hit)
+
     def level_histogram(self) -> Dict[int, int]:
         """Realized streaming-config histogram (TEXT keyed as -1)."""
         hist: Dict[int, int] = {}
@@ -513,9 +519,9 @@ class SessionTask:
                 res = handle.result()
                 if self.session.validate_blobs:
                     validate_blob(res.blobs[0], m, config)
-                self.timelines.append(
-                    self.clock.account(m, config, nbytes, res, scale)
-                )
+                tl = self.clock.account(m, config, nbytes, res, scale)
+                tl.cold_hit = getattr(res, "cold_entries", 0) > 0
+                self.timelines.append(tl)
                 return self._advance(m, config, res.blobs[0])
             return self._resolve_with_policy(
                 policy, handle, m, config, nbytes, scale
@@ -597,6 +603,7 @@ class SessionTask:
         tl = self.clock.account(m, config, nbytes, res, scale)
         tl.n_retries = self._chunk_retries
         tl.fault_fallback = bool(self._banned)
+        tl.cold_hit = getattr(res, "cold_entries", 0) > 0
         self.timelines.append(tl)
         return self._advance(m, config, res.blobs[0])
 

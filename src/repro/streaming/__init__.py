@@ -4,7 +4,10 @@ from repro.streaming.adaptation import (  # noqa: F401
     NoFeasibleConfigError,
     make_policy,
 )
-from repro.streaming.calibration import measured_decode_bytes_per_s  # noqa: F401
+from repro.streaming.calibration import (  # noqa: F401
+    measured_decode_bytes_per_s,
+    measured_level_priorities,
+)
 from repro.streaming.faults import (  # noqa: F401
     Fault,
     FaultPlan,
@@ -19,10 +22,14 @@ from repro.streaming.network import (  # noqa: F401
 )
 from repro.streaming.pipeline import StreamResult, simulate_stream  # noqa: F401
 from repro.streaming.storage import (  # noqa: F401
+    HASH_CHAIN_VERSION,
     DirectoryBackend,
     KVStore,
     MemoryBackend,
     StorageBackend,
+    TieredKVStore,
+    chain_hashes,
+    token_payloads,
 )
 from repro.streaming.streamer import (  # noqa: F401
     CacheGenStreamer,

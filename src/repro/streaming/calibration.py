@@ -33,30 +33,44 @@ from typing import Dict, List, Optional, Tuple
 __all__ = [
     "DEFAULT_DECODE_BYTES_PER_S",
     "BENCH_CODEC_FILENAME",
+    "BENCH_SESSION_FILENAME",
     "bench_codec_candidates",
+    "bench_session_candidates",
     "clear_calibration_cache",
     "measured_decode_bytes_per_s",
     "measured_contention_factors",
+    "measured_level_priorities",
     "measured_text_contention_factors",
 ]
 
 DEFAULT_DECODE_BYTES_PER_S = 4e9
 BENCH_CODEC_FILENAME = "BENCH_codec.json"
+BENCH_SESSION_FILENAME = "BENCH_session.json"
 _ENV_VAR = "CACHEGEN_BENCH_CODEC"
+_ENV_SESSION = "CACHEGEN_BENCH_SESSION"
+
+
+def _candidates(env_var: str, filename: str) -> List[str]:
+    cands = []
+    env = os.environ.get(env_var)
+    if env:
+        cands.append(env)
+    cands.append(os.path.join(os.getcwd(), filename))
+    repo_root = os.path.dirname(  # streaming/ -> repro/ -> src/ -> repo
+        os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    )
+    cands.append(os.path.join(repo_root, filename))
+    return cands
 
 
 def bench_codec_candidates() -> List[str]:
     """Candidate paths for the microbench's codec throughput report."""
-    cands = []
-    env = os.environ.get(_ENV_VAR)
-    if env:
-        cands.append(env)
-    cands.append(os.path.join(os.getcwd(), BENCH_CODEC_FILENAME))
-    repo_root = os.path.dirname(  # streaming/ -> repro/ -> src/ -> repo
-        os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    )
-    cands.append(os.path.join(repo_root, BENCH_CODEC_FILENAME))
-    return cands
+    return _candidates(_ENV_VAR, BENCH_CODEC_FILENAME)
+
+
+def bench_session_candidates() -> List[str]:
+    """Candidate paths for the session benchmark's scenario report."""
+    return _candidates(_ENV_SESSION, BENCH_SESSION_FILENAME)
 
 
 _MEMO: dict = {}
@@ -185,6 +199,45 @@ def measured_contention_factors(
 
     sig = tuple(_file_sig(p) for p in cands)
     return dict(_memoized(("contention", cands, backend), sig, compute))
+
+
+def measured_level_priorities(
+    path: Optional[str] = None,
+) -> Dict[int, float]:
+    """Per-level hot-tier keep priority from realized session decisions.
+
+    Reads ``BENCH_session.json``'s per-scenario ``levels`` histograms (what
+    Algorithm 1 *actually picked* on this host's traces) and returns each
+    stored level's pick fraction — the tiered store's eviction seed: levels
+    the adapter never chooses get priority 0.0 and leave the hot tier
+    first.  TEXT (level ``-1``) recomputes from raw text and occupies no
+    store space, so it is excluded.  Returns ``{}`` when no session report
+    exists (the store then falls back to pure LRU).
+    """
+    import jax
+
+    backend = jax.default_backend()
+    cands = tuple([path] if path else bench_session_candidates())
+
+    def extract(report):
+        counts: Dict[int, int] = {}
+        for sc in report["scenarios"]:
+            for lvl, n in (sc.get("levels") or {}).items():
+                level = int(lvl)
+                if level < 0:
+                    continue  # TEXT: not stored, nothing to evict
+                counts[level] = counts.get(level, 0) + int(n)
+        total = sum(counts.values())
+        if total <= 0:
+            return None
+        return {lvl: c / total for lvl, c in sorted(counts.items())}
+
+    def compute():
+        pri = _first_measurement(cands, backend, extract)
+        return {} if pri is None else pri
+
+    sig = tuple(_file_sig(p) for p in cands)
+    return dict(_memoized(("level_priorities", cands, backend), sig, compute))
 
 
 def measured_text_contention_factors(

@@ -206,7 +206,25 @@ class FaultyBackend:
 def with_faulty_backend(store: KVStore, plan: FaultPlan) -> KVStore:
     """A read view of ``store`` whose backend injects ``plan``'s storage
     faults.  Chunk metadata (and therefore fetch pricing) is shared with the
-    clean store — faults corrupt bytes, not the catalog."""
+    clean store — faults corrupt bytes, not the catalog.
+
+    Tiered stores (``TieredKVStore``) get their *cold* tier wrapped: the
+    plan models durable-storage rot, and the in-process hot tier masks it —
+    a fault only reaches a reader whose entry is not (or no longer) hot,
+    which is exactly the eviction x faults surface.  The view shares the
+    clean store's index state (metadata, refcounts, LRU), so reads/evictions
+    through either object see one store; use the view's ``cold`` attribute
+    (the :class:`FaultyBackend`) for injection counters.  Note the plan's
+    keys are *hash* strings here, not context ids — draws stay deterministic
+    per (hash, level), independent of which context reads the blob."""
+    from repro.streaming.storage import TieredKVStore
+
+    if isinstance(store, TieredKVStore):
+        import copy
+
+        out = copy.copy(store)  # shares _meta/_refcount/_hash_levels/_hot_lru
+        out.cold = out.backend = FaultyBackend(store.cold, plan)
+        return out
     out = KVStore(store.tables, backend=FaultyBackend(store.backend, plan))
     out._meta = store._meta
     return out

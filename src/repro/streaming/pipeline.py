@@ -155,6 +155,7 @@ class ChunkTimeline:
     duplicate_bytes: float = 0.0  # bytes the cancelled hedge loser moved
     n_retries: int = 0  # failed fetch attempts retried before this one landed
     fault_fallback: bool = False  # config was re-decided after fetch failures
+    cold_hit: bool = False  # any entry of this fetch was served cold (tiered)
 
 
 @dataclasses.dataclass

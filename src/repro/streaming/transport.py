@@ -199,6 +199,7 @@ class FetchResult:
     loser_cancelled: bool = False
     loser_bytes_read: int = 0
     completion_order: Tuple[int, ...] = ()  # chunk_idx in arrival order
+    cold_entries: int = 0  # entries served from the cold tier (tiered store)
 
 
 @runtime_checkable
@@ -311,6 +312,18 @@ def as_completed(handles: Sequence[FetchHandle], timeout: Optional[float] = None
             ) from None
 
 
+def _probe_cold(store, context_id: str, chunk_levels: ChunkLevels) -> int:
+    """How many of a run's entries would be served cold right now (0 for a
+    flat store — only the tiered store exposes ``tier_penalty``)."""
+    penalty = getattr(store, "tier_penalty", None)
+    if not callable(penalty):
+        return 0
+    try:
+        return penalty(context_id, chunk_levels)[1]
+    except Exception:
+        return 0
+
+
 # ---------------------------------------------------------------------------
 # LocalTransport: direct store read
 # ---------------------------------------------------------------------------
@@ -341,6 +354,9 @@ class LocalTransport:
         handle = FetchHandle(context_id, chunk_levels)
 
         def work():
+            # tier probe before the reads promote everything hot; wall
+            # timing below then includes the cold tier's actual read cost
+            cold_entries = _probe_cold(self.store, context_id, chunk_levels)
             t0 = time.perf_counter()
             try:
                 blobs = [
@@ -360,6 +376,7 @@ class LocalTransport:
                 throughput_gbps=nbytes * 8.0 / max(wall, 1e-9) / 1e9,
                 wall_s=wall,
                 completion_order=tuple(ci for ci, _ in chunk_levels),
+                cold_entries=cold_entries,
             ))
 
         threading.Thread(target=work, daemon=True).start()
@@ -477,14 +494,34 @@ class SimTransport:
             return failed
         key_chunk = chunk_levels[0][0] if chunk_levels else 0
 
+        # tiered store: entries not currently hot pay the cold tier's
+        # modeled read surcharge — folded into the fetch's virtual timing
+        # *before* the reads below promote them, so the session's
+        # throughput estimator sees the slower fetch and re-plans around
+        # tier misses (a flat store has no tier_penalty: surcharge 0)
+        tier_penalty = getattr(self.store, "tier_penalty", None)
+        tier_extra_s, cold_entries = (
+            tier_penalty(context_id, chunk_levels)
+            if callable(tier_penalty)
+            else (0.0, 0)
+        )
+
         # virtual truth, computed once at issue: who wins, and when
         outcome = self.network.fetch_outcome(
             float(nbytes), start_t, chunk_idx=key_chunk,
             hedge_after_s=hedge_after_s,
         )
+        if tier_extra_s > 0:
+            end_t = outcome.end_t + tier_extra_s
+            dur = max(end_t - start_t, 1e-9)
+            outcome = dataclasses.replace(
+                outcome,
+                end_t=end_t,
+                throughput_gbps=float(nbytes) * 8.0 / dur / 1e9,
+            )
         primary_dur = self.network.fetch_time(
             float(nbytes), start_t, chunk_idx=key_chunk, attempt=0
-        )
+        ) + tier_extra_s
         hedge_issued = outcome.hedge_issued
         attempts = [_Attempt(nbytes, primary_dur, self.time_scale)]
         if hedge_issued:
@@ -548,6 +585,7 @@ class SimTransport:
                 loser_cancelled=loser.cancelled.is_set() if loser else False,
                 loser_bytes_read=loser.bytes_read if loser else 0,
                 completion_order=tuple(ci for ci, _ in chunk_levels),
+                cold_entries=cold_entries,
             ))
 
         threading.Thread(target=coordinate, daemon=True).start()
@@ -589,8 +627,16 @@ class TcpStoreServer:
     """Length-prefixed socket server fronting a :class:`KVStore`.
 
     Request: one msgpack frame ``{cid, chunks: [[ci, lvl], ...], straggle,
-    attempt}``.  Response: one msgpack header frame ``{ok, sizes | error}``
-    followed by each blob as a raw frame.  ``pace_gbps`` throttles the blob
+    attempt}``, optionally carrying ``hashes: [key | nil, ...]`` aligned
+    with ``chunks`` — when the fronted store is content-addressed
+    (``TieredKVStore``), a non-nil hash key is served directly via
+    ``get_by_hash`` (two tenants sharing a document prefix hit the same
+    blob without the server consulting either tenant's catalog); nil
+    entries and flat stores fall back to the ``(cid, chunk, level)`` path.
+    Response: one msgpack header frame ``{ok, sizes | error}``
+    followed by each blob as a raw frame.  ``tier_stats()`` snapshots the
+    fronted store's per-tier hit/miss/demotion counters (empty for a flat
+    store) — the multi-tenant deployment's observability surface.  ``pace_gbps`` throttles the blob
     stream into timed slices (an actual paced link, not a sleep-at-the-end
     model); ``straggler_p`` injects a keyed Pareto stall per
     ``(chunk_idx, attempt)`` before the payload — the same
@@ -687,6 +733,12 @@ class TcpStoreServer:
                     req = msgpack.unpackb(_recv_frame(conn), raw=False)
                     cid = req["cid"]
                     chunks = [(int(c), int(lv)) for c, lv in req["chunks"]]
+                    hashes = req.get("hashes")
+                    if hashes is not None and len(hashes) != len(chunks):
+                        raise ValueError(
+                            f"hashes length {len(hashes)} != chunks "
+                            f"length {len(chunks)}"
+                        )
                 except ConnectionError:
                     raise  # peer vanished before sending a full request
                 except Exception as e:
@@ -694,9 +746,15 @@ class TcpStoreServer:
                         self.n_malformed += 1
                     self._note_error(f"malformed request frame: {e!r}")
                     return
+                get_by_hash = getattr(self.store, "get_by_hash", None)
+                if hashes is None or not callable(get_by_hash):
+                    hashes = [None] * len(chunks)
                 try:
                     blobs = [
-                        self.store.get_kv(cid, ci, lvl) for ci, lvl in chunks
+                        get_by_hash(h, lvl)
+                        if h is not None
+                        else self.store.get_kv(cid, ci, lvl)
+                        for h, (ci, lvl) in zip(hashes, chunks)
                     ]
                 except KeyError as e:
                     _send_frame(conn, msgpack.packb(
@@ -766,6 +824,12 @@ class TcpStoreServer:
             if lag > 0:
                 time.sleep(lag)
 
+    def tier_stats(self) -> dict:
+        """Per-tier hit/miss/demotion counters of the fronted store
+        (``{}`` when the store is flat — no tiers, nothing to report)."""
+        counters = getattr(self.store, "tier_counters", None)
+        return dict(counters()) if callable(counters) else {}
+
     # -- lifecycle ---------------------------------------------------------
 
     def close(self) -> None:
@@ -824,6 +888,13 @@ class TcpTransport:
     ``hedge_after_s`` (real seconds) after the first if it hasn't finished,
     the first completion wins, and the loser's socket is closed mid-stream
     (``duplicate_bytes`` = the loser's realized byte counter).
+
+    ``hash_lookup`` (optional, ``(context_id, chunk_idx) -> key | None``) is
+    the client-side manifest for a content-addressed server: when it yields
+    keys, the request frame carries them as ``hashes`` and the server reads
+    by ``(hash, level)`` instead of the per-context catalog.  A lookup that
+    answers None (or raises) for a chunk falls back to the context-keyed
+    path for that entry — old servers ignore the extra field entirely.
     """
 
     realtime = True  # handles resolve on actual link time
@@ -835,11 +906,26 @@ class TcpTransport:
         *,
         connect_timeout_s: float = 5.0,
         io_timeout_s: float = 30.0,
+        hash_lookup=None,
     ):
         self.host = host
         self.port = port
         self.connect_timeout_s = connect_timeout_s
         self.io_timeout_s = io_timeout_s
+        self.hash_lookup = hash_lookup
+
+    def _hashes_for(
+        self, context_id: str, chunk_levels: List[Tuple[int, int]]
+    ) -> Optional[List[Optional[str]]]:
+        if self.hash_lookup is None:
+            return None
+        hashes: List[Optional[str]] = []
+        for ci, _lvl in chunk_levels:
+            try:
+                hashes.append(self.hash_lookup(context_id, ci))
+            except Exception:
+                hashes.append(None)
+        return hashes if any(h is not None for h in hashes) else None
 
     @staticmethod
     def for_server(server: TcpStoreServer, **kw) -> "TcpTransport":
@@ -866,12 +952,16 @@ class TcpTransport:
                 # nothing to close then) — abort before requesting anything,
                 # or the "cancelled" loser would stream the whole payload
                 raise FetchError("attempt cancelled before request")
-            _send_frame(sock, msgpack.packb({
+            req = {
                 "cid": context_id,
                 "chunks": [list(c) for c in chunk_levels],
                 "straggle": attempt_idx == 0,
                 "attempt": attempt_idx,
-            }))
+            }
+            hashes = self._hashes_for(context_id, chunk_levels)
+            if hashes is not None:
+                req["hashes"] = hashes
+            _send_frame(sock, msgpack.packb(req))
             header = msgpack.unpackb(_recv_frame(sock, attempt.counter), raw=False)
             if not header.get("ok"):
                 raise KeyError(header.get("error", "storage error"))

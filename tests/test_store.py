@@ -1,0 +1,663 @@
+"""Content-addressed, prefix-sharing KV store with tiered eviction (ISSUE 7).
+
+Covers the :class:`~repro.streaming.storage.TieredKVStore` stack:
+  * chain-hash construction: versioned keys, prefix-sharing (equal token
+    prefixes -> equal keys up to the divergence point), namespace isolation,
+    canonical LE-uint32 token payloads;
+  * dedup + refcounts: shared document prefixes encode once, per-hash
+    refcounts track cross-context sharing and reconcile to zero on delete;
+  * atomic ``DirectoryBackend.put``: a writer killed mid-publish leaves the
+    previous blob intact (or a clean ``KeyError`` for fresh keys) and no
+    temp-file debris;
+  * differential: a tiered store with never-evict capacity is bit-identical
+    to the flat :class:`KVStore` oracle through a full ``ServeSession`` and
+    both schedulers (the zero-fault pattern from tests/test_faults.py);
+  * tiering: level-aware eviction keeps measured-priority levels hot,
+    demotion writes through to cold before dropping the last hot replica,
+    and ``SimTransport`` folds ``tier_penalty`` into fetch timing so an
+    all-cold store reports slower fetches (and a higher TTFT) than all-hot;
+  * eviction x faults: a fetch landing on an entry evicted/deleted behind
+    the reader classifies as ``missing`` and takes the PR 6 degrade ladder;
+    tier counters reconcile exactly with ``FaultPlan`` injection counts;
+  * property test (`tests/_hyp` shim): random context families sharing
+    random-length prefixes under random get/evict/delete interleavings keep
+    stored bytes equal to the unique-chunk total, reconcile refcounts to
+    zero after deletes, and never let eviction drop the last replica of a
+    referenced hash or corrupt a subsequently-read blob (CRC-verified);
+  * tcp (slow-marked): the request frame's ``hashes`` key serves reads by
+    ``(hash, level)`` and ``tier_stats`` exposes per-tier counters.
+"""
+import os
+import socket
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import codec as kvcodec
+from repro.serving.session import ServeSession
+from repro.streaming import (
+    HASH_CHAIN_VERSION,
+    CacheGenStreamer,
+    DirectoryBackend,
+    FaultPlan,
+    KVStore,
+    MemoryBackend,
+    RetryPolicy,
+    SimTransport,
+    TieredKVStore,
+    chain_hashes,
+    token_payloads,
+    with_faulty_backend,
+)
+from repro.streaming.network import BandwidthTrace, NetworkModel
+from repro.streaming.storage import split_chunks
+
+from tests._hyp import given, settings, st
+
+T_CTX = 100
+CHUNK = 20  # 5 chunks
+
+_ASSETS = None
+
+
+def _assets():
+    """Module-level lazy build: shared by fixtures AND the property test
+    (the `_hyp` fallback wraps @given tests zero-arg, so no fixtures)."""
+    global _ASSETS
+    if _ASSETS is None:
+        from repro.configs import registry
+        from repro.models import build
+        from repro.serving.engine import Engine
+        from repro.serving.kv_layout import caches_to_codec_kv
+
+        rng = np.random.default_rng(0)
+        cfg = registry.get("smollm-360m").tiny()
+        model = build(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, cache_capacity=T_CTX + 40)
+        tokens = rng.integers(0, cfg.vocab_size, size=(1, T_CTX)).astype(np.int32)
+        _, caches = eng.calculate_kv({"tokens": jnp.asarray(tokens)})
+        kv = caches_to_codec_kv(caches, 0, T_CTX)
+        ctab = kvcodec.profile([kv], kvcodec.CodecConfig(precision=10))
+        flat = KVStore(ctab)
+        flat.store_kv("ctx", kv, chunk_tokens=CHUNK)
+        tiered = TieredKVStore(ctab)  # never-evict capacity
+        tiered.store_kv(
+            "ctx", kv, chunk_tokens=CHUNK, tokens=tokens[0].tolist()
+        )
+        metas = flat.meta("ctx")
+        u = sum(m.sizes[1] for m in metas) * 8 / 1e9
+        _ASSETS = dict(
+            cfg=cfg, eng=eng, tokens=tokens, kv=kv, ctab=ctab, flat=flat,
+            tiered=tiered, metas=metas, u=u,
+            flat_streamer=CacheGenStreamer(flat, cfg),
+            tiered_streamer=CacheGenStreamer(tiered, cfg),
+        )
+    return _ASSETS
+
+
+@pytest.fixture(scope="module")
+def sfix():
+    return _assets()
+
+
+_R_SLOW = lambda t, p: 100.0  # noqa: E731 — TEXT never short-circuits
+
+
+def _mk_session(fx, which="tiered", **kw) -> ServeSession:
+    return ServeSession(
+        fx[f"{which}_streamer"], fx["eng"], slo_s=1.0,
+        recompute_s=kw.pop("rc", _R_SLOW), decode_bytes_per_s=1e9, **kw,
+    )
+
+
+def _kv_np(caches):
+    return (
+        np.asarray(caches.kv_k[:, :, :T_CTX], np.float32),
+        np.asarray(caches.kv_v[:, :, :T_CTX], np.float32),
+    )
+
+
+def _n_levels(fx):
+    return fx["ctab"].config.n_levels
+
+
+# ---------------------------------------------------------------------------
+# chain hashes: versioned, prefix-sharing, namespaced
+# ---------------------------------------------------------------------------
+
+
+def test_chain_hash_keys_are_versioned_and_deterministic():
+    payloads = [b"alpha", b"beta", b"gamma"]
+    keys = chain_hashes(payloads)
+    assert keys == chain_hashes(payloads)  # pure function of the inputs
+    assert len(keys) == 3 and len(set(keys)) == 3
+    for k in keys:
+        assert k.startswith(f"{HASH_CHAIN_VERSION}-")
+        assert len(k) == len(HASH_CHAIN_VERSION) + 1 + 40
+    # the chain covers the *whole* prefix: same chunk content at a different
+    # position hashes differently
+    assert chain_hashes([b"alpha", b"alpha"])[0] != \
+        chain_hashes([b"alpha", b"alpha"])[1]
+    # namespaces never alias (different codec config -> different keys)
+    assert chain_hashes(payloads, namespace="a") != \
+        chain_hashes(payloads, namespace="b")
+
+
+def test_chain_hash_prefix_sharing():
+    a = [b"doc", b"doc2", b"tail-a"]
+    b = [b"doc", b"doc2", b"tail-b"]
+    ka, kb = chain_hashes(a), chain_hashes(b)
+    assert ka[:2] == kb[:2]  # shared prefix -> shared keys
+    assert ka[2] != kb[2]  # first divergent chunk breaks the chain
+    # ...and every later chunk too, even if its bytes re-converge
+    assert chain_hashes(a + [b"same"])[3] != chain_hashes(b + [b"same"])[3]
+
+
+def test_token_payloads_canonical_le_uint32():
+    bounds = split_chunks(5, 2)
+    assert bounds == [(0, 2), (2, 4), (4, 5)]
+    p = token_payloads([1, 2, 3, 4, 5], bounds)
+    assert p[0] == np.asarray([1, 2], "<u4").tobytes()
+    assert p[2] == np.asarray([5], "<u4").tobytes()
+    assert all(len(x) % 4 == 0 for x in p)
+
+
+def test_chunk_hashes_tokens_vs_kv_bytes(sfix):
+    ts = sfix["tiered"]
+    bounds = split_chunks(T_CTX, CHUNK)
+    toks = sfix["tokens"][0].tolist()
+    by_tok = ts.chunk_hashes(sfix["kv"], bounds, toks)
+    assert by_tok == [m.chunk_hash for m in ts.meta("ctx")]
+    # fallback (no tokens): hashes over raw KV bytes — a distinct domain
+    by_kv = ts.chunk_hashes(sfix["kv"], bounds)
+    assert by_kv != by_tok
+    # token length must match the KV token axis
+    with pytest.raises(ValueError, match="tokens length"):
+        ts.chunk_hashes(sfix["kv"], bounds, toks[:-1])
+
+
+# ---------------------------------------------------------------------------
+# dedup + refcounts (tentpole: prefix sharing across contexts)
+# ---------------------------------------------------------------------------
+
+
+def test_shared_prefix_dedups_and_refcounts_reconcile(sfix):
+    ts = TieredKVStore(sfix["ctab"])
+    base = sfix["tokens"][0].tolist()
+    # B shares A's first 3 chunks, then diverges
+    other = base[: 3 * CHUNK] + [(t + 1) % sfix["cfg"].vocab_size
+                                 for t in base[3 * CHUNK:]]
+    ma = ts.store_kv("A", sfix["kv"], chunk_tokens=CHUNK, tokens=base)
+    enc_before = ts.n_encoded_chunks
+    mb = ts.store_kv("B", sfix["kv"], chunk_tokens=CHUNK, tokens=other)
+    assert [m.chunk_hash for m in ma[:3]] == [m.chunk_hash for m in mb[:3]]
+    assert ma[3].chunk_hash != mb[3].chunk_hash
+    assert ts.n_dedup_chunks == 3  # shared chunks were not re-encoded
+    assert ts.n_encoded_chunks == enc_before + 2
+    for m in ma[:3]:
+        assert ts.refcount(m.chunk_hash) == 2
+    for m in ma[3:] + mb[3:]:
+        assert ts.refcount(m.chunk_hash) == 1
+    # physical < logical: sharing is real savings
+    assert ts.unique_storage_bytes() < ts.logical_storage_bytes()
+    assert ts.logical_storage_bytes() == \
+        sum(sum(m.sizes.values()) for m in ma + mb)
+    # reads through either context are bit-identical to the flat oracle
+    for ci in range(len(ma)):
+        for lvl in range(_n_levels(sfix)):
+            want = sfix["flat"].get_kv("ctx", ci, lvl)
+            assert ts.get_kv("A", ci, lvl) == want
+            assert ts.get_kv("B", ci, lvl) == want
+    # deleting A keeps B readable (shared blobs survive on refcount)
+    assert ts.delete_context("A") is True
+    assert ts.delete_context("A") is False
+    for m in mb:
+        assert ts.refcount(m.chunk_hash) == 1
+        assert ts.get_kv("B", m.chunk_idx, 1) == \
+            sfix["flat"].get_kv("ctx", m.chunk_idx, 1)
+    # deleting B reconciles everything to zero
+    assert ts.delete_context("B") is True
+    assert ts.unique_storage_bytes() == 0
+    assert ts._refcount == {} and ts._hash_levels == {}
+    assert ts._hot_used == 0 and not ts._hot_lru
+
+
+def test_restore_same_context_releases_old_references(sfix):
+    ts = TieredKVStore(sfix["ctab"])
+    toks = sfix["tokens"][0].tolist()
+    ma = ts.store_kv("A", sfix["kv"], chunk_tokens=CHUNK, tokens=toks)
+    # re-store under different tokens: old hashes must be released, not leak
+    other = [(t + 7) % sfix["cfg"].vocab_size for t in toks]
+    mb = ts.store_kv("A", sfix["kv"], chunk_tokens=CHUNK, tokens=other)
+    for m in ma:
+        assert ts.refcount(m.chunk_hash) == 0
+    for m in mb:
+        assert ts.refcount(m.chunk_hash) == 1
+    assert ts.unique_storage_bytes() == sum(sum(m.sizes.values()) for m in mb)
+
+
+# ---------------------------------------------------------------------------
+# atomic DirectoryBackend.put (satellite: kill a write partway)
+# ---------------------------------------------------------------------------
+
+
+def test_directory_put_is_atomic_under_mid_write_kill(tmp_path):
+    import repro.streaming.storage as storage_mod
+
+    be = DirectoryBackend(str(tmp_path))
+    be.put("c", 0, 1, b"the old committed blob")
+
+    def killed(src, dst):
+        raise RuntimeError("writer killed before publish")
+
+    orig = storage_mod.os.replace
+    storage_mod.os.replace = killed
+    try:
+        # overwrite dies mid-write: the old blob must survive untouched
+        with pytest.raises(RuntimeError, match="killed"):
+            be.put("c", 0, 1, b"half-written replacement that never lands")
+        # fresh key dies mid-write: clean absence, not a truncated file
+        with pytest.raises(RuntimeError, match="killed"):
+            be.put("fresh", 9, 0, b"never published")
+    finally:
+        storage_mod.os.replace = orig
+    assert be.get("c", 0, 1) == b"the old committed blob"
+    with pytest.raises(KeyError, match="context 'fresh' chunk 9 level 0"):
+        be.get("fresh", 9, 0)
+    # no temp-file debris left behind either way
+    assert not [p for p in os.listdir(str(tmp_path)) if ".tmp." in p]
+    # and a healthy writer publishes fine afterwards
+    be.put("c", 0, 1, b"new blob")
+    assert be.get("c", 0, 1) == b"new blob"
+
+
+def test_directory_backend_as_cold_tier(tmp_path, sfix):
+    ts = TieredKVStore(
+        sfix["ctab"], hot_bytes=0, cold=DirectoryBackend(str(tmp_path))
+    )
+    ts.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                tokens=sfix["tokens"][0].tolist())
+    assert len(os.listdir(str(tmp_path))) == \
+        (T_CTX // CHUNK) * _n_levels(sfix)  # one file per (hash, level)
+    blob = ts.get_kv("ctx", 0, 1)
+    assert blob == sfix["flat"].get_kv("ctx", 0, 1)
+    assert ts.n_cold_hits > 0 and ts.n_hot_hits == 0
+
+
+# ---------------------------------------------------------------------------
+# differential: never-evict tiered == flat oracle (session + both schedulers)
+# ---------------------------------------------------------------------------
+
+
+def test_never_evict_tiered_session_is_bit_identical_to_flat(sfix):
+    trace = BandwidthTrace.steps(0.2, [2.0 * sfix["u"], 0.6 * sfix["u"]])
+    rc = lambda t, p: 0.04 * t / CHUNK  # noqa: E731
+    base = _mk_session(sfix, "flat", rc=rc).run(
+        "ctx", sfix["tokens"], NetworkModel(trace)
+    )
+    tier = _mk_session(sfix, "tiered", rc=rc).run(
+        "ctx", sfix["tokens"], NetworkModel(trace)
+    )
+    assert tier.status == "ok"
+    assert tier.configs == base.configs
+    assert [t.nbytes for t in tier.timelines] == \
+        [t.nbytes for t in base.timelines]
+    assert abs(tier.ttft_s - base.ttft_s) < 1e-12
+    for a, b in zip(_kv_np(tier.caches), _kv_np(base.caches)):
+        assert np.array_equal(a, b)
+    # everything stayed hot: no cold reads, no tier surcharge anywhere
+    assert tier.n_cold_hits == 0
+    assert sfix["tiered"].n_misses == 0
+
+
+def test_never_evict_tiered_schedulers_bit_identical_to_flat(sfix):
+    from repro.serving.scheduler import (
+        ConcurrentScheduler,
+        ContinuousScheduler,
+        SessionRequest,
+    )
+
+    u = sfix["u"]
+    traces = [
+        BandwidthTrace.constant(2.0 * u),
+        BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u]),
+        BandwidthTrace.steps(0.15, [2.0 * u, 0.4 * u] * 2),
+    ]
+    rc = lambda t, p: 0.04 * t / CHUNK  # noqa: E731
+
+    def reqs(which, arrivals=None):
+        return [
+            SessionRequest(
+                _mk_session(sfix, which, rc=rc), "ctx", sfix["tokens"],
+                NetworkModel(tr), prior_throughput_gbps=float(tr.gbps[0]),
+                start_t=0.0 if arrivals is None else arrivals[i],
+            )
+            for i, tr in enumerate(traces)
+        ]
+
+    base = ConcurrentScheduler(sfix["eng"]).run(reqs("flat"))
+    tier = ConcurrentScheduler(sfix["eng"]).run(reqs("tiered"))
+    assert tier.n_failed == 0
+    for a, b in zip(tier.sessions, base.sessions):
+        assert a.configs == b.configs
+        assert abs(a.ttft_s - b.ttft_s) < 1e-12
+        for x, y in zip(_kv_np(a.caches), _kv_np(b.caches)):
+            assert np.array_equal(x, y)
+
+    arr = [0.0, 0.1, 0.2]
+    cbase = ContinuousScheduler(sfix["eng"], rows=2).run(reqs("flat", arr))
+    ctier = ContinuousScheduler(sfix["eng"], rows=2).run(reqs("tiered", arr))
+    assert ctier.n_failed == 0
+    for a, b in zip(ctier.sessions, cbase.sessions):
+        assert a.configs == b.configs
+        assert abs(a.ttft_s - b.ttft_s) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# tiering: level-aware eviction, demotion write-through, cold-read penalty
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_demotes_and_reads_stay_bit_identical(sfix):
+    n_lvl = _n_levels(sfix)
+    total = sum(sum(m.sizes.values()) for m in sfix["metas"])
+    ts = TieredKVStore(sfix["ctab"], hot_bytes=total // 4,
+                       level_priorities={})  # pure LRU
+    ts.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                tokens=sfix["tokens"][0].tolist())
+    assert ts.n_evictions > 0
+    assert ts.n_demotions == ts.n_evictions  # every victim was referenced
+    assert ts._hot_used <= ts.hot_bytes
+    # nothing was lost and nothing was corrupted
+    for ci in range(T_CTX // CHUNK):
+        for lvl in range(n_lvl):
+            assert ts.get_kv("ctx", ci, lvl) == \
+                sfix["flat"].get_kv("ctx", ci, lvl)
+    assert ts.n_cold_hits > 0  # some of those reads really came from cold
+    assert ts.n_promotions > 0  # ...and were promoted back
+    c = ts.tier_counters()
+    assert c["hot_hits"] + c["cold_hits"] == (T_CTX // CHUNK) * n_lvl
+    assert c["misses"] == 0
+
+
+def test_level_priorities_keep_measured_levels_hot(sfix):
+    n_lvl = _n_levels(sfix)
+    keep = n_lvl - 1
+    lvl2_bytes = sum(m.sizes[keep] for m in sfix["metas"])
+    biggest = max(max(m.sizes.values()) for m in sfix["metas"])
+    ts = TieredKVStore(
+        sfix["ctab"], hot_bytes=lvl2_bytes + biggest,
+        level_priorities={keep: 1.0},  # unmeasured levels default to 0.0
+    )
+    ts.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                tokens=sfix["tokens"][0].tolist())
+    # every blob of the prioritized level survived the capacity pressure...
+    for m in ts.meta("ctx"):
+        assert (m.chunk_hash, keep) in ts._hot_lru
+    # ...while only lower-priority levels were evicted (and demoted)
+    assert ts.n_evictions > 0
+    not_hot = {
+        (m.chunk_hash, lvl)
+        for m in ts.meta("ctx")
+        for lvl in range(n_lvl)
+        if (m.chunk_hash, lvl) not in ts._hot_lru
+    }
+    assert not_hot and all(lvl != keep for _, lvl in not_hot)
+    # demoted blobs still read bit-identically from cold
+    for h, lvl in not_hot:
+        ci = next(m.chunk_idx for m in ts.meta("ctx") if m.chunk_hash == h)
+        assert ts.get_kv("ctx", ci, lvl) == sfix["flat"].get_kv("ctx", ci, lvl)
+
+
+def test_tier_penalty_prices_cold_entries(sfix):
+    ts = TieredKVStore(sfix["ctab"], hot_bytes=0, cold_latency_s=0.002,
+                       cold_gbps=2.0)
+    metas = ts.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                        tokens=sfix["tokens"][0].tolist())
+    run = [(0, 1), (1, 1)]
+    extra, n_cold = ts.tier_penalty("ctx", run)
+    want = sum(0.002 + metas[ci].sizes[lvl] * 8 / (2.0 * 1e9)
+               for ci, lvl in run)
+    assert n_cold == 2
+    assert abs(extra - want) < 1e-12
+    # TEXT (-1) and unknown contexts price as zero, not as errors
+    assert ts.tier_penalty("ctx", [(0, -1)]) == (0.0, 0)
+    assert ts.tier_penalty("nope", run) == (0.0, 0)
+    # a flat store has no tiers: never-evict pays nothing
+    assert sfix["tiered"].tier_penalty("ctx", run) == (0.0, 0)
+
+
+def test_cold_store_reports_slower_fetch_than_hot(sfix):
+    cold = TieredKVStore(sfix["ctab"], hot_bytes=0, promote_on_read=False)
+    cold.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                  tokens=sfix["tokens"][0].tolist())
+    trace = BandwidthTrace.constant(400 * sfix["u"])
+    hot_res = _mk_session(sfix, "tiered").run(
+        "ctx", sfix["tokens"], NetworkModel(trace)
+    )
+    cold_sess = ServeSession(
+        CacheGenStreamer(cold, sfix["cfg"]), sfix["eng"], slo_s=1.0,
+        recompute_s=_R_SLOW, decode_bytes_per_s=1e9,
+    )
+    cold_res = cold_sess.run("ctx", sfix["tokens"], NetworkModel(trace))
+    assert cold_res.status == "ok" and hot_res.status == "ok"
+    # the cold tier's surcharge reached the session's clock and timelines
+    assert cold_res.ttft_s > hot_res.ttft_s
+    assert cold_res.n_cold_hits == len(cold_res.timelines)
+    assert hot_res.n_cold_hits == 0
+    assert cold.n_cold_hits > 0 and cold.n_hot_hits == 0
+    # the decoded caches are still bit-identical: slower, never different
+    for a, b in zip(_kv_np(cold_res.caches), _kv_np(hot_res.caches)):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# eviction x faults: missing classification + counter reconciliation
+# ---------------------------------------------------------------------------
+
+
+def test_entry_deleted_behind_reader_takes_degrade_ladder(sfix):
+    ts = TieredKVStore(sfix["ctab"])
+    ts.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                tokens=sfix["tokens"][0].tolist())
+    # the reader planned its fetch; chunk 2 then vanishes from both tiers
+    # at every level (eviction-without-demotion would look exactly like
+    # this — the fault surface the degrade ladder must absorb)
+    for lvl in range(_n_levels(sfix)):
+        assert ts.delete_kv("ctx", 2, lvl) is True
+    sess = ServeSession(
+        CacheGenStreamer(ts, sfix["cfg"]), sfix["eng"], slo_s=1.0,
+        recompute_s=_R_SLOW, decode_bytes_per_s=1e9,
+        retry_policy=RetryPolicy(max_attempts=2, backoff_s=0.01),
+    )
+    trace = BandwidthTrace.constant(400 * sfix["u"])
+    res = sess.run("ctx", sfix["tokens"], NetworkModel(trace))
+    assert res.status == "ok"
+    assert int(res.caches.length[0]) == T_CTX
+    assert res.fault_counts.get("missing", 0) > 0
+    assert res.fault_counts.get("missing", 0) == ts.n_misses
+    assert res.n_degrades + res.n_fault_text > 0  # the ladder was taken
+
+
+def test_eviction_x_faults_counters_reconcile(sfix):
+    plan = FaultPlan(seed=11, missing_p=0.3)
+    ts = TieredKVStore(sfix["ctab"], hot_bytes=0)  # every read lands cold
+    ts.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                tokens=sfix["tokens"][0].tolist())
+    fstore = with_faulty_backend(ts, plan)
+    trace = BandwidthTrace.constant(400 * sfix["u"])
+    net = NetworkModel(trace)
+    sess = ServeSession(
+        CacheGenStreamer(fstore, sfix["cfg"]), sfix["eng"], slo_s=1.0,
+        recompute_s=_R_SLOW, decode_bytes_per_s=1e9,
+        retry_policy=RetryPolicy(max_attempts=3, backoff_s=0.01),
+    )
+    res = sess.run("ctx", sfix["tokens"], net,
+                   transport=SimTransport(fstore, net))
+    assert res.status == "ok"
+    assert int(res.caches.length[0]) == T_CTX
+    # exact three-way reconciliation: every injected missing read was (1)
+    # counted by the faulty cold tier, (2) classified by the session, and
+    # (3) a store-level tier miss — no fault was double-counted or lost
+    assert res.fault_counts.get("missing", 0) == fstore.cold.n_missing_reads
+    assert fstore.n_misses == fstore.cold.n_missing_reads > 0
+    assert fstore.n_hot_hits == 0  # hot_bytes=0: the hot tier masks nothing
+    assert fstore.n_cold_hits > 0  # the non-faulted reads really landed
+    # the view shares blobs/meta with the clean store, which is untouched
+    assert ts.get_kv("ctx", 0, 1) == sfix["flat"].get_kv("ctx", 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# property test: random families, random interleavings (satellite)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**20),
+    n_contexts=st.integers(2, 4),
+    hot_frac=st.floats(0.0, 1.2),
+    n_ops=st.integers(5, 25),
+)
+def test_random_families_and_interleavings_hold_invariants(
+    seed, n_contexts, hot_frac, n_ops
+):
+    fx = _assets()
+    n_lvl = _n_levels(fx)
+    n_chunks = T_CTX // CHUNK
+    rng = np.random.default_rng(seed)
+    base = fx["tokens"][0].tolist()
+    flat_total = fx["flat"].storage_bytes("ctx")
+    ts = TieredKVStore(fx["ctab"], hot_bytes=int(hot_frac * flat_total),
+                       level_priorities={})
+    # random family: context i shares a random-length prefix with the base
+    # sequence, then diverges (same KV bytes — sharing is a token property)
+    live = {}
+    for i in range(n_contexts):
+        k = int(rng.integers(0, T_CTX + 1))
+        toks = base[:k] + [int((t + i + 1) % fx["cfg"].vocab_size)
+                           for t in base[k:]]
+        live[f"c{i}"] = ts.store_kv(f"c{i}", fx["kv"], chunk_tokens=CHUNK,
+                                    tokens=toks)
+
+    def check_invariants():
+        # stored bytes == the unique-chunk total, exactly
+        uniq = {}
+        for metas in live.values():
+            for m in metas:
+                for lvl, sz in m.sizes.items():
+                    uniq[(m.chunk_hash, lvl)] = sz
+        assert ts.unique_storage_bytes() == sum(uniq.values())
+        assert ts.logical_storage_bytes() == sum(
+            sum(m.sizes.values()) for metas in live.values() for m in metas
+        )
+        # refcounts == number of live contexts referencing each hash
+        refs = {}
+        for metas in live.values():
+            for m in metas:
+                refs[m.chunk_hash] = refs.get(m.chunk_hash, 0) + 1
+        for h, n in refs.items():
+            assert ts.refcount(h) == n
+        assert ts._hot_used <= max(ts.hot_bytes, 0)
+
+    check_invariants()
+    for _ in range(n_ops):
+        op = ["get", "get", "evict", "delete"][int(rng.integers(4))]
+        if op == "get" and live:
+            cid = sorted(live)[int(rng.integers(len(live)))]
+            ci = int(rng.integers(n_chunks))
+            lvl = int(rng.integers(n_lvl))
+            blob = ts.get_kv(cid, ci, lvl)  # CRC-verified inside the store
+            # eviction/demotion never corrupted it: bit-equal to the oracle
+            assert blob == fx["flat"].get_kv("ctx", ci, lvl)
+        elif op == "evict":
+            ts.evict_hot(int(rng.integers(1, 4)))
+        elif op == "delete" and len(live) > 1:
+            cid = sorted(live)[int(rng.integers(len(live)))]
+            assert ts.delete_context(cid) is True
+            del live[cid]
+            check_invariants()
+    # eviction never dropped the last replica of a referenced hash: every
+    # surviving (chunk, level) of every surviving context still reads clean
+    for cid in live:
+        for ci in range(n_chunks):
+            for lvl in range(n_lvl):
+                assert ts.get_kv(cid, ci, lvl) == \
+                    fx["flat"].get_kv("ctx", ci, lvl)
+    check_invariants()
+    # deleting the rest reconciles everything to zero
+    for cid in list(live):
+        assert ts.delete_context(cid) is True
+        del live[cid]
+    assert ts.unique_storage_bytes() == 0
+    assert ts._refcount == {} and ts._hash_levels == {}
+    assert ts._hot_used == 0 and not ts._hot_lru
+
+
+# ---------------------------------------------------------------------------
+# tcp: hash-keyed request frames + per-tier counters (slow-marked)
+# ---------------------------------------------------------------------------
+
+
+def _socket_or_skip():
+    try:
+        s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        s.bind(("127.0.0.1", 0))
+        s.close()
+    except OSError as e:  # sandboxed CI without loopback sockets
+        pytest.skip(f"sockets unavailable: {e}")
+
+
+@pytest.mark.slow
+def test_tcp_hash_keyed_fetch_and_tier_stats(sfix):
+    _socket_or_skip()
+    from repro.streaming.transport import TcpStoreServer, TcpTransport
+
+    ts = sfix["tiered"]
+    server = TcpStoreServer(ts)
+    try:
+        run = [(0, 1), (2, 2), (4, 0)]
+        want = [sfix["flat"].get_kv("ctx", ci, lvl) for ci, lvl in run]
+
+        # hash-keyed path: the request frame carries the chain-hash keys
+        hits0 = ts.n_hot_hits
+        t_hash = TcpTransport.for_server(server, hash_lookup=ts.try_hash)
+        assert t_hash._hashes_for("ctx", run) == \
+            [ts.hash_for("ctx", ci) for ci, _ in run]
+        res = t_hash.fetch_run("ctx", run).result(timeout=10)
+        assert res.blobs == want
+        assert ts.n_hot_hits == hits0 + len(run)
+
+        # context-keyed fallback: no hashes in the frame, same bytes
+        t_plain = TcpTransport.for_server(server)
+        assert t_plain._hashes_for("ctx", run) is None
+        res2 = t_plain.fetch_run("ctx", run).result(timeout=10)
+        assert res2.blobs == want
+
+        # a lookup that answers None for every chunk omits the field too
+        t_none = TcpTransport.for_server(
+            server, hash_lookup=lambda cid, ci: None
+        )
+        assert t_none._hashes_for("ctx", run) is None
+
+        stats = server.tier_stats()
+        assert stats["hot_hits"] >= 2 * len(run)
+        assert stats["misses"] == 0
+        assert stats["unique_bytes"] == ts.unique_storage_bytes()
+    finally:
+        server.close()
+
+
+@pytest.mark.slow
+def test_tcp_flat_store_has_no_tier_stats(sfix):
+    _socket_or_skip()
+    from repro.streaming.transport import TcpStoreServer
+
+    server = TcpStoreServer(sfix["flat"])
+    try:
+        assert server.tier_stats() == {}
+    finally:
+        server.close()
