@@ -1,0 +1,329 @@
+"""Byte-range resumable fetch: salvage vs. whole-blob retry (ISSUE 8).
+
+PR 6 made faults survivable but wasteful: any failed fetch threw away every
+byte it had realized and refetched the whole blob.  ISSUE 8 makes the wire
+format self-delimiting (head / anchor / delta-run segments, each with its
+own CRC), so a failed or cancelled fetch keeps its checksum-verified byte
+prefix and the retry moves only the missing suffix — or, on degrade, only
+the coarser level's delta suffix behind the level-invariant anchor.
+
+Two scenarios, both on the deterministic virtual clock:
+
+* **resume vs whole-blob** — the same seeded fault mix (drops, stalls,
+  truncations severing mid-blob) is replayed against a resume-armed
+  session and the PR 6 whole-blob baseline (``resume_fetch=False``, which
+  still measures the wire).  Gates: both complete every context, resume
+  refetches strictly fewer bytes and finishes no later on average, and
+  every troubled chunk reconciles ``salvaged + refetched == wire`` bytes.
+* **mid-chunk collapse** — a falling trace (2 Gbps -> ~0.5 Mbps at t=1ms)
+  collapses under an in-flight level-0 fetch; with ``replan_factor`` the
+  session cancels the straddling chunk once its realized duration blows
+  past the live-estimate prediction, salvages the verified prefix, and
+  re-decides the remainder.  Gates: at least one in-chunk cancel->re-plan
+  fires, the realized cache matches a clean rebuild of the same plan
+  (every landed blob passed its whole-blob CRC, so composed chunks are
+  byte-exact by construction), and the re-planning session meets the SLO
+  that a pinned-config session misses.
+
+Results go to ``BENCH_resume.json`` at the repo root (CI artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+import numpy as np
+
+BENCH_RESUME_FILENAME = "BENCH_resume.json"
+_BENCH_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", BENCH_RESUME_FILENAME
+)
+
+ARCH = "smollm-360m"
+CTX_LEN = 100
+CHUNK_TOKENS = 20  # 5 chunks per context
+N_REQUESTS = 10  # per mode, fault matrix
+SLO_S = 1.0
+# fault mix for the resume-vs-whole-blob matrix: heavy on truncations (the
+# salvageable kind) with drops and stalls mixed in; the realized rate this
+# yields is reported and gated at >= 25%
+DROP_P = 0.08
+STALL_P = 0.07
+TRUNCATE_P = 0.22
+STALL_SCALE_S = 0.6
+ATTEMPT_TIMEOUT_S = 0.5
+REPLAN_FACTOR = 3.0
+
+
+def build_assets(seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import registry
+    from repro.core import codec as kvcodec
+    from repro.models import build
+    from repro.serving.engine import Engine
+    from repro.serving.kv_layout import caches_to_codec_kv
+    from repro.streaming import CacheGenStreamer, KVStore
+
+    cfg = registry.get(ARCH).tiny()
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    engine = Engine(cfg, params, cache_capacity=CTX_LEN + 32)
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab_size, size=(1, CTX_LEN)).astype(np.int32)
+    _, caches = engine.calculate_kv({"tokens": jnp.asarray(tokens)})
+    kv = caches_to_codec_kv(caches, 0, CTX_LEN)
+    ctab = kvcodec.profile([kv], kvcodec.CodecConfig(precision=10))
+    store = KVStore(ctab)
+    streamer = CacheGenStreamer(store, cfg)
+    metas = store.store_kv("ctx", kv, chunk_tokens=CHUNK_TOKENS)
+    u = sum(m.sizes[1] for m in metas) * 8.0 / 1e9  # level-1 ctx in 1 s
+    return dict(engine=engine, streamer=streamer, tokens=tokens, metas=metas, u=u)
+
+
+def run(
+    *,
+    out_path: Optional[str] = _BENCH_PATH,
+    seed: int = 0,
+    n_requests: int = N_REQUESTS,
+    verbose: bool = True,
+) -> dict:
+    import jax
+
+    from repro.serving.session import ServeSession
+    from repro.streaming import (
+        BandwidthTrace,
+        FaultPlan,
+        FaultyTransport,
+        NetworkModel,
+        RetryPolicy,
+        SimTransport,
+    )
+    from repro.streaming.streamer import FetchPlan
+
+    assets = build_assets(seed)
+    engine, streamer, tokens, metas, u = (
+        assets["engine"], assets["streamer"], assets["tokens"],
+        assets["metas"], assets["u"],
+    )
+    store = streamer.store
+    # recompute priced far past the SLO: every chunk rides the fetch path
+    recompute_s = lambda t, p: 40.0 * SLO_S * t / CTX_LEN  # noqa: E731
+
+    def mk_session(**kw) -> ServeSession:
+        return ServeSession(
+            streamer, engine, slo_s=SLO_S,
+            recompute_s=kw.pop("rc", recompute_s),
+            decode_bytes_per_s=1e9, max_run_tokens=2 * CHUNK_TOKENS, **kw,
+        )
+
+    def mk_traces(n: int, tr_seed: int) -> List[object]:
+        rng = np.random.default_rng(tr_seed)
+        shapes = [
+            lambda: BandwidthTrace.constant(400.0 * u),
+            lambda: BandwidthTrace.steps(0.05, [500.0 * u, 250.0 * u]),
+            lambda: BandwidthTrace.sampled(rng, 6, 0.05, 200.0 * u, 600.0 * u),
+        ]
+        return [shapes[i % len(shapes)]() for i in range(n)]
+
+    def oracle_match(res) -> bool:
+        plan = FetchPlan(context_id="ctx", result=res.stream_result(),
+                         metas=metas)
+        ref = streamer.materialize(plan, engine, tokens, batch=1, fused=False)
+        for a, b in ((res.caches.kv_k, ref.kv_k), (res.caches.kv_v, ref.kv_v)):
+            if not np.allclose(
+                np.asarray(a[:, :, :CTX_LEN], np.float32),
+                np.asarray(b[:, :, :CTX_LEN], np.float32),
+                atol=2e-2, rtol=2e-2,
+            ):
+                return False
+        return True
+
+    # --- scenario 1: resume vs whole-blob under a seeded fault mix --------
+
+    policy = RetryPolicy(
+        max_attempts=4, backoff_s=0.01, timeout_s=ATTEMPT_TIMEOUT_S,
+        degrade=True,
+    )
+
+    def run_mode(name: str, resume: bool) -> dict:
+        traces = mk_traces(n_requests, tr_seed=seed + 1)
+        sessions, injected, attempts = [], 0, 0
+        recon_err, recon_chunks = 0.0, 0
+        for r, tr in enumerate(traces):
+            plan = FaultPlan(
+                seed=seed * 10_000 + r,
+                drop_p=DROP_P, stall_p=STALL_P, truncate_p=TRUNCATE_P,
+                stall_scale_s=STALL_SCALE_S,
+            )
+            net = NetworkModel(tr)
+            ft = FaultyTransport(SimTransport(store, net), plan)
+            res = mk_session(
+                retry_policy=policy, resume_fetch=resume,
+            ).run("ctx", tokens, net,
+                  prior_throughput_gbps=float(tr.gbps[0]), transport=ft)
+            sessions.append(res)
+            injected += sum(ft.n_injected.values())
+            attempts += (
+                sum(1 for tl in res.timelines if tl.config >= 0)
+                + res.n_failed_attempts
+            )
+            # per-chunk wire ledger: every troubled chunk reconciles
+            for tl in res.timelines:
+                if tl.wire_bytes > 0:
+                    recon_chunks += 1
+                    recon_err = max(recon_err, abs(
+                        tl.salvaged_bytes + tl.refetched_bytes - tl.wire_bytes
+                    ))
+        ttfts = [s.ttft_s for s in sessions if np.isfinite(s.ttft_s)]
+        row = {
+            "mode": name,
+            "n_requests": n_requests,
+            "completion_rate": float(np.mean([not s.failed for s in sessions])),
+            "mean_completion_s": float(np.mean(ttfts or [float("inf")])),
+            "ttft_p50_s": float(np.median(ttfts or [float("inf")])),
+            "refetched_bytes": float(sum(s.refetched_bytes for s in sessions)),
+            "salvaged_bytes": float(sum(s.salvaged_bytes for s in sessions)),
+            "wire_bytes": float(sum(s.wire_bytes for s in sessions)),
+            "n_resumes": sum(s.n_resumes for s in sessions),
+            "n_retries": sum(s.n_retries for s in sessions),
+            "n_degrades": sum(s.n_degrades for s in sessions),
+            "n_injected": injected,
+            "n_fetch_attempts": attempts,
+            "realized_fault_rate": injected / max(attempts, 1),
+            "reconciled_chunks": recon_chunks,
+            "reconciliation_max_abs_error": float(recon_err),
+            "caches_match_clean_rebuild": bool(
+                all(oracle_match(s) for s in sessions if not s.failed)
+            ),
+        }
+        if verbose:
+            print(
+                f"[{name:>10}] complete={row['completion_rate']:.2f} "
+                f"mean={row['mean_completion_s']*1e3:.1f}ms "
+                f"refetched={row['refetched_bytes']/1e3:.1f}KB "
+                f"salvaged={row['salvaged_bytes']/1e3:.1f}KB "
+                f"resumes={row['n_resumes']} "
+                f"fault_rate={row['realized_fault_rate']:.2f}"
+            )
+        return row
+
+    whole = run_mode("whole_blob", resume=False)
+    resume = run_mode("resume", resume=True)
+
+    # --- scenario 2: mid-chunk bandwidth collapse -------------------------
+
+    # sized so the remaining level-0 bytes overshoot the SLO at the
+    # collapsed rate but the coarsest level still fits: the re-planning
+    # session cancels the straddling fetch and lands within the SLO; a
+    # pinned level-0 session pays full price and misses it
+    collapse = BandwidthTrace.steps(0.001, [2.0, 0.00053])
+    rc = lambda t, p: 0.3  # noqa: E731
+    replanned = mk_session(
+        rc=rc,
+        retry_policy=RetryPolicy(max_attempts=3, backoff_s=0.05, timeout_s=50.0),
+        replan_factor=REPLAN_FACTOR,
+    ).run("ctx", tokens, NetworkModel(collapse, rtt_s=0.0005),
+          prior_throughput_gbps=2.0)
+    pinned = mk_session(rc=rc, fixed_level=0).run(
+        "ctx", tokens, NetworkModel(collapse, rtt_s=0.0005),
+        prior_throughput_gbps=2.0,
+    )
+    midchunk = {
+        "replan_factor": REPLAN_FACTOR,
+        "n_mid_chunk_replans": int(replanned.n_mid_chunk_replans),
+        "n_resumes": int(replanned.n_resumes),
+        "replanned_ttft_s": float(replanned.ttft_s),
+        "replanned_slo_met": bool(not replanned.slo_violated),
+        "replanned_completed": bool(not replanned.failed),
+        "replanned_cache_matches_clean_rebuild": bool(oracle_match(replanned)),
+        "pinned_ttft_s": float(pinned.ttft_s),
+        "pinned_slo_met": bool(not pinned.slo_violated),
+        "salvaged_bytes": float(replanned.salvaged_bytes),
+        "wire_bytes": float(replanned.wire_bytes),
+    }
+    if verbose:
+        print(
+            f"[ mid-chunk] replans={midchunk['n_mid_chunk_replans']} "
+            f"replanned={midchunk['replanned_ttft_s']*1e3:.1f}ms "
+            f"(slo_met={midchunk['replanned_slo_met']}) "
+            f"pinned={midchunk['pinned_ttft_s']*1e3:.1f}ms "
+            f"(slo_met={midchunk['pinned_slo_met']})"
+        )
+
+    acceptance = {
+        "both_modes_complete_all": (
+            whole["completion_rate"] == 1.0 and resume["completion_rate"] == 1.0
+        ),
+        "fault_rate_at_least_25pct": (
+            min(whole["realized_fault_rate"], resume["realized_fault_rate"])
+            >= 0.25
+        ),
+        "resume_strictly_fewer_refetched_bytes": (
+            resume["refetched_bytes"] < whole["refetched_bytes"]
+        ),
+        "resume_lower_mean_completion": (
+            resume["mean_completion_s"] < whole["mean_completion_s"]
+        ),
+        "per_chunk_wire_ledger_reconciles": (
+            resume["reconciliation_max_abs_error"] < 1e-6
+            and whole["reconciliation_max_abs_error"] < 1e-6
+            and resume["reconciled_chunks"] > 0
+        ),
+        "faulted_caches_match_clean_rebuild": (
+            whole["caches_match_clean_rebuild"]
+            and resume["caches_match_clean_rebuild"]
+        ),
+        "midchunk_replan_fired": midchunk["n_mid_chunk_replans"] >= 1,
+        "midchunk_cache_bit_exact": (
+            midchunk["replanned_cache_matches_clean_rebuild"]
+        ),
+        "replan_meets_slo_pinned_misses": (
+            midchunk["replanned_slo_met"] and not midchunk["pinned_slo_met"]
+        ),
+    }
+    acceptance = {k: bool(v) for k, v in acceptance.items()}
+    report = {
+        "host_backend": jax.default_backend(),
+        "workload": {
+            "arch": ARCH,
+            "ctx_len": CTX_LEN,
+            "chunk_tokens": CHUNK_TOKENS,
+            "n_requests": n_requests,
+            "slo_s": SLO_S,
+            "fault_plan": {
+                "drop_p": DROP_P, "stall_p": STALL_P,
+                "truncate_p": TRUNCATE_P, "stall_scale_s": STALL_SCALE_S,
+            },
+            "seed": seed,
+        },
+        "modes": {"whole_blob": whole, "resume": resume},
+        "midchunk": midchunk,
+        "acceptance": acceptance,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        if verbose:
+            print(f"wrote {os.path.abspath(out_path)}")
+    if verbose:
+        print("acceptance:", acceptance)
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=N_REQUESTS)
+    ap.add_argument("--no-write", action="store_true")
+    args = ap.parse_args()
+    run(
+        seed=args.seed,
+        n_requests=args.requests,
+        out_path=None if args.no_write else _BENCH_PATH,
+    )

@@ -322,10 +322,12 @@ def encode_chunk(
     t_idx = jnp.asarray(ct.table_idx)
     aw, an, ax = rans.encode(a_sym, t_idx, a_tab)
     dw, dn, dx = rans.encode(d_sym, t_idx, d_tab)
+    # level-invariant entries (a.*, scales) lead so they form a contiguous
+    # anchor segment in the resumable layout (bitstream.segment_index)
     arrays = {}
     arrays.update(bitstream.pack_stream(np.asarray(aw), np.asarray(an), np.asarray(ax), "a"))
-    arrays.update(bitstream.pack_stream(np.asarray(dw), np.asarray(dn), np.asarray(dx), "d"))
     arrays["scales"] = np.asarray(scales, np.float16)
+    arrays.update(bitstream.pack_stream(np.asarray(dw), np.asarray(dn), np.asarray(dx), "d"))
     return bitstream.pack(_chunk_header(cfg, level, T, L, C, chunk_idx), arrays)
 
 
@@ -737,8 +739,8 @@ def encode_all_levels(
         sl = slice(j * n_lanes, (j + 1) * n_lanes)
         arrays = {}
         arrays.update(a_arrays)
-        arrays.update(bitstream.pack_stream(dw[sl], dn[sl], dx[sl], "d"))
         arrays["scales"] = scales16
+        arrays.update(bitstream.pack_stream(dw[sl], dn[sl], dx[sl], "d"))
         out[lvl] = bitstream.pack(_chunk_header(cfg, lvl, T, L, C, chunk_idx), arrays)
     return out
 

@@ -51,14 +51,26 @@ after S seconds; the loser is cancelled and its bytes are reported as
 duplicate overhead.
 
 ``--fault-*`` injects seeded chaos into the fetch path (ISSUE 6):
-``--fault-drop/-stall/-corrupt`` perturb in-flight fetches (via
+``--fault-drop/-stall/-corrupt/-truncate`` perturb in-flight fetches (via
 :class:`~repro.streaming.faults.FaultyTransport` on sim/local, server-side
-on tcp), ``--fault-missing`` deletes store entries behind the readers'
-backs (:func:`~repro.streaming.faults.with_faulty_backend`).  ``--retry N``
+on tcp; truncate delivers a valid prefix then severs), ``--fault-missing``
+deletes store entries behind the readers' backs
+(:func:`~repro.streaming.faults.with_faulty_backend`).  ``--retry N``
 arms the session's :class:`~repro.streaming.transport.RetryPolicy`
 (bounded attempts, backoff charged to the virtual clock, degrade to
 coarser levels / TEXT unless ``--no-degrade``); without it, injected
 faults reproduce the legacy crash-through behavior.
+
+Byte-range resume (ISSUE 8): with ``--retry`` armed, failed/cancelled
+fetches keep their checksum-verified byte prefix and the next attempt
+refetches only the missing suffix (same level) or only the coarser delta
+suffix on degrade (the level-invariant anchor composes bit-exactly);
+``--no-resume`` restores PR 6 whole-blob retries for comparison.
+``--replan-factor F`` additionally cancels an in-flight chunk on the sim
+transport once its realized duration exceeds F× the live-estimate
+prediction (§C.1 mid-chunk re-planning).  Per-request output then carries
+``salvaged``/``resumes``/``replans`` next to the PR 6 fault counters, and
+the aggregate lines reconcile salvaged + refetched == wire bytes.
 """
 from __future__ import annotations
 
@@ -165,6 +177,9 @@ def main() -> None:
                     help="probability a fetch attempt stalls (Pareto tail)")
     ap.add_argument("--fault-corrupt", type=float, default=0.0, metavar="P",
                     help="probability a fetched payload is bit-flipped")
+    ap.add_argument("--fault-truncate", type=float, default=0.0, metavar="P",
+                    help="probability a fetch delivers a valid byte prefix "
+                         "then severs (resumable with --retry)")
     ap.add_argument("--fault-missing", type=float, default=0.0, metavar="P",
                     help="probability a (chunk, level) entry is missing "
                          "from the store")
@@ -184,6 +199,14 @@ def main() -> None:
                     help="--retry: fail the session once retries are "
                          "exhausted instead of falling back to coarser "
                          "levels / TEXT recompute")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="--retry: discard verified byte prefixes and "
+                         "refetch whole blobs on retry (PR 6 baseline)")
+    ap.add_argument("--replan-factor", type=float, default=None, metavar="F",
+                    help="sim transport: cancel an in-flight chunk whose "
+                         "realized duration exceeds F x the live-estimate "
+                         "prediction, salvage the verified prefix, and "
+                         "re-decide the remainder (mid-chunk re-planning)")
     args = ap.parse_args()
     if args.concurrency < 1:
         raise SystemExit("--concurrency must be >= 1")
@@ -265,12 +288,14 @@ def main() -> None:
     )
 
     fault_plan = None
-    if args.fault_drop or args.fault_stall or args.fault_corrupt or args.fault_missing:
+    if (args.fault_drop or args.fault_stall or args.fault_corrupt
+            or args.fault_truncate or args.fault_missing):
         fault_plan = FaultPlan(
             seed=args.fault_seed,
             drop_p=args.fault_drop,
             stall_p=args.fault_stall,
             corrupt_p=args.fault_corrupt,
+            truncate_p=args.fault_truncate,
             missing_p=args.fault_missing,
             stall_scale_s=args.fault_stall_scale,
         )
@@ -284,6 +309,7 @@ def main() -> None:
     )
     inflight_faults = fault_plan is not None and bool(
         args.fault_drop or args.fault_stall or args.fault_corrupt
+        or args.fault_truncate
     )
 
     tcp_server = None
@@ -339,6 +365,8 @@ def main() -> None:
         hedge_after_s=args.hedge_after,
         transport=transport,
         retry_policy=retry_policy,
+        resume_fetch=not args.no_resume,
+        replan_factor=args.replan_factor,
     )
 
     def close_server():
@@ -364,6 +392,14 @@ def main() -> None:
                 f"malformed={tcp_server.n_malformed} "
                 f"injected={tcp_server.n_injected_faults}"
             )
+        stats = getattr(transport, "tier_stats", None)
+        if callable(stats):
+            s = stats()
+            print(
+                f"[serve] tcp client: connects={s.get('n_connects', 0)} "
+                f"reconnects={s.get('n_reconnects', 0)} "
+                f"pool_reuses={s.get('n_pool_reuses', 0)}"
+            )
 
     names = {TEXT: "TEXT"}
 
@@ -374,6 +410,12 @@ def main() -> None:
                 f" retries={res.n_retries} degrades={res.n_degrades} "
                 f"faults={res.fault_counts}"
             )
+            if retry_policy is not None:
+                fault += (
+                    f" salvaged={res.salvaged_bytes/1e3:.1f}KB "
+                    f"resumes={res.n_resumes} "
+                    f"replans={res.n_mid_chunk_replans}"
+                )
         if res.failed:
             print(
                 f"[req {r}] FAILED ({res.failure}) "
@@ -442,13 +484,20 @@ def main() -> None:
             describe(r, res, extra)
         ttfts = sorted(s.ttft_s for s in out.sessions)
         p = lambda q: ttfts[min(int(q * len(ttfts)), len(ttfts) - 1)]  # noqa: E731
+        resume = ""
+        if retry_policy is not None:
+            resume = (
+                f" salvaged={sum(s.salvaged_bytes for s in out.sessions)/1e3:.1f}KB"
+                f" fetch_resumes={sum(s.n_resumes for s in out.sessions)}"
+                f" replans={sum(s.n_mid_chunk_replans for s in out.sessions)}"
+            )
         print(
             f"[open-loop rows={out.n_rows}] ttft p50={p(0.5)*1e3:.1f} ms "
             f"p95={p(0.95)*1e3:.1f} ms preemptions={out.n_preemptions} "
             f"resumes={out.n_resumes} rounds={out.n_rounds} "
             f"decode_batches={out.n_decode_batches} "
             f"peak_rows={max(n for _, n in out.occupancy)} "
-            f"failed={out.n_failed}"
+            f"failed={out.n_failed}" + resume
         )
         close_server()
         return
@@ -499,10 +548,18 @@ def main() -> None:
         ])
         for i, res in enumerate(out.sessions):
             describe(served + i, res, check_sim(res, traces[i], float(traces[i].gbps[0])))
+        resume = ""
+        if retry_policy is not None:
+            resume = (
+                f" salvaged={sum(s.salvaged_bytes for s in out.sessions)/1e3:.1f}KB"
+                f" fetch_resumes={sum(s.n_resumes for s in out.sessions)}"
+                f" replans={sum(s.n_mid_chunk_replans for s in out.sessions)}"
+            )
         print(
             f"[wave of {wave}] decode_batches={out.n_decode_batches} "
             f"text_batches={out.n_text_batches} runs={out.n_runs} "
             f"wall_total={out.wall_total_s*1e3:.1f} ms failed={out.n_failed}"
+            + resume
         )
         served += wave
     close_server()

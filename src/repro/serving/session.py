@@ -75,6 +75,29 @@ configuration is exhausted does the task finish with a clean
 a policy the legacy behavior is unchanged: the first fetch error raises
 straight through ``run()``.
 
+Byte-range resume (ISSUE 8)
+---------------------------
+With a range-capable transport (``supports_range``), a fetch that fails,
+times out, is preempted, or is cancelled mid-chunk no longer loses its
+realized bytes.  The task verifies the partial payload against the chunk's
+out-of-band segment index (``bitstream.SegmentIndex.verified_prefix``) and
+carries the verified prefix across attempts — and across suspend/resume —
+in a per-chunk salvage slot.  The next attempt then issues a *byte-range*
+fetch: ``resume`` (same level — refetch only ``[verified_end, total)``),
+``compose`` (degraded to a different lossy level — keep the level-invariant
+anchor segment, refetch only that level's delta suffix, and splice
+``synthesized head + salvaged anchor + new suffix`` into a blob that must
+pass the whole-chunk CRC gate before decode), or ``full`` (nothing
+salvageable — the PR 6 behavior).  ``adaptation.salvage_credit`` tells
+Algorithm 1 what the prefix is worth per level so re-decisions price only
+the bytes still owed.  With ``replan_factor`` set, a fetch running far past
+the live throughput estimate is cancelled *mid-chunk* on the virtual clock
+(§C.1): the prefix is salvaged, the collapsed throughput is observed, and
+``choose_config`` re-decides the remainder — possibly at a coarser level
+(compose) or as TEXT recompute (whole chunk: rANS lanes span the full token
+axis, so a byte prefix cannot shorten the recompute).  Accounting
+reconciles per chunk: ``salvaged_bytes + refetched_bytes == wire_bytes``.
+
 The session emits :class:`~repro.streaming.pipeline.ChunkTimeline`-
 compatible records (``SessionResult.stream_result()``), so everything that
 consumes simulator output — SLO accounting, figure scripts — reads session
@@ -92,16 +115,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitstream
 from repro.core import codec as kvcodec
 from repro.models.lm import Caches
 from repro.serving.engine import Engine
-from repro.streaming.adaptation import TEXT, NoFeasibleConfigError, make_policy
+from repro.streaming.adaptation import (
+    TEXT,
+    NoFeasibleConfigError,
+    make_policy,
+    salvage_credit,
+)
 from repro.streaming.calibration import measured_decode_bytes_per_s
 from repro.streaming.network import NetworkModel
 from repro.streaming.pipeline import ChunkTimeline, StreamClock, StreamResult
 from repro.streaming.streamer import CacheGenStreamer, PlanSegment, RunSegmenter
 from repro.streaming.transport import (
     RetryPolicy,
+    Salvage,
     SimTransport,
     Transport,
     classify_failure,
@@ -115,6 +145,10 @@ __all__ = [
     "TextWork",
     "validate_blob",
 ]
+
+# level 0 is lossless-after-8bit: its anchor stream uses different rANS
+# tables, so lossy anchor bytes never compose with it (and vice versa)
+_LOSSLESS_LEVEL = 0
 
 
 @dataclasses.dataclass
@@ -148,6 +182,16 @@ class SessionResult:
     n_fault_text: int = 0  # chunks that fell all the way back to TEXT
     n_failed_attempts: int = 0  # every fetch attempt that did not deliver
     fault_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # byte-range resume (ISSUE 8): verified partial bytes reused instead of
+    # refetched, byte-range continuations issued, and §C.1 mid-chunk
+    # cancel→re-plan events.  wire/refetched are the full realized ledger
+    # (clean chunks contribute their blob size to both); per chunk,
+    # salvaged + refetched == wire.
+    salvaged_bytes: float = 0.0
+    n_resumes: int = 0
+    n_mid_chunk_replans: int = 0
+    refetched_bytes: float = 0.0
+    wire_bytes: float = 0.0
 
     @property
     def failed(self) -> bool:
@@ -254,6 +298,24 @@ def validate_blob(blob: bytes, meta, level: int) -> None:
             f"tokens={h.get('n_tokens')} chunk_idx={h.get('chunk_idx')}, "
             f"plan wants level={level} tokens={meta.n_tokens}"
         )
+
+
+@dataclasses.dataclass
+class _ChunkSalvage:
+    """Verified partial bytes of the *current* chunk, carried across fetch
+    attempts — and across suspend/resume — until the chunk lands (or falls
+    back to TEXT) and :meth:`SessionTask._advance` clears it.
+
+    ``data`` always starts at blob offset 0 and is trimmed to
+    ``verified_end`` (a segment boundary of ``index``); bytes past the last
+    complete segment are never kept — they re-travel on the resume fetch.
+    """
+
+    level: int  # encoding level the salvaged bytes belong to
+    data: bytes  # verified prefix, from blob offset 0
+    verified_end: int  # == len(data); a SegmentIndex boundary
+    index: bitstream.SegmentIndex  # full-blob index at `level`
+    total: int  # full blob length at `level`
 
 
 class SessionTask:
@@ -364,6 +426,30 @@ class SessionTask:
         self.n_fault_text = 0
         self.n_failed_attempts = 0
         self.fault_counts: Dict[str, int] = {}
+        # byte-range resume (ISSUE 8).  _measure: the transport computes
+        # segment indexes so partial deliveries are *measurable* (wire
+        # ledger); _resumable: verified prefixes are actually *reused*
+        # (resume/compose byte-range refetches) instead of thrown away —
+        # session.resume_fetch=False keeps the PR 6 whole-blob retry
+        # behavior while still measuring the wire, which is what the
+        # resume-vs-whole-blob benchmark compares.
+        self._measure = (
+            session.retry_policy is not None
+            and bool(getattr(self.transport, "supports_range", False))
+        )
+        self._resumable = self._measure and bool(
+            getattr(session, "resume_fetch", True)
+        )
+        self._salvage: Optional[_ChunkSalvage] = None
+        self._chunk_wire = 0.0  # realized wire bytes of past attempts
+        self._pending_mode = "full"  # issue mode of the in-flight fetch
+        self._pending_range: Optional[tuple] = None  # (offset, total)
+        self._replanned = False  # one mid-chunk re-plan per chunk
+        self.n_fetch_resumes = 0
+        self.n_mid_chunk_replans = 0
+        self.salvaged_bytes = 0.0
+        self.refetched_bytes = 0.0
+        self.wire_bytes = 0.0
 
     @property
     def done(self) -> bool:
@@ -461,8 +547,16 @@ class SessionTask:
             )
         if self._pending is not None:
             handle, m, config, _nbytes, _scale = self._pending
+            mode = self._pending_mode
             self._pending = None
-            handle.cancel()
+            if self._measure:
+                # the cancelled fetch's realized prefix survives the
+                # preemption: verify it now and park it in the salvage
+                # slot — the post-resume re-decision resumes from it
+                salv = handle.cancel(float(now_t))
+                self._absorb_salvage(salv, config, mode)
+            else:
+                handle.cancel()
             self.cancelled_fetches.append((m.chunk_idx, config))
         self.suspended_at = float(now_t)
         self.n_preemptions += 1
@@ -493,6 +587,11 @@ class SessionTask:
         self._banned.clear()
         self._attempt = 0
         self._chunk_retries = 0
+        self._salvage = None
+        self._chunk_wire = 0.0
+        self._replanned = False
+        self._pending_mode = "full"
+        self._pending_range = None
         if self._i == len(self.metas):
             segs = segs + self.segmenter.flush()
         return [self._to_work(s) for s in segs]
@@ -530,35 +629,84 @@ class SessionTask:
             return []
         i = self._i
         m = self.metas[i]
-        if policy is not None and self._banned:
+        if policy is not None and (self._banned or self._salvage is not None):
             try:
                 config, nbytes, scale = self.clock.decide(
-                    self.metas, i, exclude=self._banned
+                    self.metas,
+                    i,
+                    exclude=self._banned,
+                    credit=self._credit(m),
                 )
             except NoFeasibleConfigError as e:
                 return self._fail(e)
-            if config == TEXT:
+            if config == TEXT and self._banned:
                 self.n_fault_text += 1
         else:
             config, nbytes, scale = self.clock.decide(self.metas, i)
         if config == TEXT:
             # text is already local — its transfer is modeled, not fetched
             outcome = self.clock.virtual_fetch(nbytes, m.chunk_idx)
-            self.timelines.append(
-                self.clock.account(m, config, nbytes, outcome, scale)
-            )
+            tl = self.clock.account(m, config, nbytes, outcome, scale)
+            if policy is not None:
+                # any salvaged bitstream bytes are dead weight here (TEXT
+                # recomputes the whole chunk); the ledger still counts them
+                wire = self._chunk_wire + float(nbytes)
+                if self._chunk_wire > 0.0 or self._replanned:
+                    tl.wire_bytes = wire
+                    tl.refetched_bytes = wire
+                    tl.replanned = self._replanned
+                self.wire_bytes += wire
+                self.refetched_bytes += wire
+            self.timelines.append(tl)
             return self._advance(m, TEXT, None)
         self._issue_fetch(m, config, nbytes, scale)
         return []
 
     def _issue_fetch(self, m, config: int, nbytes: float, scale: float) -> None:
+        byte_range = None
+        mode = "full"
+        sv = self._salvage
+        if sv is not None and self._resumable:
+            if config == sv.level and 0 < sv.verified_end < sv.total:
+                # same level: refetch only the unverified suffix
+                byte_range = (sv.verified_end, None)
+                mode = "resume"
+            elif (
+                config != sv.level
+                and config != _LOSSLESS_LEVEL
+                and sv.level != _LOSSLESS_LEVEL
+                and sv.index.anchor_end > sv.index.head.end
+                and sv.verified_end >= sv.index.anchor_end
+            ):
+                # degraded to another lossy level with the whole anchor in
+                # hand: keep it, refetch only that level's delta suffix.
+                # The range is expressed in the *fine* blob's coordinates;
+                # lossy heads re-pack to identical bytes (only the level
+                # int changes, same width), so the offsets coincide — and
+                # if a pathological table ever breaks that, the composed
+                # blob fails the whole-chunk CRC gate and the chunk falls
+                # back to a full refetch.
+                byte_range = (sv.index.anchor_end, None)
+                mode = "compose"
+        kw = {}
+        if self._measure:
+            kw["resumable"] = True
+            if byte_range is not None:
+                kw["byte_range"] = byte_range
         handle = self.transport.fetch_run(
             self.context_id,
             [(m.chunk_idx, config)],
             start_t=self.clock.fetch_t,
             hedge_after_s=self.session.hedge_after_s,
+            **kw,
         )
         self._pending = (handle, m, config, nbytes, scale)
+        self._pending_mode = mode
+        self._pending_range = (
+            (byte_range[0], sv.total) if byte_range is not None else None
+        )
+        if mode != "full":
+            self.n_fetch_resumes += 1
         if self.session.retry_policy is not None:
             self._issue_wall = time.perf_counter()
 
@@ -569,20 +717,82 @@ class SessionTask:
     ) -> List[object]:
         realtime = bool(getattr(self.transport, "realtime", False))
         timeout = policy.wall_timeout_s if realtime else None
+        mode = self._pending_mode
         try:
             res = handle.result(timeout=timeout)
         except Exception as e:
             return self._on_fetch_failure(e, handle, m, config, nbytes, scale)
+        # §C.1 mid-chunk re-plan (virtual clock only): the fetch ran far
+        # past what the live estimator predicted — a client watching the
+        # socket would have cancelled partway in, kept the verified prefix,
+        # and re-decided the remainder
+        rf = getattr(self.session, "replan_factor", None)
+        est = self.clock.policy.throughput_gbps
+        if (
+            rf is not None
+            and not realtime
+            and self._resumable
+            and not self._replanned
+            and est is not None
+            and est > 0.0
+        ):
+            exp_bytes = (
+                float(nbytes)
+                if self._pending_range is None
+                else float(max(self._pending_range[1] - self._pending_range[0], 1))
+            )
+            predicted = (
+                float(getattr(self.clock.network, "rtt_s", 0.0))
+                + exp_bytes * 8.0 / (est * 1e9)
+            )
+            if res.end_t - res.start_t > rf * predicted:
+                return self._replan_mid_chunk(
+                    handle, m, config, res, mode, rf * predicted
+                )
+        # assemble: splice the salvaged prefix in front of a resumed or
+        # composed suffix before any verification touches the bytes
+        raw = res.blobs[0]
+        sv = self._salvage
+        blob: Optional[bytes] = raw
+        credit_used = 0.0
+        if mode == "resume" and sv is not None:
+            blob = sv.data[: sv.verified_end] + raw
+            credit_used = float(sv.verified_end)
+        elif mode == "compose" and sv is not None:
+            try:
+                head = self._synthesize_head(sv, config, res.seg_index)
+                blob = (
+                    head
+                    + sv.data[sv.index.head.end : sv.index.anchor_end]
+                    + raw
+                )
+                credit_used = float(sv.index.anchor_end - sv.index.head.end)
+            except Exception:
+                blob = None  # unreadable salvage header — integrity failure
+        attempt_wire = float(res.nbytes)
         try:
+            if blob is None:
+                raise bitstream.IntegrityError(
+                    f"chunk {m.chunk_idx}: could not compose salvaged "
+                    f"anchor with the level-{config} delta suffix"
+                )
             # checksum first (corruption is detected, never interpreted),
             # then the plan match — even with validate_blobs off, corrupt
-            # bytes must not reach the rANS decoder
-            kvcodec.verify_chunk(res.blobs[0])
+            # bytes must not reach the rANS decoder.  For resume/compose
+            # this whole-blob CRC is also the composition gate: a spliced
+            # blob that does not hash like a clean whole-blob fetch never
+            # reaches decode.
+            kvcodec.verify_chunk(blob)
             if self.session.validate_blobs:
-                validate_blob(res.blobs[0], m, config)
+                validate_blob(blob, m, config)
         except ValueError as e:
+            if mode != "full":
+                # the salvage poisoned the assembly: drop it so the retry
+                # ladder refetches the whole blob from byte 0
+                self._salvage = None
+            self._chunk_wire += attempt_wire
             return self._on_fetch_failure(
-                e, handle, m, config, nbytes, scale, res=res
+                e, handle, m, config, nbytes, scale, res=res, harvest=False
             )
         if (
             policy.timeout_s is not None
@@ -604,20 +814,58 @@ class SessionTask:
         tl.n_retries = self._chunk_retries
         tl.fault_fallback = bool(self._banned)
         tl.cold_hit = getattr(res, "cold_entries", 0) > 0
+        if self._measure:
+            wire = self._chunk_wire + attempt_wire
+            if self._chunk_wire > 0.0 or mode != "full" or self._replanned:
+                tl.wire_bytes = wire
+                tl.salvaged_bytes = credit_used
+                tl.refetched_bytes = wire - credit_used
+                tl.resumed = mode != "full"
+                tl.replanned = self._replanned
+            self.salvaged_bytes += credit_used
+            self.wire_bytes += wire
+            self.refetched_bytes += wire - credit_used
         self.timelines.append(tl)
-        return self._advance(m, config, res.blobs[0])
+        return self._advance(m, config, blob)
 
     def _on_fetch_failure(
-        self, err, handle, m, config, nbytes, scale, *, res=None
+        self, err, handle, m, config, nbytes, scale, *, res=None, harvest=True
     ) -> List[object]:
-        """Classify a failed attempt; retry, degrade, or fail the session."""
+        """Classify a failed attempt; retry, degrade, or fail the session.
+
+        Before the retry ladder runs, the attempt's realized bytes are
+        harvested (ISSUE 8): from the error's attached :class:`Salvage`
+        (truncate faults carry one), or by asking the handle for the prefix
+        realized at the failure/timeout instant.  ``harvest=False`` is the
+        verification-failure path — the bytes arrived whole but are
+        untrustworthy, so only the wire ledger was charged (by the caller).
+        """
         policy = self.session.retry_policy
         kind = classify_failure(err)
         if kind == "fatal":
             raise err  # programming error — never masked by retries
+        mode = self._pending_mode
         self._pending = None
+        salv: Optional[Salvage] = None
+        if self._measure and harvest:
+            salv = getattr(err, "salvage", None)
+            if salv is None:
+                if kind == "timeout" and policy.timeout_s is not None and res is not None:
+                    at_t = res.start_t + policy.timeout_s
+                else:
+                    ft = getattr(err, "fail_t", None)
+                    at_t = float(ft) if ft is not None else None
+                try:
+                    salv = handle.salvage_at(at_t)
+                except Exception:
+                    salv = None
         if kind == "timeout" and not handle.done():
-            handle.cancel()  # the stalled attempt keeps no claim on the link
+            # the stalled attempt keeps no claim on the link; its realized
+            # prefix (if any) was captured above
+            cancelled = handle.cancel()
+            if salv is None and self._measure and harvest:
+                salv = cancelled
+        self._absorb_salvage(salv, config, mode)
         self.n_failed_attempts += 1
         self.fault_counts[kind] = self.fault_counts.get(kind, 0) + 1
         self._attempt += 1
@@ -668,6 +916,111 @@ class SessionTask:
         self.n_degrades += 1
         return []
 
+    # -- byte-range resume machinery (ISSUE 8) -----------------------------
+
+    def _replan_mid_chunk(
+        self, handle, m, config, res, mode, cancel_after_s
+    ) -> List[object]:
+        """Cancel the in-flight chunk on the virtual clock, keep the
+        verified prefix, observe the collapsed throughput, and let the next
+        :meth:`step` re-decide the remainder (§C.1 generalized)."""
+        t_cancel = res.start_t + cancel_after_s
+        self._pending = None
+        self._replanned = True
+        self.n_mid_chunk_replans += 1
+        try:
+            salv = handle.salvage_at(t_cancel)
+        except Exception:
+            salv = None
+        self._absorb_salvage(salv, config, mode)
+        # the spent window is charged like a failed attempt (elapsed_s
+        # grows, so the re-decision sees the lost time) ...
+        self.clock.charge_failure(max(t_cancel - self.clock.fetch_t, 0.0))
+        # ... and the collapse itself is observed: realized prefix bytes
+        # over the cancelled window feed the estimator, which is exactly
+        # the signal that makes choose_config pick a coarser remainder
+        if salv is not None and salv.nbytes_wire > 0 and t_cancel > res.start_t:
+            self.clock.policy.observe_throughput(
+                float(salv.nbytes_wire) * 8.0 / ((t_cancel - res.start_t) * 1e9)
+            )
+        return []
+
+    def _absorb_salvage(self, salv: Optional[Salvage], level, mode) -> None:
+        """Fold a partial attempt's realized bytes into the chunk's wire
+        ledger and — when they verify against the segment index — into the
+        cross-attempt salvage slot.
+
+        Corruption is never kept: a complete-but-corrupt segment raises
+        inside ``verified_prefix`` and the new bytes are discarded (any
+        previously verified salvage stays).  A resumed suffix extends the
+        existing prefix; a composed suffix *upgrades* the slot to the new
+        level by splicing head+anchor+suffix and re-verifying from byte 0.
+        """
+        if salv is None:
+            return
+        self._chunk_wire += float(salv.nbytes_wire)
+        if not self._resumable or salv.index is None or not salv.data:
+            return
+        idx = salv.index
+        sv = self._salvage
+        try:
+            if (
+                mode == "resume"
+                and sv is not None
+                and level == sv.level
+                and salv.offset == sv.verified_end
+            ):
+                data = sv.data[: sv.verified_end] + bytes(salv.data)
+            elif mode == "compose" and sv is not None and salv.offset > 0:
+                head = self._synthesize_head(sv, level, idx)
+                anchor = sv.data[sv.index.head.end : sv.index.anchor_end]
+                if len(head) + len(anchor) != salv.offset:
+                    return  # geometry mismatch: splice would not align
+                data = head + anchor + bytes(salv.data)
+            elif salv.offset == 0:
+                data = bytes(salv.data)
+            else:
+                return  # an offset we cannot anchor to anything verified
+            ve = idx.verified_prefix(data)
+        except bitstream.IntegrityError:
+            return  # corrupt partial: keep whatever salvage already exists
+        except Exception:
+            return
+        total = int(salv.total)
+        if ve <= 0 or total <= 0:
+            return
+        self._salvage = _ChunkSalvage(
+            level=int(level),
+            data=data[:ve],
+            verified_end=int(ve),
+            index=idx,
+            total=total,
+        )
+
+    def _synthesize_head(self, sv: _ChunkSalvage, level, idx) -> bytes:
+        """Rebuild the target level's head bytes (msgpack framing + header)
+        from the salvaged blob's header with only the level swapped —
+        byte-exact for lossy↔lossy because the header is a flat map of
+        small ints and every lossy level packs to the same width."""
+        hdr = dict(kvcodec.peek_chunk_header(bytes(sv.data)))
+        hdr["level"] = int(level)
+        n_arrays = idx.n_arrays if idx is not None else sv.index.n_arrays
+        return bitstream.synthesize_head(hdr, n_arrays)
+
+    def _credit(self, m) -> Optional[Dict[int, float]]:
+        """``adaptation.salvage_credit`` for the current chunk, or None."""
+        sv = self._salvage
+        if sv is None or not self._resumable:
+            return None
+        return salvage_credit(
+            {lvl: float(s) for lvl, s in m.sizes.items()},
+            sv.level,
+            sv.verified_end,
+            sv.index.head.end,
+            sv.index.anchor_end,
+            lossless_level=_LOSSLESS_LEVEL,
+        )
+
     def _fail(self, err) -> List[object]:
         """Terminal failure: record it, flush the segmenter, and emit the
         valid realized prefix (the schedulers then release this task's row
@@ -679,6 +1032,12 @@ class SessionTask:
         )
         self._failure = f"{kind}: {err}"
         self._pending = None
+        # the failed chunk's partial deliveries stay on the ledger (all
+        # refetched — nothing landed to credit them against)
+        if self._chunk_wire > 0.0:
+            self.wire_bytes += self._chunk_wire
+            self.refetched_bytes += self._chunk_wire
+            self._chunk_wire = 0.0
         segs = self.segmenter.flush()
         return [self._to_work(s) for s in segs]
 
@@ -741,6 +1100,11 @@ class SessionTask:
             n_fault_text=self.n_fault_text,
             n_failed_attempts=self.n_failed_attempts,
             fault_counts=dict(self.fault_counts),
+            salvaged_bytes=self.salvaged_bytes,
+            n_resumes=self.n_fetch_resumes,
+            n_mid_chunk_replans=self.n_mid_chunk_replans,
+            refetched_bytes=self.refetched_bytes,
+            wire_bytes=self.wire_bytes,
         )
 
 
@@ -773,6 +1137,8 @@ class ServeSession:
         validate_blobs: bool = True,
         transport: Optional[Transport] = None,
         retry_policy: Optional[RetryPolicy] = None,
+        resume_fetch: bool = True,
+        replan_factor: Optional[float] = None,
     ):
         self.streamer = streamer
         self.engine = engine
@@ -801,6 +1167,17 @@ class ServeSession:
         # charged to the StreamClock -> degrade to coarser levels / TEXT ->
         # clean failure status, never an uncaught exception.
         self.retry_policy = retry_policy
+        # byte-range resume (ISSUE 8; needs retry_policy + a range-capable
+        # transport).  resume_fetch=False keeps PR 6 whole-blob retries
+        # (the benchmark baseline) while still measuring the wire ledger.
+        # replan_factor arms §C.1 mid-chunk re-planning on virtual-clock
+        # transports: an in-flight fetch whose realized duration exceeds
+        # replan_factor × the live-estimate prediction is cancelled at that
+        # instant, its verified prefix salvaged, and the remainder
+        # re-decided (at most once per chunk).  None = off (bit-identical
+        # to the pre-resume timing).
+        self.resume_fetch = resume_fetch
+        self.replan_factor = replan_factor
 
     # ------------------------------------------------------------------
 

@@ -26,6 +26,7 @@ __all__ = [
     "TEXT",
     "NoFeasibleConfigError",
     "choose_config",
+    "salvage_credit",
     "AdaptationPolicy",
     "make_policy",
 ]
@@ -92,6 +93,52 @@ def choose_config(
     return min(candidates, key=lambda c: c.projected_s)  # best effort
 
 
+def salvage_credit(
+    sizes: Dict[int, float],
+    salvage_level: int,
+    verified_end: int,
+    head_end: int,
+    anchor_end: int,
+    *,
+    lossless_level: int = 0,
+) -> Dict[int, float]:
+    """Per-level byte credit of a verified partial chunk (ISSUE 8).
+
+    A failed/cancelled fetch leaves a checksum-verified byte prefix behind
+    (``bitstream.SegmentIndex.verified_prefix``).  When the chunk is
+    re-decided, that prefix is worth different amounts at different levels:
+
+    - at ``salvage_level`` itself, every verified byte resumes for free
+      (byte-range refetch of only the suffix);
+    - at any *other lossy* level, the level-invariant anchor segment — the
+      bytes in ``[head_end, anchor_end)`` — composes bit-exactly with that
+      level's delta suffix, provided the prefix covers the whole anchor;
+    - the lossless level's anchor is encoded with different tables, so a
+      lossy prefix is worth nothing there (and vice versa); TEXT recompute
+      cannot reuse bitstream bytes at all (rANS lanes span the full token
+      axis), so it gets no entry.
+
+    ``choose_config`` subtracts these credits from the current chunk's
+    contribution to ``remaining_sizes`` so Algorithm 1 prices only the
+    bytes still to be moved.
+    """
+    anchor_bytes = float(max(int(anchor_end) - int(head_end), 0))
+    covers_anchor = int(verified_end) >= int(anchor_end) and anchor_bytes > 0
+    credit: Dict[int, float] = {}
+    for lvl, size in sizes.items():
+        if lvl == salvage_level:
+            credit[lvl] = min(float(verified_end), float(size))
+        elif (
+            covers_anchor
+            and salvage_level != lossless_level
+            and lvl != lossless_level
+        ):
+            credit[lvl] = min(anchor_bytes, float(size))
+        else:
+            credit[lvl] = 0.0
+    return credit
+
+
 @dataclasses.dataclass
 class AdaptationPolicy:
     """Stateful per-stream adaptation: carries the throughput estimate.
@@ -148,6 +195,11 @@ class AdaptationPolicy:
 
     def observe_throughput(self, gbps: float) -> None:
         self._throughput = gbps
+
+    @property
+    def throughput_gbps(self) -> Optional[float]:
+        """Current live estimate (None until the first observation)."""
+        return self._throughput
 
 
 def make_policy(

@@ -1,8 +1,10 @@
 """Deterministic fault injection for the fetch path (ISSUE 6).
 
 A :class:`FaultPlan` is a seeded description of chaos: per fetch *attempt*
-it may drop the fetch, stall it past a timeout, or corrupt the payload
-bytes; per stored *entry* it may delete the blob or corrupt it at rest.
+it may drop the fetch, stall it past a timeout, corrupt the payload bytes,
+or truncate the stream (deliver a valid prefix, then sever — the
+salvageable partial delivery ISSUE 8's resume path exists for); per stored
+*entry* it may delete the blob or corrupt it at rest.
 Every decision is drawn from an RNG keyed on ``(seed, context, chunk,
 level, attempt, salt)`` — the ``keyed_straggler_delay`` idiom — so the same
 plan replays identically regardless of scheduling order, across the
@@ -37,6 +39,7 @@ from repro.streaming.transport import (
     FetchError,
     FetchHandle,
     FetchResult,
+    Salvage,
     Transport,
 )
 
@@ -53,7 +56,7 @@ __all__ = [
 class Fault:
     """One injected in-flight fault: what happens, and how late it lands."""
 
-    kind: str  # "drop" | "stall" | "corrupt"
+    kind: str  # "drop" | "stall" | "corrupt" | "truncate"
     delay_s: float = 0.0
 
 
@@ -62,9 +65,10 @@ class FaultPlan:
     """Seeded, order-independent fault schedule.
 
     Per-attempt (transient, transport layer): ``drop_p`` + ``stall_p`` +
-    ``corrupt_p`` must not exceed 1 — they partition the unit draw, so at
-    most one fault fires per attempt.  Per-entry (persistent, storage
-    layer): ``missing_p`` deletes, ``store_corrupt_p`` rots at rest.
+    ``corrupt_p`` + ``truncate_p`` must not exceed 1 — they partition the
+    unit draw, so at most one fault fires per attempt.  Per-entry
+    (persistent, storage layer): ``missing_p`` deletes, ``store_corrupt_p``
+    rots at rest.
 
     ``drop_detect_s`` bounds how long a dropped fetch takes to be *noticed*
     (connection-reset latency on the virtual clock); ``stall_scale_s`` /
@@ -77,6 +81,7 @@ class FaultPlan:
     drop_p: float = 0.0
     stall_p: float = 0.0
     corrupt_p: float = 0.0
+    truncate_p: float = 0.0
     missing_p: float = 0.0
     store_corrupt_p: float = 0.0
     stall_scale_s: float = 0.2
@@ -85,10 +90,10 @@ class FaultPlan:
     wall_cap_s: float = 2.0
 
     def __post_init__(self):
-        total = self.drop_p + self.stall_p + self.corrupt_p
+        total = self.drop_p + self.stall_p + self.corrupt_p + self.truncate_p
         if total > 1.0 + 1e-9:
             raise ValueError(
-                f"drop_p + stall_p + corrupt_p = {total} exceeds 1"
+                f"drop_p + stall_p + corrupt_p + truncate_p = {total} exceeds 1"
             )
 
     # -- keyed determinism --------------------------------------------------
@@ -111,7 +116,8 @@ class FaultPlan:
         self, cid: str, chunk: int, level: int, attempt: int
     ) -> Optional[Fault]:
         """The in-flight fault for one fetch attempt, or None."""
-        if self.drop_p <= 0 and self.stall_p <= 0 and self.corrupt_p <= 0:
+        if (self.drop_p <= 0 and self.stall_p <= 0 and self.corrupt_p <= 0
+                and self.truncate_p <= 0):
             return None
         rng = self._rng(cid, chunk, level, attempt, salt=0)
         u = float(rng.random())
@@ -122,7 +128,17 @@ class FaultPlan:
             return Fault("stall", delay_s=stall)
         if u < self.drop_p + self.stall_p + self.corrupt_p:
             return Fault("corrupt")
+        if u < self.drop_p + self.stall_p + self.corrupt_p + self.truncate_p:
+            return Fault("truncate")
         return None
+
+    def truncate_fraction(
+        self, cid: str, chunk: int, level: int, attempt: int
+    ) -> float:
+        """How much of the payload a truncate fault delivers before the
+        sever — keyed like every other draw, U(0.25, 0.9) so the prefix is
+        always substantial enough to exercise salvage but never complete."""
+        return float(self._rng(cid, chunk, level, attempt, salt=4).uniform(0.25, 0.9))
 
     # -- per-entry (storage) ------------------------------------------------
 
@@ -250,12 +266,25 @@ class _TransformedHandle(FetchHandle):
         context_id=None,
         chunk_levels=None,
         extra_wall_s: float = 0.0,
+        salvage_shift_t: float = 0.0,
+        salvageable: bool = True,
     ):
         super().__init__(context_id, chunk_levels)
         self._inner = inner
         self._transform = transform
         self._extra_wall_s = extra_wall_s
+        self._salvage_shift_t = salvage_shift_t
+        self._salvageable = salvageable
         inner.add_done_callback(self._on_inner_done)
+
+    def salvage_at(self, at_t=None):
+        # a stall shifts when bytes land on the virtual clock; a corrupt
+        # fault poisons the wire, so its partial bytes are not salvage
+        if not self._salvageable:
+            return None
+        if at_t is not None:
+            at_t = at_t - self._salvage_shift_t
+        return self._inner.salvage_at(at_t)
 
     def _abort(self) -> None:
         self._inner.cancel()  # its cancellation error propagates via callback
@@ -295,13 +324,19 @@ class FaultyTransport:
     def __init__(self, inner: Transport, plan: FaultPlan):
         self.inner = inner
         self.plan = plan
-        self.n_injected: Dict[str, int] = {"drop": 0, "stall": 0, "corrupt": 0}
+        self.n_injected: Dict[str, int] = {
+            "drop": 0, "stall": 0, "corrupt": 0, "truncate": 0,
+        }
         self._counts: Dict[Tuple[str, int, int], int] = {}
         self._lock = threading.Lock()
 
     @property
     def realtime(self) -> bool:
         return bool(getattr(self.inner, "realtime", False))
+
+    @property
+    def supports_range(self) -> bool:
+        return bool(getattr(self.inner, "supports_range", False))
 
     def _next_attempt(self, cid: str, ci: int, lvl: int) -> int:
         with self._lock:
@@ -320,13 +355,17 @@ class FaultyTransport:
         *,
         start_t: float = 0.0,
         hedge_after_s: Optional[float] = None,
+        byte_range: Optional[Tuple[int, Optional[int]]] = None,
+        resumable: bool = False,
     ) -> FetchHandle:
         chunk_levels = list(chunk_levels)
+        kw = dict(start_t=start_t, hedge_after_s=hedge_after_s)
+        if byte_range is not None or resumable:
+            # only forwarded when requested, so wrapping a pre-range
+            # transport stays signature-compatible until a caller opts in
+            kw.update(byte_range=byte_range, resumable=resumable)
         if not chunk_levels:
-            return self.inner.fetch_run(
-                context_id, chunk_levels,
-                start_t=start_t, hedge_after_s=hedge_after_s,
-            )
+            return self.inner.fetch_run(context_id, chunk_levels, **kw)
         ci, lvl = chunk_levels[0]
         attempt = self._next_attempt(context_id, ci, lvl)
         fault = self.plan.draw(context_id, ci, lvl, attempt)
@@ -349,10 +388,7 @@ class FaultyTransport:
                 handle._finish(None, err)
             return handle
 
-        inner = self.inner.fetch_run(
-            context_id, chunk_levels,
-            start_t=start_t, hedge_after_s=hedge_after_s,
-        )
+        inner = self.inner.fetch_run(context_id, chunk_levels, **kw)
         if fault is None:
             return inner
 
@@ -376,6 +412,40 @@ class FaultyTransport:
                 extra_wall_s=(
                     min(delay, self.plan.wall_cap_s) if self.realtime else 0.0
                 ),
+                salvage_shift_t=delay,
+            )
+
+        if fault.kind == "truncate":
+            # deliver a valid payload prefix, then sever: the completed
+            # inner result becomes a FetchError *carrying* the prefix as
+            # salvage — resumable callers keep it, legacy callers see the
+            # same io failure a real mid-stream sever produces
+            self._count("truncate")
+            frac = self.plan.truncate_fraction(context_id, ci, lvl, attempt)
+
+            def truncate(res: FetchResult) -> FetchResult:
+                payload = res.blobs[0]
+                k = max(1, int(len(payload) * frac))
+                fail_t = res.start_t + frac * max(res.end_t - res.start_t, 0.0)
+                raise FetchError(
+                    f"stream truncated by fault plan at {k}/{len(payload)} "
+                    f"bytes (attempt {attempt})",
+                    context_id=context_id,
+                    chunk_levels=chunk_levels,
+                    fail_t=fail_t,
+                    salvage=Salvage(
+                        data=payload[:k],
+                        offset=res.range_offset,
+                        total=res.range_total or len(payload),
+                        index=res.seg_index,
+                        nbytes_wire=float(k),
+                    ),
+                )
+
+            return _TransformedHandle(
+                inner, truncate,
+                context_id=context_id, chunk_levels=chunk_levels,
+                salvageable=False,  # the truncate error itself carries it
             )
 
         # corrupt: flip payload bytes after the (clean) transfer completes
@@ -391,6 +461,7 @@ class FaultyTransport:
         return _TransformedHandle(
             inner, corrupt,
             context_id=context_id, chunk_levels=chunk_levels,
+            salvageable=False,  # poisoned wire: partial bytes untrustworthy
         )
 
     def close(self) -> None:

@@ -156,6 +156,15 @@ class ChunkTimeline:
     n_retries: int = 0  # failed fetch attempts retried before this one landed
     fault_fallback: bool = False  # config was re-decided after fetch failures
     cold_hit: bool = False  # any entry of this fetch was served cold (tiered)
+    # byte-range resume (ISSUE 8); defaults keep simulator output unchanged.
+    # wire_bytes stays 0.0 for an untroubled chunk (its wire cost is just
+    # ``nbytes``) — it is filled only when partial deliveries made the
+    # realized wire cost differ, and then salvaged + refetched == wire.
+    salvaged_bytes: float = 0.0  # verified prefix bytes reused, not refetched
+    wire_bytes: float = 0.0  # realized wire bytes across every attempt
+    refetched_bytes: float = 0.0  # wire bytes paid beyond the salvage credit
+    resumed: bool = False  # landed via a byte-range continuation
+    replanned: bool = False  # a mid-chunk cancel→re-plan preceded the landing
 
 
 @dataclasses.dataclass
@@ -238,11 +247,18 @@ class StreamClock:
         self.compute_t = self.start_t  # accelerator busy-until
         self.prefix_tokens = 0
 
-    def decide(self, metas: List[ChunkMeta], i: int, exclude=()) -> tuple:
+    def decide(
+        self, metas: List[ChunkMeta], i: int, exclude=(), credit=None
+    ) -> tuple:
         """Algorithm 1 choice for chunk ``i`` at the current virtual instant.
 
         ``exclude`` removes configurations that already failed past their
         retry budget for this chunk (the failure-fallback ladder, ISSUE 6).
+        ``credit`` (``adaptation.salvage_credit`` output, ISSUE 8) is a
+        per-level byte credit for the current chunk's verified partial
+        bytes — subtracted from ``remaining_sizes`` so the projection
+        prices only the bytes still to be moved; ``None`` (the default)
+        leaves the decision bit-identical to the simulator's.
 
         Returns ``(config, nbytes, scale)``; ``scale`` is the contention
         factor sampled *now* (decision time) for the chosen config's compute
@@ -257,6 +273,11 @@ class StreamClock:
         remaining_sizes, remaining_text, rem_recompute = remaining_work(
             metas, i, self.prefix_tokens, self.recompute_s
         )
+        if credit:
+            remaining_sizes = {
+                lvl: max(sz - float(credit.get(lvl, 0.0)), 0.0)
+                for lvl, sz in remaining_sizes.items()
+            }
         cfg = self.policy.next_config(
             elapsed_s=self.fetch_t - self.start_t,
             remaining_sizes=remaining_sizes,

@@ -63,6 +63,48 @@ Once the per-level budget is exhausted the chunk is re-decided with that
 level (and everything finer) excluded — coarser levels, ultimately TEXT
 recompute — generalizing the paper's §C.1 bandwidth fallback into a
 failure fallback.
+
+Byte-range resume (ISSUE 8).  ``fetch_run(..., byte_range=(offset,
+length_or_None), resumable=True)`` fetches a slice of a single chunk's blob
+and/or asks for the blob's :class:`~repro.core.bitstream.SegmentIndex` as
+fetch metadata (``FetchResult.seg_index`` — unpriced: indexes travel in the
+response header, not the payload).  A failed or cancelled attempt no longer
+discards its realized bytes: :meth:`FetchHandle.cancel` (and
+:meth:`FetchHandle.salvage_at`) return a :class:`Salvage` — the raw
+realized payload prefix, its absolute blob offset, and the index — which
+``SegmentIndex.verified_prefix`` resolves into complete CRC-verified
+segments plus a resume offset.  Transports advertise the capability with a
+``supports_range`` class attribute; callers must not pass the new kwargs to
+transports without it.
+
+Versioned range-request frame (tcp).  Request: one msgpack frame
+``{cid, chunks, straggle, attempt[, hashes][, range: [offset, length|0]]
+[, want_idx: true]}``; ``length 0`` means to-end.  Response header:
+``{ok, sizes[, total, idx]}`` — ``total`` (the full blob length) and
+``idx`` (the segment index, wire form) are present only when the request
+carried ``range``/``want_idx``.  Version tolerance is by omission on both
+sides: an old server ignores the extra request keys and streams the whole
+blob (the client detects the missing ``total`` and treats the response as
+a whole-blob fetch from offset 0); an old client never sends them and gets
+byte-identical frames to the pre-range protocol.
+
+Resume state machine (driven by ``serving/session.py``)::
+
+    attempt fails / is cancelled / mid-chunk collapse detected
+      -> Salvage(data, offset, index) via err.salvage or handle.cancel(at_t)
+      -> index.verified_prefix(data, offset) -> verified resume offset
+      -> re-decide the remainder (choose_config, salvage-credit-adjusted):
+           same level     -> RESUME   byte_range=(verified_end, None)
+           coarser level  -> DEGRADE-COMPOSE  keep the level-invariant
+                             anchor segments already paid for, fetch only
+                             the delta suffix at the coarser level, and
+                             synthesize the coarser head — composes
+                             bit-exactly (whole-blob CRC still verifies)
+           TEXT           -> RECOMPUTE  drop the bytes.  rANS lanes span
+                             the whole token axis (a byte prefix covers
+                             *lanes*, not leading tokens), so TEXT
+                             recompute is whole-chunk; per-token-run delta
+                             segmentation is the ROADMAP follow-on.
 """
 from __future__ import annotations
 
@@ -74,7 +116,7 @@ import threading
 import time
 from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
-from repro.core.bitstream import IntegrityError
+from repro.core.bitstream import IntegrityError, SegmentIndex, segment_index
 from repro.streaming.network import NetworkModel, keyed_straggler_delay
 from repro.streaming.storage import KVStore
 
@@ -84,6 +126,7 @@ __all__ = [
     "FetchResult",
     "LocalTransport",
     "RetryPolicy",
+    "Salvage",
     "SimTransport",
     "TcpStoreServer",
     "TcpTransport",
@@ -113,6 +156,7 @@ class FetchError(RuntimeError):
         context_id: Optional[str] = None,
         chunk_levels: Optional[ChunkLevels] = None,
         fail_t: Optional[float] = None,
+        salvage: Optional["Salvage"] = None,
     ):
         detail = ""
         if context_id is not None or chunk_levels is not None:
@@ -126,6 +170,28 @@ class FetchError(RuntimeError):
         self.context_id = context_id
         self.chunk_levels = list(chunk_levels) if chunk_levels is not None else None
         self.fail_t = fail_t
+        self.salvage = salvage  # realized prefix delivered before the failure
+
+
+@dataclasses.dataclass
+class Salvage:
+    """The realized remainder of a failed, cancelled, or abandoned fetch.
+
+    ``data`` is the raw realized payload prefix — *unverified*; the caller
+    resolves it into complete segments plus a resume offset via
+    ``index.verified_prefix(data, offset)``.  ``offset`` is the absolute
+    blob offset where ``data`` begins (0 for a whole-blob attempt, the
+    requested range offset for a resume attempt); ``total`` is the full
+    blob length when known (0 otherwise).  ``nbytes_wire`` is what this
+    attempt actually cost on the wire — the reconciliation ledger's input
+    (``salvaged + refetched == realized wire bytes``).
+    """
+
+    data: bytes
+    offset: int = 0
+    total: int = 0
+    index: Optional[SegmentIndex] = None
+    nbytes_wire: float = 0.0
 
 
 def classify_failure(err: BaseException) -> str:
@@ -200,11 +266,19 @@ class FetchResult:
     loser_bytes_read: int = 0
     completion_order: Tuple[int, ...] = ()  # chunk_idx in arrival order
     cold_entries: int = 0  # entries served from the cold tier (tiered store)
+    seg_index: Optional[SegmentIndex] = None  # when resumable was requested
+    range_offset: int = 0  # absolute blob offset blobs[0] begins at
+    range_total: int = 0  # full blob length for a range fetch (0 = whole)
 
 
 @runtime_checkable
 class Transport(Protocol):
-    """Pluggable fetch path: issue a run fetch, get a cancellable handle."""
+    """Pluggable fetch path: issue a run fetch, get a cancellable handle.
+
+    Implementations that understand ``byte_range``/``resumable`` set a
+    ``supports_range = True`` class attribute; callers gate on it so
+    pre-range transports (and test stubs) keep working unchanged.
+    """
 
     def fetch_run(
         self,
@@ -275,14 +349,34 @@ class FetchHandle:
         assert self._result is not None
         return self._result
 
-    def cancel(self) -> None:
-        """Abort all attempts; a pending ``result()`` raises FetchError."""
+    def salvage_at(self, at_t: Optional[float] = None) -> Optional["Salvage"]:
+        """Realized payload prefix of a single-chunk fetch at transport time
+        ``at_t`` (None = everything realized so far / by completion).
+
+        Base transports cannot salvage — returns None; range-capable
+        transports override.  Valid whether the fetch is in flight, failed,
+        or already complete (a *completed* fetch salvages its full payload,
+        which is what lets a preempted session keep a finished-but-unused
+        fetch across suspend/resume).
+        """
+        return None
+
+    def cancel(self, at_t: Optional[float] = None) -> Optional["Salvage"]:
+        """Abort all attempts; a pending ``result()`` raises FetchError.
+
+        Returns the realized, resumable prefix (see :meth:`salvage_at`)
+        instead of discarding it — ``at_t`` bounds the salvage on the
+        transport's clock for virtual-time cancellation.
+        """
+        salvage = self.salvage_at(at_t)
         self._abort()
         self._finish(None, FetchError(
             "fetch cancelled by caller",
             context_id=self.context_id,
             chunk_levels=self.chunk_levels,
+            salvage=salvage,
         ))
+        return salvage
 
     def _abort(self) -> None:  # transport-specific teardown
         pass
@@ -312,6 +406,22 @@ def as_completed(handles: Sequence[FetchHandle], timeout: Optional[float] = None
             ) from None
 
 
+def _clamp_range(
+    byte_range: Tuple[int, Optional[int]], blob_len: int
+) -> Tuple[int, int]:
+    """Resolve a ``(offset, length_or_None)`` request against a blob length.
+
+    ``length`` of None (or <= 0) means to-end; offsets are clamped so a
+    stale request (e.g. a resume offset past a shrunken blob) degrades to
+    an empty slice rather than an exception.
+    """
+    off, ln = byte_range
+    off = max(0, min(int(off), blob_len))
+    if ln is None or int(ln) <= 0:
+        return off, blob_len
+    return off, min(off + int(ln), blob_len)
+
+
 def _probe_cold(store, context_id: str, chunk_levels: ChunkLevels) -> int:
     """How many of a run's entries would be served cold right now (0 for a
     flat store — only the tiered store exposes ``tier_penalty``)."""
@@ -338,6 +448,7 @@ class LocalTransport:
     """
 
     realtime = False  # resolving a handle costs ~no wall time
+    supports_range = True
 
     def __init__(self, store: KVStore):
         self.store = store
@@ -349,8 +460,12 @@ class LocalTransport:
         *,
         start_t: float = 0.0,
         hedge_after_s: Optional[float] = None,  # no link -> nothing to hedge
+        byte_range: Optional[Tuple[int, Optional[int]]] = None,
+        resumable: bool = False,
     ) -> FetchHandle:
         chunk_levels = list(chunk_levels)
+        if byte_range is not None and len(chunk_levels) != 1:
+            raise ValueError("byte-range fetch is single-chunk only")
         handle = FetchHandle(context_id, chunk_levels)
 
         def work():
@@ -366,6 +481,16 @@ class LocalTransport:
             except BaseException as e:  # surfaced at result()
                 handle._finish(None, e)
                 return
+            seg_idx = None
+            range_offset = range_total = 0
+            if len(blobs) == 1 and (resumable or byte_range is not None):
+                full = blobs[0]
+                if resumable:
+                    seg_idx = segment_index(full)
+                if byte_range is not None:
+                    off, end = _clamp_range(byte_range, len(full))
+                    blobs = [full[off:end]]
+                    range_offset, range_total = off, len(full)
             wall = time.perf_counter() - t0
             nbytes = sum(len(b) for b in blobs)
             handle._finish(FetchResult(
@@ -377,6 +502,9 @@ class LocalTransport:
                 wall_s=wall,
                 completion_order=tuple(ci for ci, _ in chunk_levels),
                 cold_entries=cold_entries,
+                seg_index=seg_idx,
+                range_offset=range_offset,
+                range_total=range_total,
             ))
 
         threading.Thread(target=work, daemon=True).start()
@@ -433,6 +561,12 @@ class _SimHandle(FetchHandle):
     def __init__(self, attempts: List[_Attempt], context_id=None, chunk_levels=None):
         super().__init__(context_id, chunk_levels)
         self._attempts = attempts
+        self._salvage_fn = None  # set by the transport when salvageable
+
+    def salvage_at(self, at_t: Optional[float] = None) -> Optional[Salvage]:
+        if self._salvage_fn is None:
+            return None
+        return self._salvage_fn(at_t)
 
     def _abort(self) -> None:
         for a in self._attempts:
@@ -466,6 +600,8 @@ class SimTransport:
         # paced reads take real wall time; unpaced handles resolve ~instantly
         self.realtime = self.time_scale > 0
 
+    supports_range = True
+
     def fetch_run(
         self,
         context_id: str,
@@ -473,25 +609,57 @@ class SimTransport:
         *,
         start_t: float = 0.0,
         hedge_after_s: Optional[float] = None,
+        byte_range: Optional[Tuple[int, Optional[int]]] = None,
+        resumable: bool = False,
     ) -> FetchHandle:
         chunk_levels = list(chunk_levels)
-        read = lambda: [  # noqa: E731
+        if byte_range is not None and len(chunk_levels) != 1:
+            raise ValueError("byte-range fetch is single-chunk only")
+        if byte_range is not None:
+            hedge_after_s = None  # a resumed suffix is never hedged
+        salvageable = resumable and len(chunk_levels) == 1
+        read_full = lambda: [  # noqa: E731
             self.store.get_kv(context_id, ci, lvl) for ci, lvl in chunk_levels
         ]
+        # one cell per concern, filled when the worker's read realizes the
+        # blob: the segment index (metadata, unpriced) and the range span
+        idx_cell: List[Optional[SegmentIndex]] = [None]
+        span_cell: List[Tuple[int, int]] = [(0, 0)]  # (range_offset, total)
+
+        def read():
+            blobs = read_full()
+            if len(blobs) == 1 and (resumable or byte_range is not None):
+                full = blobs[0]
+                if resumable:
+                    idx_cell[0] = segment_index(full)
+                if byte_range is not None:
+                    off, end = _clamp_range(byte_range, len(full))
+                    span_cell[0] = (off, len(full))
+                    blobs = [full[off:end]]
+            return blobs
+
         # sizes are needed up front to price the transfer; metadata is the
         # frontend's job, the blob bytes still travel through the attempts
         try:
             try:
                 metas = self.store.meta(context_id)
-                nbytes = sum(metas[ci].sizes[lvl] for ci, lvl in chunk_levels)
+                full_nbytes = sum(
+                    metas[ci].sizes[lvl] for ci, lvl in chunk_levels
+                )
             except (KeyError, IndexError):
-                nbytes = sum(len(b) for b in read())
+                full_nbytes = sum(len(b) for b in read_full())
         except KeyError as e:
             # 404 after one round trip on the virtual clock
             e.fail_t = start_t + float(getattr(self.network, "rtt_s", 0.0))
             failed = FetchHandle(context_id, chunk_levels)
             failed._finish(None, e)
             return failed
+        if byte_range is not None:
+            # the link only carries the requested slice
+            off, end = _clamp_range(byte_range, int(full_nbytes))
+            nbytes = end - off
+        else:
+            nbytes = full_nbytes
         key_chunk = chunk_levels[0][0] if chunk_levels else 0
 
         # tiered store: entries not currently hot pay the cold tier's
@@ -532,6 +700,47 @@ class SimTransport:
             attempts.append(_Attempt(nbytes, hedge_dur, self.time_scale))
         handle = _SimHandle(attempts, context_id, chunk_levels)
         winner_i = 1 if outcome.hedged else 0
+
+        if salvageable or byte_range is not None:
+            # bytes start flowing one RTT (plus any up-front stall and cold
+            # surcharge) after issue; what has crossed the link by virtual
+            # time t is the trace's byte integral over [flow_start, t) —
+            # the same arithmetic fetch_outcome charges for a hedge loser
+            flow_start = (
+                start_t
+                + float(getattr(self.network, "rtt_s", 0.0))
+                + self.network.straggler_delay(key_chunk, attempt=0)
+                + tier_extra_s
+            )
+
+            def salvage_fn(at_t: Optional[float]) -> Optional[Salvage]:
+                a = attempts[0]
+                if not a.finished.is_set():
+                    a.finished.wait(timeout=5.0)
+                if a.error is not None or not hasattr(a, "blobs"):
+                    return None  # the read itself failed: nothing realized
+                payload = b"".join(a.blobs)
+                if at_t is None:
+                    realized = len(payload)
+                else:
+                    realized = 0 if at_t <= flow_start else min(
+                        len(payload),
+                        int(self.network.trace.bytes_in_window(
+                            at_t - flow_start, flow_start
+                        )),
+                    )
+                if realized <= 0:
+                    return None
+                off, total = span_cell[0]
+                return Salvage(
+                    data=payload[:realized],
+                    offset=off,
+                    total=total or (len(payload) if byte_range is None else 0),
+                    index=idx_cell[0],
+                    nbytes_wire=float(realized),
+                )
+
+            handle._salvage_fn = salvage_fn
 
         def coordinate():
             threads = []
@@ -586,6 +795,9 @@ class SimTransport:
                 loser_bytes_read=loser.bytes_read if loser else 0,
                 completion_order=tuple(ci for ci, _ in chunk_levels),
                 cold_entries=cold_entries,
+                seg_index=idx_cell[0],
+                range_offset=span_cell[0][0],
+                range_total=span_cell[0][1],
             ))
 
         threading.Thread(target=coordinate, daemon=True).start()
@@ -623,6 +835,22 @@ def _recv_frame(sock: socket.socket, counter=None) -> bytes:
     return _recv_exact(sock, n, counter)
 
 
+def _recv_frame_into(sock: socket.socket, counter, buf: bytearray) -> bytes:
+    """Receive one frame, appending payload bytes to ``buf`` *as they
+    arrive* — a stream severed mid-frame leaves its realized prefix in
+    ``buf`` for salvage instead of losing it inside the exception."""
+    (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size, counter))
+    start = len(buf)
+    while len(buf) - start < n:
+        part = sock.recv(min(65536, n - (len(buf) - start)))
+        if not part:
+            raise ConnectionError("peer closed mid-frame")
+        buf += part
+        if counter is not None:
+            counter[0] += len(part)
+    return bytes(buf[start:start + n])
+
+
 class TcpStoreServer:
     """Length-prefixed socket server fronting a :class:`KVStore`.
 
@@ -633,7 +861,13 @@ class TcpStoreServer:
     ``get_by_hash`` (two tenants sharing a document prefix hit the same
     blob without the server consulting either tenant's catalog); nil
     entries and flat stores fall back to the ``(cid, chunk, level)`` path.
-    Response: one msgpack header frame ``{ok, sizes | error}``
+    Optional ``range: [offset, length|0]`` and ``want_idx: true`` request
+    keys (see the module docstring) slice the single blob and attach its
+    segment index + full length to the response header — old clients never
+    send them, old servers ignore them.  Connections are persistent: the
+    server loops serving requests until the client closes at a frame
+    boundary (clean goodbye, not a dropped connection).
+    Response: one msgpack header frame ``{ok, sizes[, total, idx] | error}``
     followed by each blob as a raw frame.  ``tier_stats()`` snapshots the
     fronted store's per-tier hit/miss/demotion counters (empty for a flat
     store) — the multi-tenant deployment's observability surface.  ``pace_gbps`` throttles the blob
@@ -654,8 +888,9 @@ class TcpStoreServer:
     ``fault_plan`` (``streaming/faults.FaultPlan``) injects server-side
     chaos per request: a "drop" severs the stream mid-frame (header + half
     the first blob, then close), a "stall" sleeps past the client's timeout,
-    a "corrupt" flips payload bytes before sending.  ``n_injected_faults``
-    counts them.
+    a "corrupt" flips payload bytes before sending, a "truncate" delivers a
+    valid payload prefix then severs (the salvageable partial delivery the
+    resume path exists for).  ``n_injected_faults`` counts them.
     """
 
     def __init__(
@@ -685,6 +920,7 @@ class TcpStoreServer:
         self.last_errors: List[str] = []  # bounded, most recent last
         self._attempt_counts: dict = {}  # (cid, chunk, level) -> tries seen
         self._stats_lock = threading.Lock()
+        self._live_conns: set = set()  # persistent conns to sever on close()
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -727,82 +963,131 @@ class TcpStoreServer:
 
         with self._stats_lock:
             self.n_connections += 1
+            self._live_conns.add(conn)
         try:
             with conn:
-                try:
-                    req = msgpack.unpackb(_recv_frame(conn), raw=False)
-                    cid = req["cid"]
-                    chunks = [(int(c), int(lv)) for c, lv in req["chunks"]]
-                    hashes = req.get("hashes")
-                    if hashes is not None and len(hashes) != len(chunks):
-                        raise ValueError(
-                            f"hashes length {len(hashes)} != chunks "
-                            f"length {len(chunks)}"
-                        )
-                except ConnectionError:
-                    raise  # peer vanished before sending a full request
-                except Exception as e:
-                    with self._stats_lock:
-                        self.n_malformed += 1
-                    self._note_error(f"malformed request frame: {e!r}")
-                    return
-                get_by_hash = getattr(self.store, "get_by_hash", None)
-                if hashes is None or not callable(get_by_hash):
-                    hashes = [None] * len(chunks)
-                try:
-                    blobs = [
-                        get_by_hash(h, lvl)
-                        if h is not None
-                        else self.store.get_kv(cid, ci, lvl)
-                        for h, (ci, lvl) in zip(hashes, chunks)
-                    ]
-                except KeyError as e:
-                    _send_frame(conn, msgpack.packb(
-                        {"ok": False, "error": str(e.args[0])}
-                    ))
-                    return
-                fault, attempt = self._draw_fault(cid, chunks)
-                if fault is not None:
-                    with self._stats_lock:
-                        self.n_injected_faults += 1
-                    self._note_error(
-                        f"injected {fault.kind} fault for {cid!r} chunks {chunks}"
-                    )
-                    if fault.kind == "stall":
-                        time.sleep(fault.delay_s)
-                    elif fault.kind == "corrupt":
-                        blobs = [
-                            self.fault_plan.corrupt_bytes(b, cid, ci, lvl, attempt)
-                            for b, (ci, lvl) in zip(blobs, chunks)
-                        ]
-                _send_frame(conn, msgpack.packb(
-                    {"ok": True, "sizes": [len(b) for b in blobs]}
-                ))
-                if fault is not None and fault.kind == "drop":
-                    # sever mid-frame: length prefix + half the payload,
-                    # then the with-block closes the socket — the client
-                    # sees ConnectionError("peer closed mid-frame")
-                    half = blobs[0][: max(len(blobs[0]) // 2, 1)]
-                    conn.sendall(_LEN.pack(len(blobs[0])) + half)
-                    return
-                if req.get("straggle", True) and self.straggler_p > 0:
-                    key_chunk = chunks[0][0] if chunks else 0
-                    stall = keyed_straggler_delay(
-                        self.seed, key_chunk, int(req.get("attempt", 0)),
-                        p=self.straggler_p, scale_s=self.straggler_scale_s,
-                        alpha=self.straggler_alpha,
-                    )
-                    if stall > 0:
-                        time.sleep(stall)
-                for blob in blobs:
-                    self._send_paced(conn, blob)
+                # persistent connection: serve requests until the client
+                # closes cleanly at a frame boundary (connection reuse —
+                # a retrying session does not re-pay connection setup)
+                while self._serve_one(conn, msgpack):
+                    pass
         except (ConnectionError, OSError, ValueError) as e:
+            if self._closing.is_set():
+                return  # shutdown severed us, not the peer
             # client gone (a cancelled hedge loser, a dropped peer) — the
             # request is over, but the event is counted and attributable
             with self._stats_lock:
                 self.n_dropped_connections += 1
             self._note_error(f"connection dropped mid-exchange: {e!r}")
             return
+        finally:
+            with self._stats_lock:
+                self._live_conns.discard(conn)
+
+    def _serve_one(self, conn: socket.socket, msgpack) -> bool:
+        """Serve one request; False ends the connection (cleanly or after
+        an injected sever fault)."""
+        # clean EOF at a frame boundary is the reuse protocol's goodbye,
+        # not a dropped connection
+        first = conn.recv(1)
+        if not first:
+            return False
+        try:
+            n = _LEN.unpack(first + _recv_exact(conn, _LEN.size - 1))[0]
+            req = msgpack.unpackb(_recv_exact(conn, n), raw=False)
+            cid = req["cid"]
+            chunks = [(int(c), int(lv)) for c, lv in req["chunks"]]
+            hashes = req.get("hashes")
+            if hashes is not None and len(hashes) != len(chunks):
+                raise ValueError(
+                    f"hashes length {len(hashes)} != chunks "
+                    f"length {len(chunks)}"
+                )
+            rng = req.get("range")
+            want_idx = bool(req.get("want_idx"))
+            if rng is not None and len(chunks) != 1:
+                raise ValueError("range request must name exactly one chunk")
+        except ConnectionError:
+            raise  # peer vanished mid-request frame
+        except Exception as e:
+            with self._stats_lock:
+                self.n_malformed += 1
+            self._note_error(f"malformed request frame: {e!r}")
+            return False
+        get_by_hash = getattr(self.store, "get_by_hash", None)
+        if hashes is None or not callable(get_by_hash):
+            hashes = [None] * len(chunks)
+        try:
+            blobs = [
+                get_by_hash(h, lvl)
+                if h is not None
+                else self.store.get_kv(cid, ci, lvl)
+                for h, (ci, lvl) in zip(hashes, chunks)
+            ]
+        except KeyError as e:
+            _send_frame(conn, msgpack.packb(
+                {"ok": False, "error": str(e.args[0])}
+            ))
+            return True
+        # range/index view of the (single) blob — computed before fault
+        # injection so a corrupt fault damages the *delivered* bytes while
+        # the index still describes the canonical blob (the client's
+        # verified_prefix then catches the corruption segment-by-segment)
+        header: dict = {"ok": True}
+        if rng is not None or want_idx:
+            header["total"] = len(blobs[0]) if len(blobs) == 1 else 0
+            if want_idx and len(blobs) == 1:
+                header["idx"] = segment_index(blobs[0]).to_wire()
+            if rng is not None:
+                off, end = _clamp_range(
+                    (int(rng[0]), int(rng[1]) if len(rng) > 1 else None),
+                    len(blobs[0]),
+                )
+                blobs = [blobs[0][off:end]]
+        fault, attempt = self._draw_fault(cid, chunks)
+        if fault is not None:
+            with self._stats_lock:
+                self.n_injected_faults += 1
+            self._note_error(
+                f"injected {fault.kind} fault for {cid!r} chunks {chunks}"
+            )
+            if fault.kind == "stall":
+                time.sleep(fault.delay_s)
+            elif fault.kind == "corrupt":
+                blobs = [
+                    self.fault_plan.corrupt_bytes(b, cid, ci, lvl, attempt)
+                    for b, (ci, lvl) in zip(blobs, chunks)
+                ]
+        header["sizes"] = [len(b) for b in blobs]
+        _send_frame(conn, msgpack.packb(header))
+        if fault is not None and fault.kind == "drop":
+            # sever mid-frame: length prefix + half the payload, then the
+            # connection closes — the client sees ConnectionError
+            half = blobs[0][: max(len(blobs[0]) // 2, 1)]
+            conn.sendall(_LEN.pack(len(blobs[0])) + half)
+            return False
+        if fault is not None and fault.kind == "truncate":
+            # deliver a *valid prefix* then sever: the adversarial input
+            # the resume path must salvage (drop's bytes are mid-frame
+            # garbage to the framing layer; truncate's parse as segments)
+            frac = self.fault_plan.truncate_fraction(
+                cid, chunks[0][0], chunks[0][1], attempt
+            )
+            k = max(1, int(len(blobs[0]) * frac))
+            conn.sendall(_LEN.pack(len(blobs[0])) + blobs[0][:k])
+            return False
+        if req.get("straggle", True) and self.straggler_p > 0:
+            key_chunk = chunks[0][0] if chunks else 0
+            stall = keyed_straggler_delay(
+                self.seed, key_chunk, int(req.get("attempt", 0)),
+                p=self.straggler_p, scale_s=self.straggler_scale_s,
+                alpha=self.straggler_alpha,
+            )
+            if stall > 0:
+                time.sleep(stall)
+        for blob in blobs:
+            self._send_paced(conn, blob)
+        return True
 
     def _send_paced(self, conn: socket.socket, blob: bytes) -> None:
         conn.sendall(_LEN.pack(len(blob)))
@@ -838,6 +1123,15 @@ class TcpStoreServer:
             self._sock.close()
         except OSError:
             pass
+        # persistent connections would otherwise outlive the server — a
+        # pooled client socket must go stale when its server goes away
+        with self._stats_lock:
+            live = list(self._live_conns)
+        for conn in live:
+            try:
+                conn.close()
+            except OSError:
+                pass
 
     def __enter__(self) -> "TcpStoreServer":
         return self
@@ -854,6 +1148,14 @@ class _TcpAttempt:
         self.error: Optional[BaseException] = None
         self.finished = threading.Event()
         self.cancelled = False
+        self.pooled = False  # sock was checked out of the reuse pool
+        # salvage state: payload bytes of a single-chunk fetch accumulate
+        # here as frames drain, so a severed stream leaves its realized
+        # prefix behind instead of vanishing with the exception
+        self.blob_buf = bytearray()
+        self.seg_index: Optional[SegmentIndex] = None
+        self.range_offset = 0
+        self.range_total = 0
 
     @property
     def bytes_read(self) -> int:
@@ -873,13 +1175,36 @@ class _TcpHandle(FetchHandle):
         super().__init__(context_id, chunk_levels)
         self._attempts = attempts
 
+    def salvage_at(self, at_t: Optional[float] = None) -> Optional[Salvage]:
+        # wall-clock transport: "now" is the only observable instant, so
+        # at_t is advisory — the realized prefix is whatever has actually
+        # drained off the socket into the primary attempt's buffer
+        a = self._attempts[0]
+        if not a.blob_buf:
+            return None
+        return Salvage(
+            data=bytes(a.blob_buf),
+            offset=a.range_offset,
+            total=a.range_total,
+            index=a.seg_index,
+            nbytes_wire=float(len(a.blob_buf)),
+        )
+
     def _abort(self) -> None:
         for a in self._attempts:
             a.cancel()
 
 
 class TcpTransport:
-    """Client for :class:`TcpStoreServer`: one connection per attempt.
+    """Client for :class:`TcpStoreServer` with a connection-reuse pool.
+
+    Each attempt runs on its own socket, but sockets whose exchange ends
+    cleanly (frame-aligned) return to a pool and serve the next attempt —
+    a retrying session no longer re-pays TCP setup per retry.  A pooled
+    socket that went stale while idle is replaced by a fresh dial and the
+    request replayed once (``n_reconnects``); sockets severed mid-stream
+    (faults, cancellation, hedging losers) are closed, never pooled.
+    ``tier_stats()`` reports the dial/reuse/reconnect counters.
 
     Timing is measured on the wire — ``end_t = start_t + wall`` and the
     observed throughput is realized bytes over realized seconds, so a
@@ -898,6 +1223,7 @@ class TcpTransport:
     """
 
     realtime = True  # handles resolve on actual link time
+    supports_range = True
 
     def __init__(
         self,
@@ -913,6 +1239,44 @@ class TcpTransport:
         self.connect_timeout_s = connect_timeout_s
         self.io_timeout_s = io_timeout_s
         self.hash_lookup = hash_lookup
+        # connection reuse: sockets whose exchange completed cleanly are
+        # pooled for the next attempt instead of re-paying TCP setup
+        self._pool: List[socket.socket] = []
+        self._pool_lock = threading.Lock()
+        self.n_connects = 0  # fresh sockets dialed
+        self.n_reconnects = 0  # stale pooled socket -> fresh dial + replay
+        self.n_pool_reuses = 0  # attempts served on a pooled socket
+
+    # -- connection pool ---------------------------------------------------
+
+    def _checkout(self) -> Tuple[socket.socket, bool]:
+        """A socket to run one request on: pooled if available, else a
+        fresh dial.  Returns ``(sock, was_pooled)``."""
+        with self._pool_lock:
+            if self._pool:
+                self.n_pool_reuses += 1
+                return self._pool.pop(), True
+            self.n_connects += 1
+        sock = socket.create_connection(
+            (self.host, self.port), timeout=self.connect_timeout_s
+        )
+        sock.settimeout(self.io_timeout_s)
+        return sock, False
+
+    def _checkin(self, sock: socket.socket) -> None:
+        with self._pool_lock:
+            self._pool.append(sock)
+
+    def tier_stats(self) -> dict:
+        """Client-side connection counters (mirrors the server's
+        observability surface): fresh dials, pooled reuses, and reconnects
+        forced by a stale pooled socket."""
+        with self._pool_lock:
+            return {
+                "n_connects": self.n_connects,
+                "n_reconnects": self.n_reconnects,
+                "n_pool_reuses": self.n_pool_reuses,
+            }
 
     def _hashes_for(
         self, context_id: str, chunk_levels: List[Tuple[int, int]]
@@ -938,46 +1302,108 @@ class TcpTransport:
         chunk_levels: List[Tuple[int, int]],
         attempt_idx: int,
         notify: Optional[threading.Event] = None,
+        byte_range: Optional[Tuple[int, Optional[int]]] = None,
+        resumable: bool = False,
     ) -> None:
         import msgpack
 
+        clean = False
         try:
-            sock = socket.create_connection(
-                (self.host, self.port), timeout=self.connect_timeout_s
-            )
-            sock.settimeout(self.io_timeout_s)
-            attempt.sock = sock
-            if attempt.cancelled:
-                # cancel() landed while we were connecting (sock was None,
-                # nothing to close then) — abort before requesting anything,
-                # or the "cancelled" loser would stream the whole payload
-                raise FetchError("attempt cancelled before request")
-            req = {
-                "cid": context_id,
-                "chunks": [list(c) for c in chunk_levels],
-                "straggle": attempt_idx == 0,
-                "attempt": attempt_idx,
-            }
-            hashes = self._hashes_for(context_id, chunk_levels)
-            if hashes is not None:
-                req["hashes"] = hashes
-            _send_frame(sock, msgpack.packb(req))
-            header = msgpack.unpackb(_recv_frame(sock, attempt.counter), raw=False)
-            if not header.get("ok"):
-                raise KeyError(header.get("error", "storage error"))
-            blobs = [_recv_frame(sock, attempt.counter) for _ in header["sizes"]]
-            attempt.blobs = blobs
-        except BaseException as e:
-            attempt.error = e
-        finally:
-            if attempt.sock is not None:
+            try:
+                self._exchange(
+                    attempt, context_id, chunk_levels, attempt_idx,
+                    msgpack, byte_range, resumable,
+                )
+            except (ConnectionError, OSError):
+                # a pooled socket may have gone stale while idle (server
+                # restarted, keepalive lapsed): if the failure hit before
+                # any response bytes arrived, dial fresh and replay once
+                if not (attempt.pooled and attempt.counter[0] == 0
+                        and not attempt.cancelled):
+                    raise
+                with self._pool_lock:
+                    self.n_reconnects += 1
                 try:
                     attempt.sock.close()
                 except OSError:
                     pass
+                attempt.sock = None
+                attempt.pooled = False
+                self._exchange(
+                    attempt, context_id, chunk_levels, attempt_idx,
+                    msgpack, byte_range, resumable,
+                )
+            clean = True
+        except BaseException as e:
+            attempt.error = e
+        finally:
+            if attempt.sock is not None:
+                if clean and not attempt.cancelled:
+                    self._checkin(attempt.sock)  # reusable: frame-aligned
+                else:
+                    try:
+                        attempt.sock.close()
+                    except OSError:
+                        pass
             attempt.finished.set()
             if notify is not None:
                 notify.set()
+
+    def _exchange(
+        self,
+        attempt: _TcpAttempt,
+        context_id: str,
+        chunk_levels: List[Tuple[int, int]],
+        attempt_idx: int,
+        msgpack,
+        byte_range: Optional[Tuple[int, Optional[int]]],
+        resumable: bool,
+    ) -> None:
+        sock, pooled = self._checkout()
+        attempt.sock = sock
+        attempt.pooled = pooled
+        if attempt.cancelled:
+            # cancel() landed while we were connecting (sock was None,
+            # nothing to close then) — abort before requesting anything,
+            # or the "cancelled" loser would stream the whole payload
+            raise FetchError("attempt cancelled before request")
+        req = {
+            "cid": context_id,
+            "chunks": [list(c) for c in chunk_levels],
+            "straggle": attempt_idx == 0,
+            "attempt": attempt_idx,
+        }
+        hashes = self._hashes_for(context_id, chunk_levels)
+        if hashes is not None:
+            req["hashes"] = hashes
+        single = len(chunk_levels) == 1
+        if byte_range is not None and single:
+            off, ln = byte_range
+            req["range"] = [int(off), int(ln) if ln else 0]
+        if (resumable or byte_range is not None) and single:
+            req["want_idx"] = True
+        _send_frame(sock, msgpack.packb(req))
+        header = msgpack.unpackb(_recv_frame(sock, attempt.counter), raw=False)
+        if not header.get("ok"):
+            raise KeyError(header.get("error", "storage error"))
+        if "idx" in header:
+            attempt.seg_index = SegmentIndex.from_wire(header["idx"])
+        if "total" in header:
+            attempt.range_total = int(header["total"])
+            if byte_range is not None:
+                attempt.range_offset = int(byte_range[0])
+        # a pre-range server ignored the request keys and is streaming the
+        # whole blob: "total" absent -> the payload starts at offset 0
+        if single:
+            blobs = [
+                _recv_frame_into(sock, attempt.counter, attempt.blob_buf)
+                for _ in header["sizes"]
+            ]
+        else:
+            blobs = [
+                _recv_frame(sock, attempt.counter) for _ in header["sizes"]
+            ]
+        attempt.blobs = blobs
 
     def fetch_run(
         self,
@@ -986,8 +1412,14 @@ class TcpTransport:
         *,
         start_t: float = 0.0,
         hedge_after_s: Optional[float] = None,
+        byte_range: Optional[Tuple[int, Optional[int]]] = None,
+        resumable: bool = False,
     ) -> FetchHandle:
         chunk_levels = list(chunk_levels)
+        if byte_range is not None and len(chunk_levels) != 1:
+            raise ValueError("byte-range fetch is single-chunk only")
+        if byte_range is not None:
+            hedge_after_s = None  # a resumed suffix is never hedged
         primary = _TcpAttempt()
         attempts = [primary]
         handle = _TcpHandle(attempts, context_id, chunk_levels)
@@ -997,7 +1429,8 @@ class TcpTransport:
             any_finished = threading.Event()
             threading.Thread(
                 target=self._run_attempt,
-                args=(primary, context_id, chunk_levels, 0, any_finished),
+                args=(primary, context_id, chunk_levels, 0, any_finished,
+                      byte_range, resumable),
                 daemon=True,
             ).start()
             hedge: Optional[_TcpAttempt] = None
@@ -1010,7 +1443,8 @@ class TcpTransport:
                     attempts.append(hedge)
                     threading.Thread(
                         target=self._run_attempt,
-                        args=(hedge, context_id, chunk_levels, 1, any_finished),
+                        args=(hedge, context_id, chunk_levels, 1, any_finished,
+                              byte_range, resumable),
                         daemon=True,
                     ).start()
                     if handle.done():  # cancel() raced the hedge spawn
@@ -1061,10 +1495,19 @@ class TcpTransport:
                 loser_cancelled=loser.cancelled if loser is not None else False,
                 loser_bytes_read=loser_read,
                 completion_order=tuple(ci for ci, _ in chunk_levels),
+                seg_index=winner.seg_index,
+                range_offset=winner.range_offset,
+                range_total=winner.range_total,
             ))
 
         threading.Thread(target=coordinate, daemon=True).start()
         return handle
 
     def close(self) -> None:
-        pass
+        with self._pool_lock:
+            pool, self._pool = self._pool, []
+        for sock in pool:
+            try:
+                sock.close()
+            except OSError:
+                pass
