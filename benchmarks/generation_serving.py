@@ -1,0 +1,305 @@
+"""Continuous batched generation vs. drain-then-generate serving.
+
+ISSUE 9: once a context load completes, the session *generates* on the same
+shared engine instead of exiting at TTFT.  This benchmark measures what
+continuous batching buys over the pre-subsystem baseline, which had to
+drain every load and then run each request's generation loop alone
+(``Engine.generate_with_kv``, batch-1, one forward per token per request).
+
+Sections (all seeded, virtual-clock scheduling, wall-clock generation
+throughput):
+
+* ``batched_vs_drain`` — N_BATCH identical t=0 arrivals on an N_BATCH-row
+  pool, every request decoding GEN_TOKENS greedy tokens.  Batched: the
+  ``ContinuousScheduler`` stacks all ready rows into one
+  ``Engine.decode_step_rows`` dispatch per step (wall seconds measured
+  around the actual device dispatches).  Drain baseline: the same loads
+  with ``generation=None``, then one wall-timed batch-1
+  ``generate_with_kv`` loop per request, sequentially.  Acceptance:
+  batched aggregate tokens/s >= 1.5x drain at N_BATCH = 8, with every
+  request's greedy tokens bit-identical to its own oracle.
+* ``mixed`` — Poisson arrivals on a smaller pool: loads and generation
+  steps interleave on the shared engine; reports virtual TPOT mean/p95,
+  the gen-occupancy trace (stacked width over virtual time), and whether
+  generation actually overlapped in-flight loads.
+* ``load_only`` — ``generation=None`` vs. a zero-token ``GenerationSpec``:
+  decisions, TTFTs and caches must be bit-identical (the ``--generate 0``
+  path is exactly the PR 8 open-loop serving path).
+
+Results go to ``BENCH_generation.json`` at the repo root (uploaded as a CI
+artifact next to the other BENCH files).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Optional
+
+import numpy as np
+
+BENCH_GENERATION_FILENAME = "BENCH_generation.json"
+_BENCH_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", BENCH_GENERATION_FILENAME
+)
+
+ARCH = "smollm-360m"
+CTX_LEN = 120
+CHUNK_TOKENS = 20  # 6 chunks per context
+GEN_TOKENS = 32
+N_BATCH = 8  # the acceptance point: batched vs drain at 8 rows
+MIXED_ROWS = 4
+MIXED_REQUESTS = 12
+MIXED_RATE_RPS = 6.0
+SLO_S = 1.25
+GEN_STEP_S = 2e-3
+
+
+def build_assets(seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import registry
+    from repro.core import codec as kvcodec
+    from repro.models import build
+    from repro.serving.engine import Engine
+    from repro.serving.kv_layout import caches_to_codec_kv
+    from repro.streaming import CacheGenStreamer, KVStore
+
+    cfg = registry.get(ARCH).tiny()
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    # every generated token needs a KV slot on its row
+    engine = Engine(cfg, params, cache_capacity=CTX_LEN + GEN_TOKENS + 16)
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab_size, size=(1, CTX_LEN)).astype(np.int32)
+    logits, caches = engine.calculate_kv({"tokens": jnp.asarray(tokens)})
+    kv = caches_to_codec_kv(caches, 0, CTX_LEN)
+    ctab = kvcodec.profile([kv], kvcodec.CodecConfig(precision=10))
+    store = KVStore(ctab)
+    streamer = CacheGenStreamer(store, cfg)
+    metas = store.store_kv("ctx", kv, chunk_tokens=CHUNK_TOKENS)
+    u = sum(m.sizes[1] for m in metas) * 8.0 / 1e9  # level-1 ctx in 1 s
+    first = int(jnp.argmax(logits[0, -1]))
+    return dict(
+        engine=engine, streamer=streamer, tokens=tokens, metas=metas, u=u,
+        first=first,
+    )
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def run(
+    *,
+    out_path: Optional[str] = _BENCH_PATH,
+    seed: int = 0,
+    gen_tokens: int = GEN_TOKENS,
+    verbose: bool = True,
+) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving.generation import GenerationSpec
+    from repro.serving.scheduler import ContinuousScheduler, SessionRequest
+    from repro.serving.session import ServeSession
+    from repro.streaming import BandwidthTrace, NetworkModel
+    from repro.streaming.pipeline import ContentionModel
+
+    assets = build_assets(seed)
+    engine, streamer, tokens, u, first = (
+        assets["engine"], assets["streamer"], assets["tokens"], assets["u"],
+        assets["first"],
+    )
+    recompute_s = lambda t, p: 0.45 * SLO_S * t / CHUNK_TOKENS  # noqa: E731
+    ideal = ContentionModel({1: 1.0, 2: 1.0})
+
+    def mk_session(**kw) -> ServeSession:
+        return ServeSession(
+            streamer, engine, slo_s=SLO_S, recompute_s=recompute_s,
+            decode_bytes_per_s=1e9, max_run_tokens=2 * CHUNK_TOKENS, **kw,
+        )
+
+    def mk_requests(traces, arrivals, specs, **sess_kw):
+        return [
+            SessionRequest(
+                mk_session(**sess_kw), "ctx", tokens, NetworkModel(tr),
+                prior_throughput_gbps=float(tr.gbps[0]), start_t=float(arr),
+                generation=spec,
+            )
+            for tr, arr, spec in zip(traces, arrivals, specs)
+        ]
+
+    # --- A: batched vs drain-then-generate at N_BATCH identical requests ---
+    spec = GenerationSpec(n_tokens=gen_tokens, first_token=first)
+    flat = [BandwidthTrace.constant(3.0 * u) for _ in range(N_BATCH)]
+    zeros = [0.0] * N_BATCH
+
+    def run_batched():
+        return ContinuousScheduler(
+            engine, rows=N_BATCH, contention=ideal, gen_step_s=GEN_STEP_S,
+        ).run(mk_requests(flat, zeros, [spec] * N_BATCH, fixed_level=0))
+
+    run_batched()  # warm-up: compile decode_step_rows outside the timing
+    batched = run_batched()
+    batched_tps = batched.n_gen_tokens / batched.wall_gen_s
+
+    load_only = ContinuousScheduler(
+        engine, rows=N_BATCH, contention=ideal,
+    ).run(mk_requests(flat, zeros, [None] * N_BATCH, fixed_level=0))
+    first_arr = jnp.asarray([first], jnp.int32)
+    engine.generate_with_kv(load_only.sessions[0].caches, first_arr, 2)  # warm
+    oracle_tokens = []
+    t0 = time.perf_counter()
+    for s in load_only.sessions:
+        out = engine.generate_with_kv(s.caches, first_arr, gen_tokens)
+        oracle_tokens.append(out[0].tolist())
+    drain_wall = time.perf_counter() - t0
+    drain_tps = (N_BATCH * gen_tokens) / drain_wall
+
+    tokens_match = all(
+        tl.tokens_out == want
+        for tl, want in zip(batched.timeline, oracle_tokens)
+    )
+    speedup = batched_tps / drain_tps
+    batched_vs_drain = {
+        "n_requests": N_BATCH,
+        "gen_tokens": gen_tokens,
+        "batched": {
+            "tokens_per_s": batched_tps,
+            "wall_gen_s": batched.wall_gen_s,
+            "n_gen_steps": batched.n_gen_steps,
+            "peak_gen_rows": max(n for _, n in batched.gen_occupancy),
+        },
+        "drain": {
+            "tokens_per_s": drain_tps,
+            "wall_gen_s": drain_wall,
+            "n_gen_steps": N_BATCH * gen_tokens,
+        },
+        "speedup": speedup,
+        "tokens_match_oracle": bool(tokens_match),
+    }
+    if verbose:
+        print(
+            f"[batched_vs_drain N={N_BATCH}] batched {batched_tps:,.0f} tok/s "
+            f"({batched.n_gen_steps} steps) | drain {drain_tps:,.0f} tok/s "
+            f"({N_BATCH * gen_tokens} steps) | x{speedup:.2f} "
+            f"oracle_match={tokens_match}"
+        )
+
+    # --- B: mixed Poisson arrivals — generation interleaves with loads -----
+    rng = np.random.default_rng(seed + 17)
+    arrivals = np.cumsum(
+        rng.exponential(1.0 / MIXED_RATE_RPS, size=MIXED_REQUESTS)
+    ).tolist()
+    mixed_traces = [
+        BandwidthTrace.constant((1.5 + (i % 3)) * u)
+        for i in range(MIXED_REQUESTS)
+    ]
+    mixed = ContinuousScheduler(
+        engine, rows=MIXED_ROWS, contention=ideal, gen_step_s=GEN_STEP_S,
+    ).run(mk_requests(
+        mixed_traces, arrivals, [spec] * MIXED_REQUESTS, fixed_level=0,
+    ))
+    tpots = [d for tl in mixed.timeline for d in tl.tpot_s]
+    last_load_finish = max(tl.finish_t for tl in mixed.timeline)
+    first_gen_step = min(t for t, _ in mixed.gen_occupancy)
+    interleaved = bool(first_gen_step < last_load_finish)
+    mixed_report = {
+        "n_requests": MIXED_REQUESTS,
+        "rows": MIXED_ROWS,
+        "rate_rps": MIXED_RATE_RPS,
+        "n_gen_tokens": mixed.n_gen_tokens,
+        "n_gen_steps": mixed.n_gen_steps,
+        "tpot_mean_s": float(np.mean(tpots)),
+        "tpot_p95_s": _percentile(tpots, 95),
+        "peak_gen_rows": max(n for _, n in mixed.gen_occupancy),
+        "generation_interleaved_with_loads": interleaved,
+        "gen_occupancy": [
+            [round(t, 4), n] for t, n in mixed.gen_occupancy[:400]
+        ],
+    }
+    if verbose:
+        print(
+            f"[mixed rows={MIXED_ROWS}] {mixed.n_gen_tokens} tokens in "
+            f"{mixed.n_gen_steps} steps, peak stacked "
+            f"{mixed_report['peak_gen_rows']}, tpot mean "
+            f"{mixed_report['tpot_mean_s']*1e3:.2f} ms p95 "
+            f"{mixed_report['tpot_p95_s']*1e3:.2f} ms, "
+            f"interleaved={interleaved}"
+        )
+
+    # --- C: --generate 0 degeneration — bit-identical to PR 8 load-only ----
+    deg_traces = [
+        BandwidthTrace.constant(3.0 * u),
+        BandwidthTrace.steps(0.2, [1.0 * u, 0.55 * u]),
+    ]
+    runs = []
+    for specs in ([None, None], [GenerationSpec(0, first)] * 2):
+        runs.append(ContinuousScheduler(engine, contention=ideal).run(
+            mk_requests(deg_traces, [0.0, 0.0], specs)
+        ))
+    a, b = runs
+    load_only_identical = (
+        a.n_rounds == b.n_rounds
+        and b.n_gen_steps == 0
+        and all(x.configs == y.configs for x, y in zip(a.sessions, b.sessions))
+        and all(
+            abs(x.ttft_s - y.ttft_s) < 1e-12
+            for x, y in zip(a.sessions, b.sessions)
+        )
+        and all(
+            np.array_equal(
+                np.asarray(x.caches.kv_k[:, :, :CTX_LEN], np.float32),
+                np.asarray(y.caches.kv_k[:, :, :CTX_LEN], np.float32),
+            )
+            for x, y in zip(a.sessions, b.sessions)
+        )
+    )
+    if verbose:
+        print(f"[load_only] zero-token spec bit-identical={load_only_identical}")
+
+    acceptance = {
+        "speedup_ge_1p5": bool(speedup >= 1.5),
+        "batched_speedup": speedup,
+        "greedy_tokens_match_oracle": bool(tokens_match),
+        "load_only_bit_identical": bool(load_only_identical),
+        "generation_interleaved_with_loads": interleaved,
+    }
+    report = {
+        "host_backend": jax.default_backend(),
+        "workload": {
+            "arch": ARCH,
+            "ctx_len": CTX_LEN,
+            "chunk_tokens": CHUNK_TOKENS,
+            "gen_tokens": gen_tokens,
+            "n_batch": N_BATCH,
+            "gen_step_s": GEN_STEP_S,
+            "slo_s": SLO_S,
+            "seed": seed,
+        },
+        "batched_vs_drain": batched_vs_drain,
+        "mixed": mixed_report,
+        "load_only": {"bit_identical": bool(load_only_identical)},
+        "acceptance": acceptance,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        if verbose:
+            print(f"wrote {os.path.abspath(out_path)}")
+    if verbose:
+        print("acceptance:", acceptance)
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gen-tokens", type=int, default=GEN_TOKENS)
+    args = ap.parse_args()
+    run(seed=args.seed, gen_tokens=args.gen_tokens)

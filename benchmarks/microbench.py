@@ -15,15 +15,22 @@ workload and writes ``BENCH_codec.json`` (repo root):
 * ``stacked_prefill`` — prefill concurrency (per M in {1, 2, 4, 8}): M
   rows' TEXT chunks recomputed in one width-masked
   ``Engine.prefill_extend_rows`` forward vs. M per-row ``prefill_extend``
-  calls — the scheduler's coalesced TEXT path.
+  calls — the scheduler's coalesced TEXT path;
+* ``stacked_decode_step`` — generation-step concurrency (per M in
+  {1, 2, 4, 8}): M generating rows' next tokens computed in one
+  ``Engine.decode_step_rows`` dispatch vs. M per-row steps — the
+  continuous scheduler's stacked-generation hot path.
 
 ``streaming.calibration`` reads the fused bytes/s back as the simulator's
 ``decode_bytes_per_s`` default, so TTFT numbers track the real codec across
 PRs; the ``stacked`` aggregate rates calibrate the decode side of the
 multi-session contention model (``measured_contention_factors`` →
-``pipeline.ContentionModel``) and ``stacked_prefill`` calibrates its
-separate TEXT side (``measured_text_contention_factors`` →
-``ContentionModel.text_factor``) instead of reusing the decode curve.
+``pipeline.ContentionModel``), ``stacked_prefill`` calibrates its separate
+TEXT side (``measured_text_contention_factors`` →
+``ContentionModel.text_factor``), and ``stacked_decode_step`` calibrates
+the generation-step side (``measured_generation_contention_factors`` →
+``ContentionModel.gen_factor``) — each with decode-curve fallback instead
+of reusing it outright.
 """
 from __future__ import annotations
 
@@ -122,6 +129,7 @@ def _codec_decode_bench(rows: List[str]) -> None:
         "speedup": speedup,
         "stacked": _stacked_decode_bench(rows, ct, mk_kv),
         "stacked_prefill": _stacked_prefill_bench(rows),
+        "stacked_decode_step": _stacked_decode_step_bench(rows),
     }
     with open(_BENCH_PATH, "w") as f:
         json.dump(report, f, indent=2)
@@ -267,6 +275,73 @@ def _stacked_prefill_bench(rows: List[str]) -> dict:
         rows.append(
             f"micro.prefill_extend_rows_m{m},{t_b*1e6:.0f},"
             f"tok_per_s={n_tok/t_b:.3e};vs_sequential=x{t_s/t_b:.2f}"
+        )
+    return out
+
+
+def _stacked_decode_step_bench(rows: List[str]) -> dict:
+    """Generation-step concurrency: M generating rows' next tokens in one
+    ``decode_step_rows`` dispatch vs. M per-row steps (the continuous
+    scheduler's stacked-generation choice vs. the serialized baseline).
+
+    The per-M batched token rate is what ``calibration.
+    measured_generation_contention_factors`` turns into the generation side
+    of the contention model: factor(M) = M * rate(1) / rate(M) — measured,
+    instead of reusing the decode or prefill curves (a decode step is one
+    token per row attending over its whole realized prefix, a different
+    shape from both).
+    """
+    from repro.configs import registry
+    from repro.models import build
+    from repro.serving.engine import Engine
+
+    cfg = registry.get("smollm-360m").tiny()
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    t_prefix = 64
+    engine = Engine(cfg, params, cache_capacity=t_prefix + 16)
+    out: dict = {}
+    for m in (1, 2, 4, 8):
+        # realize a per-row context so each step attends a non-empty prefix
+        prefix = rng.integers(0, cfg.vocab_size, size=(m, t_prefix)).astype(np.int32)
+        base = engine.empty_caches(m)
+        _, base = engine.prefill_extend_rows(
+            jnp.asarray(prefix), base, np.full((m,), t_prefix, np.int32)
+        )
+        jax.block_until_ready(base.kv_k)
+        toks = rng.integers(0, cfg.vocab_size, size=(m, 1)).astype(np.int32)
+        jt = jnp.asarray(toks)
+        active = jnp.ones((m,), bool)
+
+        def batched():
+            logits, _ = engine.decode_step_rows(jt, base, active)
+            return jax.block_until_ready(logits)
+
+        base1 = engine.empty_caches(1)
+        _, base1 = engine.prefill_extend(jnp.asarray(prefix[:1]), base1)
+        jax.block_until_ready(base1.kv_k)
+        jts = [jnp.asarray(toks[i : i + 1]) for i in range(m)]
+        act1 = jnp.ones((1,), bool)
+
+        def sequential():
+            outs = [engine.decode_step_rows(t, base1, act1)[0] for t in jts]
+            for o in outs:
+                jax.block_until_ready(o)
+            return outs
+
+        t_b = _time_best(batched, n=5)
+        t_s = _time_best(sequential, n=5)
+        out[str(m)] = {
+            "n_requests": m,
+            "prefix_tokens": t_prefix,
+            "batched": {"s_per_call": t_b, "tokens_per_s": m / t_b},
+            "sequential": {"s_per_call": t_s, "tokens_per_s": m / t_s},
+            "speedup": t_s / t_b,
+        }
+        rows.append(
+            f"micro.decode_step_rows_m{m},{t_b*1e6:.0f},"
+            f"tok_per_s={m/t_b:.3e};vs_sequential=x{t_s/t_b:.2f}"
         )
     return out
 

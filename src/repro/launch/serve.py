@@ -71,6 +71,18 @@ transport once its realized duration exceeds F× the live-estimate
 prediction (§C.1 mid-chunk re-planning).  Per-request output then carries
 ``salvaged``/``resumes``/``replans`` next to the PR 6 fault counters, and
 the aggregate lines reconcile salvaged + refetched == wire bytes.
+
+``--generate N`` (ISSUE 9, open-loop only) keeps each request on its
+engine row after the context load completes and decodes N output tokens
+*inside* the scheduler's event loop: every virtual step stacks all ready
+generating rows into one batched ``Engine.decode_step_rows`` dispatch, so
+generation contends with in-flight context loads exactly as Algorithm 1
+sees it (``ContentionModel.gen_factor``).  ``--gen-slo S`` attaches a
+per-output-token latency SLO, ``--sample-seed`` switches greedy argmax to
+seeded sampling, ``--gen-step-ms`` sets the uncontended virtual step cost.
+Per-request output gains ``gen=``/``tpot_mean=``; the aggregate line adds
+mean/p95 TPOT and total generated tokens/s.  ``--generate 0`` (default)
+is load-only and bit-identical to the PR 8 open-loop path.
 """
 from __future__ import annotations
 
@@ -146,6 +158,24 @@ def main() -> None:
                          "must incur before its session is preemptible")
     ap.add_argument("--arrival-seed", type=int, default=0,
                     help="seed for poisson:RATE arrival draws")
+    ap.add_argument("--generate", type=int, default=0, metavar="N",
+                    help="--arrivals: decode N output tokens per request on "
+                         "the shared engine after its context load lands — "
+                         "continuous batching: ready generating rows stack "
+                         "into one decode_step_rows dispatch per virtual "
+                         "step and contend with in-flight loads (0 = "
+                         "load-only, bit-identical to the PR 8 path)")
+    ap.add_argument("--gen-slo", type=float, default=None, metavar="S",
+                    help="--generate: per-output-token latency SLO in "
+                         "seconds (TPOT); EDF admission orders waiters by "
+                         "start + SLO deadline")
+    ap.add_argument("--sample-seed", type=int, default=None,
+                    help="--generate: seeded softmax sampling instead of "
+                         "greedy argmax (greedy stays bit-identical to the "
+                         "generate_with_kv oracle)")
+    ap.add_argument("--gen-step-ms", type=float, default=2.0,
+                    help="--generate: uncontended virtual cost of one "
+                         "stacked decode step (milliseconds)")
     ap.add_argument("--store", choices=("flat", "tiered"), default="flat",
                     help="storage layout: flat = context-keyed, keeps "
                          "everything forever; tiered = content-addressed "
@@ -210,6 +240,14 @@ def main() -> None:
     args = ap.parse_args()
     if args.concurrency < 1:
         raise SystemExit("--concurrency must be >= 1")
+    if args.generate < 0:
+        raise SystemExit("--generate must be >= 0")
+    if args.generate and args.arrivals is None:
+        raise SystemExit(
+            "--generate requires --arrivals (continuous batching lives in "
+            "the open-loop scheduler); closed waves still generate post-hoc "
+            "via --gen"
+        )
 
     import jax
     import jax.numpy as jnp
@@ -237,7 +275,7 @@ def main() -> None:
         )
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, cache_capacity=args.ctx_len + 32)
+    engine = Engine(cfg, params, cache_capacity=args.ctx_len + 32 + args.generate)
     lm = MarkovLM(vocab_size=cfg.vocab_size, seed=0)
     rng = np.random.default_rng(0)
     tokens = lm.sample(rng, args.ctx_len)[None]
@@ -448,6 +486,7 @@ def main() -> None:
         return f" sim_match={res.configs == plan.result.configs}"
 
     if args.arrivals is not None:
+        from repro.serving.generation import GenerationSpec
         from repro.serving.scheduler import (
             ContinuousScheduler,
             PreemptionPolicy,
@@ -459,6 +498,16 @@ def main() -> None:
             BandwidthTrace.sampled(rng, 6, 0.05, 0.05, 2.0)
             for _ in range(args.requests)
         ]
+        gen_spec = None
+        if args.generate:
+            # first decode input = the context prefill's TTFT token
+            first_tok = int(jnp.argmax(logits[0, -1]))
+            gen_spec = GenerationSpec(
+                n_tokens=args.generate,
+                first_token=first_tok,
+                gen_slo_s=args.gen_slo,
+                sample_seed=args.sample_seed,
+            )
         scheduler = ContinuousScheduler(
             engine,
             rows=args.rows if args.rows is not None else args.concurrency,
@@ -466,6 +515,7 @@ def main() -> None:
                 PreemptionPolicy(margin_s=args.preempt_margin)
                 if args.preempt else None
             ),
+            gen_step_s=args.gen_step_ms / 1e3,
         )
         nets = [NetworkModel(tr, rtt_s=0.002) for tr in traces]
         out = scheduler.run([
@@ -473,6 +523,7 @@ def main() -> None:
                 session, "ctx", tokens, net,
                 prior_throughput_gbps=float(tr.gbps[0]), start_t=arr,
                 transport=mk_transport(net),
+                generation=gen_spec,
             )
             for tr, net, arr in zip(traces, nets, arrivals)
         ])
@@ -481,6 +532,11 @@ def main() -> None:
                 f" arrival={tl.arrival_t*1e3:.0f}ms wait={tl.queue_wait_s*1e3:.0f}ms"
                 + (f" preempted={tl.n_preemptions}x" if tl.n_preemptions else "")
             )
+            if tl.n_tokens_out:
+                extra += (
+                    f" gen={tl.n_tokens_out}tok"
+                    f" tpot_mean={tl.mean_tpot_s*1e3:.2f}ms"
+                )
             describe(r, res, extra)
         ttfts = sorted(s.ttft_s for s in out.sessions)
         p = lambda q: ttfts[min(int(q * len(ttfts)), len(ttfts) - 1)]  # noqa: E731
@@ -499,6 +555,23 @@ def main() -> None:
             f"peak_rows={max(n for _, n in out.occupancy)} "
             f"failed={out.n_failed}" + resume
         )
+        if out.n_gen_tokens:
+            tpots = sorted(
+                d for tl in out.timeline for d in tl.tpot_s
+            )
+            pq = lambda q: tpots[min(int(q * len(tpots)), len(tpots) - 1)]  # noqa: E731
+            agg = (
+                out.n_gen_tokens / out.wall_gen_s if out.wall_gen_s > 0
+                else float("nan")
+            )
+            peak_gen = max((n for _, n in out.gen_occupancy), default=0)
+            print(
+                f"[generation tokens={out.n_gen_tokens}] "
+                f"tpot mean={sum(tpots)/len(tpots)*1e3:.2f} ms "
+                f"p95={pq(0.95)*1e3:.2f} ms "
+                f"agg {agg:.1f} tok/s steps={out.n_gen_steps} "
+                f"peak_gen_rows={peak_gen}"
+            )
         close_server()
         return
 

@@ -8,15 +8,19 @@ plus ``prefill_extend`` — compute a text chunk's KV on top of already-loaded
 chunk KV (the streamer's recompute fallback, paper §5.3 fn. 6) — and a
 greedy generation loop used by the examples and quality benchmarks.
 
-One Engine serves many concurrent context loads: a single instance (params,
-jit caches, one device) is shared by every ``serving.session.ServeSession``
-and by the ``serving.scheduler.ConcurrentScheduler``, which allocates a
-*batch-of-requests* cache (one row per live session) and drives the batched
-entry points — ``insert_runs`` (several requests' decoded runs landed at
-per-row offsets in one dispatch) and ``prefill_extend_rows`` (different
-requests' TEXT recomputes coalesced into one padded, width-masked forward).
-The per-request entry points (``decode_to_cache``, ``prefill_extend``)
-remain the single-session path and the scheduler's N=1 differential oracle.
+One Engine serves many concurrent context loads *and* generations: a single
+instance (params, jit caches, one device) is shared by every
+``serving.session.ServeSession`` and by the schedulers in
+``serving.scheduler``, which allocate a *batch-of-requests* cache (one row
+per live session) and drive the batched entry points — ``insert_runs``
+(several requests' decoded runs landed at per-row offsets in one dispatch),
+``prefill_extend_rows`` (different requests' TEXT recomputes coalesced into
+one padded, width-masked forward), and ``decode_step_rows`` (all currently
+*generating* sessions' next-token decode stacked into one forward over the
+shared cache, per-row length offsets, inactive rows bit-preserved).  The
+per-request entry points (``decode_to_cache``, ``prefill_extend``,
+``generate_with_kv``) remain the single-session path and the schedulers'
+N=1 differential oracles.
 
 All steps are jit-compiled once per (batch, capacity[, run-geometry])
 signature and cached.
@@ -54,9 +58,33 @@ class Engine:
                     self.cfg, params, tokens, caches, widths=widths
                 )
             )
+
+            # Stacked generation step over the batch-of-requests cache: one
+            # full-batch decode_step (every row reads/writes at its *own*
+            # length offset), then inactive rows' KV/length are merged back
+            # so only the generating rows advance.  The merge also
+            # neutralizes decode_step's at-capacity clamp for full inactive
+            # rows.  Not donated — callers (microbench, oracles) reuse the
+            # input caches across steps, matching ``self._decode``.
+            def _decode_rows_impl(params, tokens, kv_k, kv_v, length, active):
+                full = lm.Caches(
+                    kv_k=kv_k, kv_v=kv_v, length=length,
+                    mamba_conv=None, mamba_ssm=None, shared_k=None, shared_v=None,
+                )
+                logits, new = lm.decode_step(self.cfg, params, tokens, full)
+                sel = active[None, :, None, None, None]
+                return (
+                    logits,
+                    jnp.where(sel, new.kv_k, kv_k),
+                    jnp.where(sel, new.kv_v, kv_v),
+                    jnp.where(active, new.length, length),
+                )
+
+            self._decode_rows = jax.jit(_decode_rows_impl)
         else:
             self._extend = None
             self._extend_rows = None
+            self._decode_rows = None
         # Decoded-run insertion: donate the cache buffers so XLA performs an
         # in-place dynamic_update_slice instead of copying the whole cache
         # per insertion (donation is a no-op hint on CPU, where XLA warns).
@@ -322,6 +350,44 @@ class Engine:
         logits, k, v, ln = self._extend_gather(
             self.params, tokens, caches.kv_k, caches.kv_v, caches.length,
             jnp.asarray(list(rows), jnp.int32),
+        )
+        return logits, caches._replace(kv_k=k, kv_v=v, length=ln)
+
+    def decode_step_rows(
+        self, tokens: jnp.ndarray, caches: Caches, active
+    ) -> Tuple[jnp.ndarray, Caches]:
+        """Stacked generation step: all generating rows' next token in one
+        forward over the batch-of-requests cache.
+
+        ``tokens`` is (B, 1) with each generating row's current token (rows
+        with ``active[b] == False`` carry padding); ``active`` is (B,) bool.
+        Each active row attends over its own realized prefix (per-row
+        ``caches.length[b]`` offsets), writes its token's KV at that offset,
+        and advances its length by one; inactive rows' KV and length are
+        bit-preserved.  Returns (logits (B, 1, V), caches) — inactive rows'
+        logits are garbage, mirroring :meth:`prefill_extend_rows`.
+
+        Active rows must have ``length < capacity`` before the step (the
+        written token needs a slot); callers validate this host-side when
+        scheduling generation.
+        """
+        if self._decode_rows is None:
+            raise ValueError(f"no cached generation for family {self.cfg.family}")
+        n_rows = caches.kv_k.shape[1]
+        tokens = jnp.asarray(tokens, jnp.int32)
+        if tokens.shape != (n_rows, 1):
+            raise ValueError(
+                f"decode_step_rows: tokens shape {tokens.shape} != "
+                f"({n_rows}, 1) for a {n_rows}-row cache"
+            )
+        active = jnp.asarray(active, bool)
+        if active.shape != (n_rows,):
+            raise ValueError(
+                f"decode_step_rows: active shape {active.shape} != "
+                f"({n_rows},) for a {n_rows}-row cache"
+            )
+        logits, k, v, ln = self._decode_rows(
+            self.params, tokens, caches.kv_k, caches.kv_v, caches.length, active
         )
         return logits, caches._replace(kv_k=k, kv_v=v, length=ln)
 

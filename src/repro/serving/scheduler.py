@@ -1,17 +1,35 @@
 """Multi-session serving on one shared Engine: closed waves and the
-continuous-admission event loop.
+continuous-admission event loop over the full load→generate session
+lifecycle.
+
+A session's life on the engine has two phases.  **Loading** (the paper's
+scope): the context KV streams in — decode, insert, TEXT recompute —
+until the row holds the realized prefix and TTFT is measured.  **Generating**
+(ISSUE 9): if the request carries a
+:class:`~repro.serving.generation.GenerationSpec`, the session does not
+exit at TTFT — it keeps its row and emits output tokens on the *same*
+shared Engine, its decode steps stacked with every other generating
+session's into one ``Engine.decode_step_rows`` dispatch per step
+(continuous batching: sessions join and leave the decode batch at step
+boundaries), interleaved with other sessions' context loads on the virtual
+clock.  Per-token times surface as :class:`RequestTimeline` tokens-out /
+TPOT fields, so the open-loop benchmark measures end-to-end tokens/s under
+SLO rather than context-load latency alone.
 
 Two schedulers share one execution substrate:
 
 * :class:`ConcurrentScheduler` — the closed-wave form (ISSUE 3): N requests
   are all admitted at once and the wave drains to empty.  It remains the
   continuous scheduler's differential oracle, and the N=1 oracle is
-  ``ServeSession`` itself.
+  ``ServeSession`` itself (and ``Engine.generate_with_kv`` for the
+  generation phase).
 * :class:`ContinuousScheduler` — the open-loop form (ISSUE 5): requests
   *arrive* over virtual time (``SessionRequest.start_t`` is the arrival
-  instant), an arrival-ordered admission queue feeds a fixed-capacity
-  :class:`RowPool` over one batch-of-requests cache, and rows are recycled
-  to waiting requests the moment a session finishes.
+  instant), an admission queue — FIFO by default, earliest-SLO-deadline
+  first with ``admission="edf"`` — feeds a fixed-capacity :class:`RowPool`
+  over one batch-of-requests cache, and rows are recycled to waiting
+  requests the moment a session finishes loading (no generation requested)
+  or finishes generating.
 
 Either way, *decisions* are per-request — every load owns its
 ``StreamClock``, Algorithm 1 policy, bandwidth trace and double-buffered
@@ -29,8 +47,9 @@ of all live loads drains into cross-request batched execution:
     padded width-masked ``Engine.prefill_extend_rows`` forward, or a
     gather→compact→scatter ``prefill_extend_gather`` for small subsets.
 
-Event loop (continuous form).  Each iteration is keyed on the two things
-that can unblock work — arrivals and fetch completions:
+Event loop (continuous form).  Each iteration is keyed on the three things
+that can unblock work — arrivals, fetch completions, and generation step
+boundaries:
 
   1. **admission** — the virtual frontier is the earliest instant any live
      task next acts (its pending fetch's completion when peekable, else its
@@ -49,19 +68,36 @@ that can unblock work — arrivals and fetch completions:
      and the tight-deadline waiter takes the row instead of convoying.  The
      suspended session re-enters the admission queue and is restored
      (``Engine.restore_row`` — bit-exact round trip, possibly into a
-     different row) when a row next frees.
-  3. **round** — exactly the wave scheduler's round: live tasks step in
-     virtual-time order (wall-real transports whose fetch hasn't landed are
-     deferred, not blocked on), and the emitted work executes batched,
-     decodes/inserts before recomputes.
+     different row) when a row next frees.  Victim selection is pluggable:
+     ``victim="straggler"`` (default, PR 5 behavior) evicts the
+     latest-landing doomed fetch; ``victim="least_work"`` is cost-aware —
+     it evicts the eligible session with the least *realized* work
+     (loaders' realized prefix tokens vs. generating sessions' context +
+     emitted tokens), counting generating rows as always eligible since
+     their residual work suspends losslessly through the same snapshot
+     path (``current_token`` carries the next decode input host-side).
+  3. **generation step** — when the earliest generation step boundary
+     precedes every live loader's next fetch, all generating sessions that
+     are ready at that instant stack into one ``Engine.decode_step_rows``
+     dispatch; each participant's next token is picked host-side
+     (greedy, or seeded sampling), the step's virtual duration is
+     ``gen_step_s × ContentionModel.gen_factor(M)`` (measured stacked
+     decode-step curve, decode-curve fallback), and every participant's
+     next boundary advances to the step's end — late finishers join the
+     *next* step, which is exactly continuous batching.
+  4. **round** — exactly the wave scheduler's round: live loading tasks
+     step in virtual-time order (wall-real transports whose fetch hasn't
+     landed are deferred, not blocked on), and the emitted work executes
+     batched, decodes/inserts before recomputes.
 
-Contention feedback runs off the *time-varying live-row count*: every
-decision samples ``ContentionModel.factor(n_live)`` for decode and
+Contention feedback runs off the *time-varying live-session count* —
+loading **and** generating: every decision samples
+``ContentionModel.factor(n_live)`` for decode and
 ``ContentionModel.text_factor(n_live)`` for TEXT recompute (separately
 measured prefill-concurrency curve; decode-curve fallback), so a fresh
-admission immediately inflates every other session's projected compute —
-including the remaining-recompute estimate inside ``choose_config`` — and a
-completion immediately relaxes it.
+admission — or a session entering its generation phase — immediately
+inflates every other session's projected compute (Algorithm-1 adaptation
+sees decode pressure), and a completion immediately relaxes it.
 
 Failure isolation (ISSUE 6).  When a request's session carries a
 ``retry_policy``, every fetch fault is absorbed *inside* its own
@@ -77,14 +113,18 @@ per-result failure status and retry/degrade/fallback counters surface in
 legacy contract stands: a fetch error raises out of ``run()`` (pinned by
 tests), taking the wave with it — opt in to isolation per session.
 
-Differential invariants (held by tests/test_continuous.py): with every
-arrival at t=0, preemption disabled and the pool sized to the request count
-(``rows=None``, the default), the continuous loop degenerates to exactly
-the wave scheduler — same admission order, same rounds, same batched
-dispatches, bit-identical caches and decisions — and at N=1 both degenerate
-to ``ServeSession``.  (An over-sized pool keeps per-request decisions and
-caches equivalent but may route small TEXT groups through the gather path,
-whose dispatch split keys on the pool size.)
+Differential invariants (held by tests/test_continuous.py and
+tests/test_generation.py): with every arrival at t=0, preemption disabled
+and the pool sized to the request count (``rows=None``, the default), the
+continuous loop degenerates to exactly the wave scheduler — same admission
+order, same rounds, same batched dispatches, bit-identical caches and
+decisions — and at N=1 both degenerate to ``ServeSession``.  (An over-sized
+pool keeps per-request decisions and caches equivalent but may route small
+TEXT groups through the gather path, whose dispatch split keys on the pool
+size.)  Generation is strictly opt-in: a request with ``generation=None``
+(or a zero-token spec) takes the load-only path bit-identically — same
+rounds, same caches, same TTFTs — and N=1 continuous generation is
+token-identical to the ``Engine.generate_with_kv`` greedy oracle.
 """
 from __future__ import annotations
 
@@ -100,6 +140,7 @@ import numpy as np
 from repro.core import codec as kvcodec
 from repro.models.lm import Caches
 from repro.serving.engine import Engine
+from repro.serving.generation import GenerationSpec, GenerationTask
 from repro.serving.kv_layout import extract_row
 from repro.serving.session import (
     RunWork,
@@ -146,6 +187,9 @@ class SessionRequest:
     # back to the session's transport, else to a per-request SimTransport
     # over ``network`` (see SessionTask.__init__)
     transport: Optional[object] = None
+    # what to generate once the load completes (continuous scheduler only);
+    # None or a zero-token spec = load-only, the pre-ISSUE-9 lifecycle
+    generation: Optional[GenerationSpec] = None
 
 
 @dataclasses.dataclass
@@ -195,10 +239,13 @@ class _SessionAccount:
 class _BatchStats:
     decode_s: float = 0.0
     recompute_s: float = 0.0
+    gen_s: float = 0.0  # wall seconds in stacked generation steps
     n_rounds: int = 0
     n_decode_batches: int = 0
     n_text_batches: int = 0
     n_runs: int = 0
+    n_gen_steps: int = 0
+    n_gen_tokens: int = 0
 
 
 def _execute_runs(
@@ -458,6 +505,15 @@ class RowPool:
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def next_free_since(self) -> float:
+        """Free instant of the row :meth:`allocate` would hand out next
+        (the lowest free row) — the admission-policy frontier when nothing
+        is live: every waiter arrived by then is an EDF candidate."""
+        if not self._free:
+            raise RuntimeError(f"no free rows ({self.describe()})")
+        return self._free_since[self._free[0]]
+
     def describe(self) -> str:
         occupied = ", ".join(
             f"row {r} -> {o!r}" for r, o in sorted(self._owner.items())
@@ -516,26 +572,87 @@ class RowPool:
 
 @dataclasses.dataclass(frozen=True)
 class PreemptionPolicy:
-    """When may a waiting request evict a live session?
+    """When may a waiting request evict a live session, and which one?
 
-    A live session is *preemptible* when its in-flight fetch's completion is
-    knowable (peeked from the handle / the virtual clock) and lands more
-    than ``margin_s`` past the session's own SLO deadline — it will blow its
-    SLO regardless, so holding the row only convoys the queue.  With
-    ``require_waiting_headroom`` (default) the waiter must still have SLO
-    headroom at the preemption instant; a waiter that has already blown its
-    own deadline gains nothing from thrashing a straggler's row.  Among
-    several candidates the most-straggling fetch (latest completion) is
-    evicted first.
+    A live *loading* session is preemptible when its in-flight fetch's
+    completion is knowable (peeked from the handle / the virtual clock) and
+    lands more than ``margin_s`` past the session's own SLO deadline — it
+    will blow its SLO regardless, so holding the row only convoys the
+    queue.  With ``require_waiting_headroom`` (default) the waiter must
+    still have SLO headroom at the preemption instant; a waiter that has
+    already blown its own deadline gains nothing from thrashing another
+    session's row.
+
+    ``victim`` picks among the eligible candidates:
+
+    * ``"straggler"`` (default, PR 5 behavior) — evict the latest-landing
+      doomed fetch; only doomed loaders are candidates.
+    * ``"least_work"`` — cost-aware: evict the candidate with the least
+      *realized* work (tokens materialized in its row), so the cheapest
+      state to re-establish leaves first.  Generating sessions join the
+      candidate set here — their TTFT is already served and their residual
+      state suspends losslessly (bit-exact row snapshot + host-side next
+      token) — but since their realized work includes the whole context
+      plus emitted tokens, they are evicted only when no cheaper doomed
+      loader exists.
     """
 
     margin_s: float = 0.0
     require_waiting_headroom: bool = True
+    victim: str = "straggler"
+
+    def __post_init__(self):
+        if self.victim not in ("straggler", "least_work"):
+            raise ValueError(
+                f"PreemptionPolicy.victim must be 'straggler' or "
+                f"'least_work', got {self.victim!r}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class _VictimCandidate:
+    """One preemption-eligible session (eligibility already filtered)."""
+
+    obj: object  # SessionTask (loading) or GenerationTask (generating)
+    is_gen: bool
+    end_t: float  # doomed fetch's landing instant (inf for generating rows)
+    preempt_t: float  # the instant the eviction would take effect
+    work: int  # realized tokens in the row (context + emitted for gen)
+
+
+def _select_victim(
+    policy: PreemptionPolicy, candidates: List[_VictimCandidate]
+) -> Optional[_VictimCandidate]:
+    """Pick the eviction victim among eligible candidates.
+
+    ``straggler`` takes the latest-landing fetch, ``least_work`` the least
+    realized work; both break ties in candidate order (which the caller
+    builds in live-list order, keeping the straggler path's choice
+    bit-identical to the PR 5 inline loop).
+    """
+    if not candidates:
+        return None
+    best = candidates[0]
+    if policy.victim == "least_work":
+        for c in candidates[1:]:
+            if c.work < best.work:
+                best = c
+        return best
+    for c in candidates[1:]:
+        if c.end_t > best.end_t:
+            best = c
+    return best
 
 
 @dataclasses.dataclass
 class RequestTimeline:
-    """Admission-level life of one request on the virtual clock."""
+    """Admission-level life of one request on the virtual clock.
+
+    ``finish_t`` is the *load*'s completion (the TTFT instant).  When the
+    request generates, ``tokens_out`` / ``token_ts`` record each emitted
+    token and its virtual emission instant, and ``gen_finish_t`` the last
+    token's — so TPOT and end-to-end latency both read off the timeline.
+    """
 
     index: int
     arrival_t: float
@@ -544,6 +661,9 @@ class RequestTimeline:
     rows_used: List[int] = dataclasses.field(default_factory=list)
     preempt_ts: List[float] = dataclasses.field(default_factory=list)
     resume_ts: List[float] = dataclasses.field(default_factory=list)
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+    token_ts: List[float] = dataclasses.field(default_factory=list)
+    gen_finish_t: float = float("nan")
 
     @property
     def queue_wait_s(self) -> float:
@@ -553,6 +673,25 @@ class RequestTimeline:
     def n_preemptions(self) -> int:
         return len(self.preempt_ts)
 
+    @property
+    def n_tokens_out(self) -> int:
+        return len(self.tokens_out)
+
+    @property
+    def tpot_s(self) -> List[float]:
+        """Per-output-token latencies: the first token is measured from the
+        load's finish (the TTFT instant), each later token from the
+        previous one — suspension time between tokens is included."""
+        if not self.token_ts:
+            return []
+        prev = [self.finish_t] + self.token_ts[:-1]
+        return [t - p for t, p in zip(self.token_ts, prev)]
+
+    @property
+    def mean_tpot_s(self) -> float:
+        tp = self.tpot_s
+        return sum(tp) / len(tp) if tp else float("nan")
+
 
 @dataclasses.dataclass
 class ContinuousResult:
@@ -560,8 +699,13 @@ class ContinuousResult:
 
     ``sessions[i].ttft_s`` is measured from request ``i``'s *arrival* —
     queueing and suspension time included.  ``occupancy`` samples the live
-    row count per round ``(virtual_t, n_live)``; preemption/resume counts
-    aggregate the per-request ``timeline`` entries.
+    loading-row count per round ``(virtual_t, n_live)`` and
+    ``gen_occupancy`` the stacked-step width per generation step
+    ``(virtual_t, n_generating)``; preemption/resume counts aggregate the
+    per-request ``timeline`` entries.  ``wall_gen_s`` is realized host
+    seconds inside stacked ``decode_step_rows`` dispatches (per-step token
+    sync included), so ``n_gen_tokens / wall_gen_s`` is the engine's
+    realized aggregate generation throughput.
     """
 
     sessions: List[SessionResult]
@@ -577,6 +721,10 @@ class ContinuousResult:
     n_runs: int
     n_preemptions: int
     n_resumes: int
+    gen_occupancy: List[Tuple[float, int]] = dataclasses.field(default_factory=list)
+    wall_gen_s: float = 0.0
+    n_gen_steps: int = 0
+    n_gen_tokens: int = 0
 
     @property
     def n_failed(self) -> int:
@@ -593,8 +741,15 @@ class ContinuousScheduler:
     preemption off, exact wave-scheduler degeneration).  ``preemption=None``
     disables preemption; pass a :class:`PreemptionPolicy` to let
     tight-deadline waiters evict sessions whose in-flight fetches straggle
-    past their SLO.  ``contention`` as in :class:`ConcurrentScheduler`,
-    driven here by the time-varying live-row count.
+    past their SLO (``victim="least_work"`` for cost-aware selection with
+    generating rows eligible).  ``admission`` orders the ready waiters:
+    ``"fifo"`` (default) by ``(ready_t, index)``, ``"edf"`` by SLO deadline
+    (``start_t + slo_s``) — earliest deadline takes the next free row.
+    ``contention`` as in :class:`ConcurrentScheduler`, driven here by the
+    time-varying live-session count (loading + generating).  ``gen_step_s``
+    is the virtual duration of one uncontended generation decode step;
+    stacked steps of M rows charge ``gen_step_s ×
+    contention.gen_factor(M)``.
     """
 
     # hard backstop against a pathological preempt/resume livelock: any
@@ -608,15 +763,28 @@ class ContinuousScheduler:
         rows: Optional[int] = None,
         contention: Optional[ContentionModel] = None,
         preemption: Optional[PreemptionPolicy] = None,
+        admission: str = "fifo",
+        gen_step_s: float = 2e-3,
     ):
         if rows is not None and rows < 1:
             raise ValueError(f"ContinuousScheduler needs rows >= 1, got {rows}")
+        if admission not in ("fifo", "edf"):
+            raise ValueError(
+                f"ContinuousScheduler admission must be 'fifo' or 'edf', "
+                f"got {admission!r}"
+            )
+        if gen_step_s <= 0:
+            raise ValueError(
+                f"ContinuousScheduler needs gen_step_s > 0, got {gen_step_s}"
+            )
         self.engine = engine
         self.rows = rows
         self.contention = (
             contention if contention is not None else ContentionModel.measured()
         )
         self.preemption = preemption
+        self.admission = admission
+        self.gen_step_s = float(gen_step_s)
         self._n_active = 1
 
     # ------------------------------------------------------------------
@@ -648,7 +816,7 @@ class ContinuousScheduler:
         n_preempt = n_resume = 0
 
         # admission queue: arrivals up front, suspended sessions re-enter
-        # at their suspension instant; (ready_t, index) order
+        # at their suspension instant; (ready_t, index) heap order
         waiting: List[Tuple[float, int]] = [
             (float(r.start_t), i) for i, r in enumerate(requests)
         ]
@@ -656,6 +824,34 @@ class ContinuousScheduler:
         live: List[SessionTask] = []
         acct_by_row: Dict[int, _SessionAccount] = {}
         row_owner: Dict[int, int] = {}  # row -> request idx
+
+        # generation phase: sessions that finished loading and now emit
+        # output tokens on their row; suspended generations park here and
+        # re-enter through the same waiting queue as suspended loads
+        generating: List[GenerationTask] = []
+        parked_gen: Dict[int, GenerationTask] = {}
+        gen_occupancy: List[Tuple[float, int]] = []
+        gen_busy_t = 0.0  # the engine's generation-step frontier
+
+        def _slo_deadline(idx: int) -> float:
+            return float(requests[idx].start_t) + requests[idx].session.slo_s
+
+        def peek_next_waiter(frontier: float) -> Tuple[float, int]:
+            """The waiter the admission policy would admit next among those
+            ready by ``frontier`` (FIFO: earliest ready; EDF: earliest SLO
+            deadline, FIFO order breaking ties)."""
+            if self.admission == "edf":
+                ready = [w for w in waiting if w[0] <= frontier]
+                return min(ready, key=lambda w: (_slo_deadline(w[1]), w))
+            return waiting[0]
+
+        def pop_next_waiter(frontier: float) -> Tuple[float, int]:
+            if self.admission == "edf":
+                best = peek_next_waiter(frontier)
+                waiting.remove(best)
+                heapq.heapify(waiting)
+                return best
+            return heapq.heappop(waiting)
 
         def admit(idx: int, ready_t: float) -> None:
             nonlocal caches, n_resume
@@ -666,6 +862,20 @@ class ContinuousScheduler:
             # a row free since before the request was ready charges no
             # phantom queueing: admission is backdated to ready_t itself
             admit_t = max(ready_t, free_since)
+            g = parked_gen.pop(idx, None)
+            if g is not None:
+                # a suspended *generation* resumes: restore the snapshot
+                # (context + emitted KV, bit-exact) and rejoin the decode
+                # batch at the next step boundary
+                caches = self.engine.restore_row(caches, snaps.pop(idx), row)
+                g.resume(row, admit_t)
+                generating.append(g)
+                timeline[idx].resume_ts.append(admit_t)
+                n_resume += 1
+                timeline[idx].rows_used.append(row)
+                row_owner[row] = idx
+                acct_by_row[row] = acct[idx]
+                return
             t = tasks[idx]
             if t is None:
                 t = SessionTask(
@@ -713,16 +923,109 @@ class ContinuousScheduler:
                 )
             heapq.heappush(waiting, (now_t, idx))
 
+        def preempt_gen(g: GenerationTask, now_t: float) -> None:
+            nonlocal caches, n_preempt
+            idx = g.index
+            row = g.row
+            # the snapshot spans context + emitted tokens; current_token
+            # rides host-side, so the resumed decode is bit-exact
+            snaps[idx] = self.engine.save_row(caches, row, g.realized_tokens)
+            g.suspend(now_t)
+            generating.remove(g)
+            parked_gen[idx] = g
+            del row_owner[row]
+            del acct_by_row[row]
+            pool.release(row, g.label, now_t)
+            timeline[idx].preempt_ts.append(now_t)
+            n_preempt += 1
+            if n_preempt > self.MAX_PREEMPTIONS:
+                raise RuntimeError(
+                    f"preemption runaway: {n_preempt} preemptions "
+                    f"({pool.describe()})"
+                )
+            heapq.heappush(waiting, (now_t, idx))
+
+        def start_generation(idx: int, t: SessionTask, finish_t: float) -> bool:
+            """Transition a finished load into the generating phase on its
+            row.  False (no transition) for load-only or failed requests."""
+            spec = requests[idx].generation
+            if spec is None or spec.n_tokens <= 0 or t.failed:
+                return False
+            generating.append(
+                GenerationTask(
+                    spec,
+                    index=idx,
+                    label=t.label,
+                    row=t.row,
+                    start_t=finish_t,
+                    context_tokens=t.realized_tokens,
+                    capacity=self.engine.capacity,
+                )
+            )
+            return True
+
+        def gen_next_t() -> float:
+            """Virtual instant of the next stacked generation step: the
+            engine frontier, or the earliest ready row if later."""
+            return max(gen_busy_t, min(g.ready_t for g in generating))
+
+        def gen_step() -> None:
+            """One stacked decode step: every generating row that is ready
+            at the step instant advances one token in a single
+            ``decode_step_rows`` dispatch; rows mid-resume join the next
+            step (continuous batching at step boundaries)."""
+            nonlocal caches, gen_busy_t
+            step_t = gen_next_t()
+            part = [g for g in generating if g.ready_t <= step_t]
+            tokens = np.zeros((n_rows, 1), np.int32)
+            active = np.zeros((n_rows,), bool)
+            for g in part:
+                tokens[g.row, 0] = g.current_token
+                active[g.row] = True
+            t0 = time.perf_counter()
+            logits, caches = self.engine.decode_step_rows(
+                jnp.asarray(tokens), caches, jnp.asarray(active)
+            )
+            # host sync per step: the sampled tokens are the next inputs
+            last = np.asarray(logits[:, -1], np.float32)
+            dt = time.perf_counter() - t0
+            m = len(part)
+            end_t = step_t + self.gen_step_s * self.contention.gen_factor(m)
+            stats.gen_s += dt
+            stats.n_gen_steps += 1
+            stats.n_gen_tokens += m
+            gen_occupancy.append((step_t, m))
+            for g in part:
+                g.record(g.next_token(last[g.row]), end_t)
+            gen_busy_t = end_t
+            for g in [x for x in part if x.done]:
+                idx = g.index
+                timeline[idx].tokens_out = list(g.tokens_out)
+                timeline[idx].token_ts = list(g.token_ts)
+                timeline[idx].gen_finish_t = end_t
+                generating.remove(g)
+                del row_owner[g.row]
+                del acct_by_row[g.row]
+                pool.release(g.row, g.label, end_t)
+
         wall0 = time.perf_counter()
-        while live or waiting:
+        while live or waiting or generating:
             # --- admission + preemption at the virtual frontier ------------
             if waiting:
-                if live:
-                    frontier = min(t.horizon_t() for t in live)
+                if live or generating:
+                    horizons = [t.horizon_t() for t in live]
+                    if generating:
+                        horizons.append(gen_next_t())
+                    frontier = min(horizons)
                 else:
-                    frontier = waiting[0][0]
+                    # nothing live: the next admission happens at the freed
+                    # row's release instant (or the earliest arrival if the
+                    # row freed before anyone arrived), so every waiter
+                    # arrived by then is an admission candidate — EDF must
+                    # rank them all, not just the earliest arrival
+                    frontier = max(waiting[0][0], pool.next_free_since)
                 while waiting and waiting[0][0] <= frontier and pool.n_free > 0:
-                    ready_t, idx = heapq.heappop(waiting)
+                    ready_t, idx = pop_next_waiter(frontier)
                     admit(idx, ready_t)
                 while (
                     self.preemption is not None
@@ -730,36 +1033,63 @@ class ContinuousScheduler:
                     and pool.n_free == 0
                     and waiting[0][0] <= frontier
                 ):
-                    head_ready, head_idx = waiting[0]
-                    head_req = requests[head_idx]
-                    head_deadline = (
-                        float(head_req.start_t) + head_req.session.slo_s
-                    )
-                    # a candidate's eviction instant: when the waiter became
-                    # ready, but never before the candidate's in-flight
-                    # fetch started (the engine cannot cancel in the past)
-                    victim, victim_end, victim_t = None, -float("inf"), 0.0
+                    policy = self.preemption
+                    head_ready, head_idx = peek_next_waiter(frontier)
+                    head_deadline = _slo_deadline(head_idx)
+                    cands: List[_VictimCandidate] = []
                     for t in live:
                         end = t.peek_pending_end_t()
                         if end is None:
                             continue
+                        # a candidate's eviction instant: when the waiter
+                        # became ready, but never before the candidate's
+                        # in-flight fetch started (the engine cannot cancel
+                        # in the past)
                         preempt_t = max(head_ready, t.next_fetch_t)
-                        if end <= t.deadline_t + self.preemption.margin_s:
+                        if end <= t.deadline_t + policy.margin_s:
                             continue  # fetch lands within the SLO: keep it
                         if (
-                            self.preemption.require_waiting_headroom
+                            policy.require_waiting_headroom
                             and preempt_t >= head_deadline
                         ):
                             continue  # waiter would start already expired
-                        if end > victim_end:
-                            victim, victim_end, victim_t = t, end, preempt_t
+                        cands.append(_VictimCandidate(
+                            obj=t, is_gen=False, end_t=end,
+                            preempt_t=preempt_t, work=t.realized_tokens,
+                        ))
+                    if policy.victim == "least_work":
+                        # generating rows are eligible under the cost-aware
+                        # rule: TTFT already served, residual work suspends
+                        # losslessly — no doomed-fetch test applies
+                        for g in generating:
+                            preempt_t = max(head_ready, g.ready_t)
+                            if (
+                                policy.require_waiting_headroom
+                                and preempt_t >= head_deadline
+                            ):
+                                continue
+                            cands.append(_VictimCandidate(
+                                obj=g, is_gen=True, end_t=float("inf"),
+                                preempt_t=preempt_t, work=g.realized_tokens,
+                            ))
+                    victim = _select_victim(policy, cands)
                     if victim is None:
                         break
-                    heapq.heappop(waiting)
-                    preempt(victim, victim_t)
+                    pop_next_waiter(frontier)
+                    if victim.is_gen:
+                        preempt_gen(victim.obj, victim.preempt_t)
+                    else:
+                        preempt(victim.obj, victim.preempt_t)
                     admit(head_idx, head_ready)
-            if not live:
+            if not live and not generating:
                 continue  # admission above is guaranteed to make progress
+
+            # --- generation step vs. load round: earliest event first ------
+            if generating and (
+                not live or gen_next_t() <= min(t.next_fetch_t for t in live)
+            ):
+                gen_step()
+                continue
 
             # --- one wave-identical round over the live set ----------------
             stats.n_rounds += 1
@@ -769,13 +1099,15 @@ class ContinuousScheduler:
             round_runs: List[RunWork] = []
             round_texts: List[TextWork] = []
             for t in ready if ready else ordered[:1]:
-                self._n_active = sum(1 for x in live if not x.done)
+                self._n_active = (
+                    sum(1 for x in live if not x.done) + len(generating)
+                )
                 for w in t.step():
                     (round_runs if isinstance(w, RunWork) else round_texts).append(w)
             caches = _execute_runs(self.engine, round_runs, caches, acct_by_row, stats)
             caches = _execute_texts(self.engine, round_texts, caches, acct_by_row, stats)
 
-            # --- completions: extract the row, recycle it ------------------
+            # --- completions: extract the row, then generate or recycle ----
             for t in [x for x in live if x.done]:
                 idx = row_owner[t.row]
                 finish_t = max(t.clock.fetch_t, t.clock.compute_t)
@@ -788,6 +1120,8 @@ class ContinuousScheduler:
                 )
                 timeline[idx].finish_t = finish_t
                 live.remove(t)
+                if start_generation(idx, t, finish_t):
+                    continue  # row stays: the session now generates on it
                 del row_owner[t.row]
                 del acct_by_row[t.row]
                 pool.release(t.row, t.label, finish_t)
@@ -811,4 +1145,8 @@ class ContinuousScheduler:
             n_runs=stats.n_runs,
             n_preemptions=n_preempt,
             n_resumes=n_resume,
+            gen_occupancy=gen_occupancy,
+            wall_gen_s=stats.gen_s,
+            n_gen_steps=stats.n_gen_steps,
+            n_gen_tokens=stats.n_gen_tokens,
         )

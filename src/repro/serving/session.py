@@ -98,6 +98,28 @@ the live throughput estimate is cancelled *mid-chunk* on the virtual clock
 axis, so a byte prefix cannot shorten the recompute).  Accounting
 reconciles per chunk: ``salvaged_bytes + refetched_bytes == wire_bytes``.
 
+Load → generate lifecycle (ISSUE 9)
+-----------------------------------
+A task's life no longer ends at TTFT.  Loading a context is *phase one*:
+``SessionTask`` owns the row while chunks stream in, and ``done`` marks the
+instant the full context is resident — the ``SessionResult`` snapshot
+(decisions, timelines, the extracted cache) is frozen right there, so
+everything above stays exactly the PR 8 story.  When the request carries a
+:class:`~repro.serving.generation.GenerationSpec`, the continuous scheduler
+then keeps the row and hands it to a
+:class:`~repro.serving.generation.GenerationTask` — *phase two*: the
+session's loaded KV becomes the prefix that batched
+``Engine.decode_step_rows`` steps extend token by token, stacked with every
+other generating row and charged to the same virtual clock the loads run
+on.  Suspension is phase-aware: a *loading* row suspends through
+``SessionTask.suspend`` (fetch handle cancelled, realized chunk rows
+snapshotted), a *generating* row through ``GenerationTask.suspend`` (the
+``RowSnapshot`` spans context + emitted tokens and the next input token
+rides host-side) — both re-enter the same admission queue and resume
+bit-exactly.  A finished ``SessionTask`` is never mutated by phase two:
+generation timing and tokens live on the scheduler's ``RequestTimeline``
+(``tokens_out`` / ``token_ts`` / TPOT), not on the session result.
+
 The session emits :class:`~repro.streaming.pipeline.ChunkTimeline`-
 compatible records (``SessionResult.stream_result()``), so everything that
 consumes simulator output — SLO accounting, figure scripts — reads session

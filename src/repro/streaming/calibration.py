@@ -39,6 +39,7 @@ __all__ = [
     "clear_calibration_cache",
     "measured_decode_bytes_per_s",
     "measured_contention_factors",
+    "measured_generation_contention_factors",
     "measured_level_priorities",
     "measured_text_contention_factors",
 ]
@@ -281,3 +282,46 @@ def measured_text_contention_factors(
 
     sig = tuple(_file_sig(p) for p in cands)
     return dict(_memoized(("text_contention", cands, backend), sig, compute))
+
+
+def measured_generation_contention_factors(
+    path: Optional[str] = None,
+) -> Dict[int, float]:
+    """Per-session generation-step slowdown at M generating rows.
+
+    Reads the microbench's ``stacked_decode_step`` section: for each M it
+    recorded the aggregate token throughput of M generating rows' next
+    tokens computed in one ``decode_step_rows`` dispatch.  Same arithmetic
+    as :func:`measured_contention_factors` — ``factor(M) = M * thpt(1) /
+    thpt(M)``, clamped to >= 1.0 — but over the stacked decode-*step*
+    curve, which is its own shape again (one token per row per forward,
+    attention over each row's whole realized prefix).  Returns ``{}`` when
+    no stacked-step measurement exists; callers
+    (``pipeline.ContentionModel.gen_factor``) then fall back to the decode
+    curve.
+    """
+    import jax
+
+    backend = jax.default_backend()
+    cands = tuple([path] if path else bench_codec_candidates())
+
+    def extract(report):
+        rates = {
+            int(m): float(row["batched"]["tokens_per_s"])
+            for m, row in report["stacked_decode_step"].items()
+        }
+        base = rates.get(1)
+        if not base or base <= 0:
+            return None
+        return {
+            m: max(1.0, m * base / r)
+            for m, r in sorted(rates.items())
+            if r > 0
+        }
+
+    def compute():
+        factors = _first_measurement(cands, backend, extract)
+        return {} if factors is None else factors
+
+    sig = tuple(_file_sig(p) for p in cands)
+    return dict(_memoized(("gen_contention", cands, backend), sig, compute))

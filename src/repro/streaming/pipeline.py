@@ -46,6 +46,7 @@ from repro.streaming.adaptation import TEXT, AdaptationPolicy
 from repro.streaming.calibration import (
     measured_contention_factors,
     measured_decode_bytes_per_s,
+    measured_generation_contention_factors,
     measured_text_contention_factors,
 )
 from repro.streaming.network import FetchOutcome, NetworkModel
@@ -81,17 +82,26 @@ class ContentionModel:
     the microbench's stacked-prefill section
     (``calibration.measured_text_contention_factors``) and is read through
     :meth:`text_factor`; when no prefill measurement exists it falls back to
-    the decode curve (the pre-split behavior, bit-identical).
+    the decode curve (the pre-split behavior, bit-identical).  Generation
+    decode steps stack differently again (one token per row per dispatch,
+    the whole realized prefix attended over), so the stacked-step slowdown
+    carries a third map: ``gen_factors`` comes from the microbench's
+    stacked-decode-step section
+    (``calibration.measured_generation_contention_factors``) and is read
+    through :meth:`gen_factor`, with the same decode-curve fallback.
 
-    The continuous scheduler drives both factors with the *time-varying*
-    live-row count: ``n_active`` is whatever number of sessions currently
-    holds a cache row, re-sampled at every decision, so admission and
-    completion immediately reprice every other session's projected compute —
-    including the remaining-recompute estimate inside ``choose_config``.
+    The continuous scheduler drives all factors with the *time-varying*
+    live-session count (loading + generating): ``n_active`` is whatever
+    number of sessions currently holds a cache row, re-sampled at every
+    decision, so admission, completion, and a session entering its
+    generation phase immediately reprice every other session's projected
+    compute — including the remaining-recompute estimate inside
+    ``choose_config``.
     """
 
     factors: Mapping[int, float] = dataclasses.field(default_factory=dict)
     text_factors: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    gen_factors: Mapping[int, float] = dataclasses.field(default_factory=dict)
 
     @staticmethod
     def measured(path: Optional[str] = None) -> "ContentionModel":
@@ -99,6 +109,7 @@ class ContentionModel:
         return ContentionModel(
             measured_contention_factors(path),
             measured_text_contention_factors(path),
+            measured_generation_contention_factors(path),
         )
 
     @staticmethod
@@ -139,6 +150,16 @@ class ContentionModel:
         if n == 1:
             return 1.0
         v = self._interp(self.text_factors, n)
+        return self.factor(n) if v is None else v
+
+    def gen_factor(self, n_active: int) -> float:
+        """Stacked generation-step slowdown at ``n_active`` generating rows
+        (one ``decode_step_rows`` dispatch of that width vs. width 1); falls
+        back to the decode curve when no stacked-step measurement exists."""
+        n = max(int(n_active), 1)
+        if n == 1:
+            return 1.0
+        v = self._interp(self.gen_factors, n)
         return self.factor(n) if v is None else v
 
 

@@ -94,6 +94,49 @@ def test_decode_attention_matches_ref(case):
     )
 
 
+def test_decode_attention_random_row_lengths():
+    """Continuous-batching shape: a wide batch where every row attends over
+    a different realized prefix (ISSUE 9's stacked decode step), including
+    the at-capacity edge (lens[0] == S) and a just-admitted row (lens[1] ==
+    1) inside one dispatch."""
+    B, Hq, Hkv, S, D = 8, 4, 2, 512, 64
+    rng = np.random.default_rng(19)
+    lens = rng.integers(1, S + 1, size=B)
+    lens[0] = S  # capacity edge: the full ring is valid KV
+    lens[1] = 1  # minimum prefix: only the first slot is valid
+    q = _rand((B, Hq, D))
+    k = _rand((B, Hkv, S, D))
+    v = _rand((B, Hkv, S, D))
+    kv_len = jnp.asarray(lens, jnp.int32)
+    out = decode_attention_pallas(q, k, v, kv_len, block_s=128, interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, kv_len=kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=2e-5, rtol=2e-5,
+    )
+
+
+def test_decode_attention_full_lengths_equal_no_mask():
+    """kv_len == S everywhere must be the same computation as kv_len=None
+    (the mask at capacity is a no-op, in kernel and reference alike)."""
+    B, Hq, Hkv, S, D = 3, 2, 2, 256, 64
+    q = _rand((B, Hq, D))
+    k = _rand((B, Hkv, S, D))
+    v = _rand((B, Hkv, S, D))
+    full = jnp.full((B,), S, jnp.int32)
+    out_masked = decode_attention_pallas(q, k, v, full, block_s=64, interpret=True)
+    out_plain = decode_attention_pallas(q, k, v, None, block_s=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out_masked, np.float32), np.asarray(out_plain, np.float32),
+        atol=1e-6, rtol=1e-6,
+    )
+    expect = ref.decode_attention_ref(q, k, v, kv_len=None)
+    np.testing.assert_allclose(
+        np.asarray(out_plain, np.float32), np.asarray(expect, np.float32),
+        atol=2e-5, rtol=2e-5,
+    )
+
+
 # ---------------------------------------------------------------------------
 # kvquant
 # ---------------------------------------------------------------------------
