@@ -1,0 +1,284 @@
+"""Mesh-sharded serving benchmark: rows and token bandwidth vs shard count.
+
+Runs the same open-loop load+generate workload through the
+``ContinuousScheduler`` on a ``ShardedEngine`` over host-device meshes of
+1/2/4/8 devices (rows per shard held constant, so row capacity grows
+linearly with the mesh) and reports aggregate decode+generation tokens
+per virtual second per mesh size.  Timing is the scheduler's virtual
+clock priced by the *measured* contention curves (BENCH_codec.json): an
+S-shard mesh splits its rows into S contention domains, so N live
+sessions pay the single-device curve at the per-shard width ceil(N/S) —
+``calibration.sharded_contention_factors`` records the effective curve
+per mesh size in the report.
+
+Also checks, and records as acceptance booleans, that the mesh=1 sharded
+engine is bit-identical to the plain ``Engine`` through both schedulers
+(the ``ConcurrentScheduler`` wave and the ``ContinuousScheduler``).
+
+Writes ``BENCH_mesh.json`` at the repo root.  Forces 8 host devices via
+``XLA_FLAGS`` before jax initializes; meshes larger than the visible
+device count are skipped (recorded in the report).
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+# Device count locks in at first jax init, so the flag must be in the
+# environment before *any* jax import — including transitively via repro.
+_WANT_DEVICES = 8
+if "jax" not in sys.modules and "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_WANT_DEVICES}"
+    ).strip()
+
+ARCH = "smollm-360m"
+T_CTX = 100
+CHUNK_TOKENS = 20  # 5 chunks per context
+GEN_TOKENS = 12
+N_REQ = 16
+ROWS_PER_SHARD = 2
+MESHES = (1, 2, 4, 8)
+SLO_S = 1.25
+GEN_STEP_S = 2e-3
+
+BENCH_MESH_FILENAME = "BENCH_mesh.json"
+_BENCH_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", BENCH_MESH_FILENAME
+)
+
+
+def build_assets(seed: int = 0):
+    """Model, engine, stored context and codec tables shared by every run."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import registry
+    from repro.core import codec as kvcodec
+    from repro.models import build
+    from repro.serving.engine import Engine
+    from repro.serving.kv_layout import caches_to_codec_kv
+    from repro.streaming import CacheGenStreamer, KVStore
+
+    rng = np.random.default_rng(seed)
+    cfg = registry.get(ARCH).tiny()
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    eng = Engine(cfg, params, cache_capacity=T_CTX + GEN_TOKENS + 36)
+    tokens = rng.integers(0, cfg.vocab_size, size=(1, T_CTX)).astype(np.int32)
+    logits, caches = eng.calculate_kv({"tokens": jnp.asarray(tokens)})
+    kv = caches_to_codec_kv(caches, 0, T_CTX)
+    ctab = kvcodec.profile([kv], kvcodec.CodecConfig(precision=10))
+    store = KVStore(ctab)
+    streamer = CacheGenStreamer(store, cfg)
+    metas = store.store_kv("ctx", kv, chunk_tokens=CHUNK_TOKENS)
+    u = sum(m.sizes[1] for m in metas) * 8 / 1e9  # gbps loading ctx in 1 s
+    first = int(jnp.argmax(logits[0, -1]))
+    return dict(
+        cfg=cfg, params=params, eng=eng, tokens=tokens, store=store,
+        streamer=streamer, u=u, first=first,
+    )
+
+
+def _requests(assets, eng, n_req, *, gen_tokens=GEN_TOKENS):
+    """n_req staggered load+generate requests over the shared context."""
+    from repro.serving.generation import GenerationSpec
+    from repro.serving.scheduler import SessionRequest
+    from repro.serving.session import ServeSession
+    from repro.streaming.network import BandwidthTrace, NetworkModel
+
+    u = assets["u"]
+    reqs = []
+    for i in range(n_req):
+        gbps = (3.0, 4.5, 6.0, 4.0)[i % 4] * u
+        # fixed_level: load time is bandwidth-determined, not SLO-adaptive
+        # (an adaptive session pads quality to fill the latency budget,
+        # which would mask the row-capacity scaling this bench measures)
+        sess = ServeSession(
+            assets["streamer"], eng, slo_s=SLO_S, fixed_level=1,
+            recompute_s=lambda t, p: 0.15 * SLO_S * t / CHUNK_TOKENS,
+            decode_bytes_per_s=1e9, max_run_tokens=2 * CHUNK_TOKENS,
+        )
+        reqs.append(SessionRequest(
+            sess, "ctx", assets["tokens"], NetworkModel(BandwidthTrace.constant(gbps)),
+            prior_throughput_gbps=gbps, start_t=0.02 * i,
+            generation=GenerationSpec(gen_tokens, assets["first"]),
+        ))
+    return reqs
+
+
+def _results_bit_identical(a, b):
+    """configs, TTFTs, caches and emitted tokens equal per request."""
+    import numpy as np
+
+    for x, y in zip(a.sessions, b.sessions):
+        if x.configs != y.configs or abs(x.ttft_s - y.ttft_s) > 1e-12:
+            return False
+        for fld in ("kv_k", "kv_v"):
+            p = np.asarray(getattr(x.caches, fld)[:, :, :T_CTX], np.float32)
+            q = np.asarray(getattr(y.caches, fld)[:, :, :T_CTX], np.float32)
+            if not np.array_equal(p, q):
+                return False
+    if hasattr(a, "timeline"):
+        for ta, tb in zip(a.timeline, b.timeline):
+            if ta.tokens_out != tb.tokens_out or ta.token_ts != tb.token_ts:
+                return False
+    return True
+
+
+def _virtual_makespan(out):
+    """First arrival to last virtual completion (load or last token)."""
+    end = 0.0
+    for t in out.timeline:
+        last = t.gen_finish_t if not math.isnan(t.gen_finish_t) else t.finish_t
+        end = max(end, last)
+    return end - min(t.arrival_t for t in out.timeline)
+
+
+def run(*, out_path: str = _BENCH_PATH, seed: int = 0, n_req: int = N_REQ,
+        verbose: bool = True):
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.mesh_engine import ShardedEngine
+    from repro.serving.scheduler import ConcurrentScheduler, ContinuousScheduler
+    from repro.streaming import calibration
+    from repro.streaming.pipeline import ContentionModel
+
+    def say(msg):
+        if verbose:
+            print(msg, flush=True)
+
+    n_dev = len(jax.devices())
+    say(f"devices: {n_dev} ({jax.default_backend()})")
+    assets = build_assets(seed)
+    contention = ContentionModel.measured()
+    meshes = [d for d in MESHES if d <= n_dev]
+    skipped = [d for d in MESHES if d > n_dev]
+
+    engines = {}
+    for d in meshes:
+        engines[d] = ShardedEngine(
+            assets["cfg"], assets["params"],
+            cache_capacity=T_CTX + GEN_TOKENS + 36,
+            mesh=make_serving_mesh(d),
+        )
+
+    # -- warm-up: trace/compile every engine's primitives off the clock ----
+    say("warm-up (compile) ...")
+    for d in meshes:
+        ContinuousScheduler(
+            engines[d], rows=ROWS_PER_SHARD * d, contention=contention,
+            gen_step_s=GEN_STEP_S,
+        ).run(_requests(assets, engines[d], 2, gen_tokens=2))
+
+    # -- mesh scaling: same open-loop workload, rows per shard constant ----
+    scaling = []
+    for d in meshes:
+        rows = ROWS_PER_SHARD * d
+        sched = ContinuousScheduler(
+            engines[d], rows=rows, contention=contention, gen_step_s=GEN_STEP_S,
+        )
+        t0 = time.perf_counter()
+        out = sched.run(_requests(assets, engines[d], n_req))
+        wall_s = time.perf_counter() - t0
+        makespan = _virtual_makespan(out)
+        total_tokens = n_req * T_CTX + out.n_gen_tokens
+        rec = {
+            "n_shards": d,
+            "rows": out.n_rows,
+            "n_requests": n_req,
+            "virtual_makespan_s": makespan,
+            "context_tokens": n_req * T_CTX,
+            "gen_tokens": out.n_gen_tokens,
+            "aggregate_tokens_per_s": total_tokens / makespan,
+            "mean_ttft_s": sum(s.ttft_s for s in out.sessions) / n_req,
+            "mean_queue_wait_s": sum(t.queue_wait_s for t in out.timeline) / n_req,
+            "n_failed": out.n_failed,
+            "effective_contention": {
+                str(k): v
+                for k, v in calibration.sharded_contention_factors(d).items()
+            },
+            "wall_s": wall_s,
+        }
+        scaling.append(rec)
+        say(
+            f"mesh={d}: rows={rec['rows']} makespan={makespan:.3f}s "
+            f"aggregate={rec['aggregate_tokens_per_s']:.0f} tok/s "
+            f"ttft={rec['mean_ttft_s']:.3f}s (wall {wall_s:.1f}s)"
+        )
+
+    base = scaling[0]
+    speedups = {
+        str(r["n_shards"]): r["aggregate_tokens_per_s"] / base["aggregate_tokens_per_s"]
+        for r in scaling
+    }
+
+    # -- mesh=1 bit-identity vs the plain Engine, both schedulers ----------
+    say("mesh=1 identity vs plain Engine ...")
+    se1, eng = engines[1], assets["eng"]
+    n_id = 6
+    wave_ok = _results_bit_identical(
+        ConcurrentScheduler(eng, contention=contention).run(
+            _requests(assets, eng, n_id)),
+        ConcurrentScheduler(se1, contention=contention).run(
+            _requests(assets, se1, n_id)),
+    )
+    cont_ok = _results_bit_identical(
+        ContinuousScheduler(
+            eng, rows=2, contention=contention, gen_step_s=GEN_STEP_S,
+        ).run(_requests(assets, eng, n_id)),
+        ContinuousScheduler(
+            se1, rows=2, contention=contention, gen_step_s=GEN_STEP_S,
+        ).run(_requests(assets, se1, n_id)),
+    )
+    say(f"  wave: {'ok' if wave_ok else 'MISMATCH'}  "
+        f"continuous: {'ok' if cont_ok else 'MISMATCH'}")
+
+    speedup_4 = speedups.get("4")
+    acceptance = {
+        "mesh1_bit_identical_wave": wave_ok,
+        "mesh1_bit_identical_continuous": cont_ok,
+        "rows_scale_linearly": all(
+            r["rows"] == r["n_shards"] * scaling[0]["rows"] for r in scaling
+        ),
+        "no_failed_requests": all(r["n_failed"] == 0 for r in scaling),
+        "speedup_4dev_ge_1p6": (speedup_4 is not None and speedup_4 >= 1.6),
+    }
+
+    report = {
+        "benchmark": "mesh_serving",
+        "host_backend": jax.default_backend(),
+        "n_devices": n_dev,
+        "workload": {
+            "arch": ARCH, "ctx_tokens": T_CTX, "chunk_tokens": CHUNK_TOKENS,
+            "gen_tokens": GEN_TOKENS, "n_requests": n_req,
+            "rows_per_shard": ROWS_PER_SHARD, "slo_s": SLO_S,
+            "gen_step_s": GEN_STEP_S, "seed": seed,
+        },
+        "mesh_scaling": scaling,
+        "speedup_vs_1shard": speedups,
+        "skipped_meshes": skipped,
+        "acceptance": acceptance,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    say(f"speedups vs mesh=1: { {k: round(v, 2) for k, v in speedups.items()} }")
+    say(f"acceptance: {acceptance}")
+    say(f"wrote {os.path.abspath(out_path)}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=_BENCH_PATH)
+    ap.add_argument("--n-req", type=int, default=N_REQ)
+    args = ap.parse_args()
+    run(out_path=args.out, seed=args.seed, n_req=args.n_req)

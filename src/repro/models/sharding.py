@@ -46,6 +46,10 @@ DEFAULT_RULES: Dict[str, MeshAxes] = {
     "kv_seq": None,  # prefill cache seq axis
     "kv_seq_decode": "model",  # decode cache sharded along sequence (SP)
     "kv_heads": None,
+    # batch-of-requests serving cache: one row per live session, rows
+    # split across the data axis (serving.mesh_engine.ShardedEngine derives
+    # its shard_map specs from this rule via logical_to_spec)
+    "cache_rows": ("pod", "data"),
     "head_dim": None,
     "state": None,
     # parameters

@@ -43,6 +43,18 @@ __all__ = ["Engine"]
 
 
 class Engine:
+    # Shard-aware row addressing: the base engine is a single shard, so the
+    # global row space and the local one coincide.  The mesh-sharded
+    # subclass (serving.mesh_engine.ShardedEngine) overrides these — the
+    # schedulers consult them to size caches (``cache_rows``) and to place
+    # rows into per-shard contention/transport domains.
+    n_shards: int = 1
+
+    def cache_rows(self, n: int) -> int:
+        """Smallest cache batch >= ``n`` this engine can allocate (rounded
+        up to a whole number of row shards)."""
+        return -(-int(n) // self.n_shards) * self.n_shards
+
     def __init__(self, cfg: ArchConfig, params, cache_capacity: int = 4096):
         self.cfg = cfg
         self.params = params

@@ -99,6 +99,12 @@ class GenerationTask:
         self.current_token = int(spec.first_token)
         self.tokens_out: List[int] = []
         self.token_ts: List[float] = []
+        # gen-SLO enforcement (per-token): realized TPOT over the SLO bumps
+        # slo_misses; tokens_since_resume gates preemption eligibility so a
+        # freshly resumed task is not re-evicted for its pre-suspension
+        # misses before it takes a single step
+        self.slo_misses = 0
+        self.tokens_since_resume = 0
         self._rng = (
             None
             if spec.sample_seed is None
@@ -131,12 +137,31 @@ class GenerationTask:
         p /= p.sum()
         return int(self._rng.choice(p.shape[0], p=p))
 
+    @property
+    def slo_missed(self) -> bool:
+        """Whether any emitted token's realized TPOT exceeded the spec's
+        per-token SLO (suspension time between tokens included — queueing
+        is latency the caller observed)."""
+        return self.slo_misses > 0
+
     def record(self, token: int, emit_t: float) -> None:
-        """Commit one emitted token: it becomes the next decode input."""
+        """Commit one emitted token: it becomes the next decode input.
+
+        When the spec carries a ``gen_slo_s``, the token's realized TPOT —
+        emission minus the previous emission (or the generation start for
+        the first token), so suspension gaps count — is checked against it
+        and misses accumulate in ``slo_misses``.
+        """
+        prev_t = self.token_ts[-1] if self.token_ts else self.start_t
         self.tokens_out.append(int(token))
         self.token_ts.append(float(emit_t))
         self.current_token = int(token)
         self.ready_t = float(emit_t)
+        self.tokens_since_resume += 1
+        if self.spec.gen_slo_s is not None and (
+            float(emit_t) - prev_t > self.spec.gen_slo_s
+        ):
+            self.slo_misses += 1
 
     # ------------------------------------------------------------------
     # Preemption (row suspends via the engine's bit-exact RowSnapshot path)
@@ -159,3 +184,4 @@ class GenerationTask:
         continues bit-exactly from ``current_token``."""
         self.row = int(row)
         self.ready_t = float(resume_t)
+        self.tokens_since_resume = 0

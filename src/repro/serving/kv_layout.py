@@ -3,7 +3,20 @@
 primitives (save / restore / reset of a single request's row) that let the
 continuous-admission scheduler recycle rows of one batch-of-requests cache
 across sessions and suspend a preempted session's realized KV for later
-resumption."""
+resumption.
+
+Shard-aware row addressing (mesh-sharded serving).  Schedulers and every
+public entry point name rows by *global* index ``r`` in ``[0, B)``.  When
+the cache's row axis is split over a mesh axis of ``S`` shards (blocked
+layout, matching ``NamedSharding`` partitioning), global row ``r`` lives on
+shard ``r // (B / S)`` at local row ``r % (B / S)``.  The ``*_local``
+kernels below are the per-shard shard_map bodies of the global primitives:
+each receives its shard's ``(L, B/S, cap, Hkv, Dh)`` cache slice plus the
+*replicated* global row operands, recovers local indices from
+``jax.lax.axis_index``, and masks out rows that belong to other shards —
+so every shard performs exactly the row-local arithmetic of the unsharded
+kernel, byte for byte, and runs addressed to foreign shards are dropped via
+a discarded scratch row rather than branching."""
 from __future__ import annotations
 
 import dataclasses
@@ -22,10 +35,13 @@ __all__ = [
     "codec_kv_to_caches",
     "insert_codec_run",
     "insert_codec_runs",
+    "insert_codec_runs_local",
     "extract_row",
     "save_row",
     "restore_row",
+    "restore_row_local",
     "reset_rows",
+    "reset_rows_local",
     "alloc_caches",
     "kv_cache_bytes",
 ]
@@ -127,6 +143,127 @@ def insert_codec_runs(
     kv_k = vrow(kv_k, row_k, row_start, row_width)
     kv_v = vrow(kv_v, row_v, row_start, row_width)
     length = jnp.maximum(length, row_start + row_width)
+    return kv_k, kv_v, length
+
+
+def _local_rows(rows: jnp.ndarray, b_loc: int, axis: Optional[str]):
+    """Map replicated global row ids to this shard's local indices.
+
+    Returns ``(local, mine)``: foreign rows get the out-of-range local
+    index ``b_loc`` (a scratch/drop slot — never a wrapped negative index,
+    which jnp scatter would interpret Python-style)."""
+    shard = jax.lax.axis_index(axis) if axis is not None else 0
+    local = rows.astype(jnp.int32) - shard * b_loc
+    mine = (local >= 0) & (local < b_loc)
+    return jnp.where(mine, local, b_loc), mine
+
+
+def insert_codec_runs_local(
+    kv_k: jnp.ndarray,  # (L, B/S, cap, Hkv, Dh) this shard's cache slice
+    kv_v: jnp.ndarray,
+    length: jnp.ndarray,  # (B/S,) int32 this shard's lengths
+    kv_new: jnp.ndarray,  # (L, 2, sum_T, C) decoded concat, replicated
+    rows: jnp.ndarray,  # (R,) int32 *global* cache row per run, replicated
+    starts: jnp.ndarray,  # (R,) int32 token offset per run, replicated
+    run_tokens: Tuple[int, ...],  # static: token count per run
+    axis: Optional[str],  # mesh axis the row dim is split over
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-shard shard_map body of :func:`insert_codec_runs`.
+
+    Identical merge arithmetic to the global kernel, restricted to this
+    shard's rows: runs addressed to other shards are scattered into an
+    extra scratch row at index ``B/S`` (sliced off before the window
+    merge), so local rows they would otherwise alias keep width 0 and are
+    written back byte-identically.  Every run's payload is replicated to
+    all shards (runs are small — a few chunks — next to the cache), which
+    keeps the body collective-free.
+    """
+    L, b_loc, cap, Hkv, Dh = kv_k.shape
+    t_max = max(run_tokens)
+    off = 0
+    ks, vs = [], []
+    for T in run_tokens:
+        piece = kv_new[:, :, off : off + T].reshape(L, 2, T, Hkv, Dh)
+        pad = ((0, 0), (0, 0), (0, t_max - T), (0, 0), (0, 0))
+        piece = jnp.pad(piece, pad)
+        ks.append(piece[:, 0])
+        vs.append(piece[:, 1])
+        off += T
+    k_upd = jnp.stack(ks).astype(kv_k.dtype)  # (R, L, Tm, Hkv, Dh)
+    v_upd = jnp.stack(vs).astype(kv_v.dtype)
+    local, _ = _local_rows(rows, b_loc, axis)
+    starts = starts.astype(jnp.int32)
+    widths = jnp.asarray(run_tokens, jnp.int32)
+
+    # scatter into B/S + 1 rows: foreign runs pile into the scratch row
+    # (duplicate-index scatter there is unspecified but discarded)
+    row_k = (
+        jnp.zeros((b_loc + 1, L, t_max, Hkv, Dh), kv_k.dtype)
+        .at[local].set(k_upd)[:b_loc]
+    )
+    row_v = (
+        jnp.zeros((b_loc + 1, L, t_max, Hkv, Dh), kv_v.dtype)
+        .at[local].set(v_upd)[:b_loc]
+    )
+    row_start = jnp.zeros((b_loc + 1,), jnp.int32).at[local].set(starts)[:b_loc]
+    row_width = jnp.zeros((b_loc + 1,), jnp.int32).at[local].set(widths)[:b_loc]
+
+    _one_row = jax.vmap(masked_window_update, in_axes=(0, 0, None, None))
+    vrow = jax.vmap(_one_row, in_axes=(1, 0, 0, 0), out_axes=1)
+    kv_k = vrow(kv_k, row_k, row_start, row_width)
+    kv_v = vrow(kv_v, row_v, row_start, row_width)
+    length = jnp.maximum(length, row_start + row_width)
+    return kv_k, kv_v, length
+
+
+def restore_row_local(
+    kv_k: jnp.ndarray,  # (L, B/S, cap, Hkv, Dh) this shard's cache slice
+    kv_v: jnp.ndarray,
+    length: jnp.ndarray,  # (B/S,) int32
+    k_row: jnp.ndarray,  # (L, T, Hkv, Dh) saved tokens, replicated
+    v_row: jnp.ndarray,
+    row: jnp.ndarray,  # scalar int32 *global* target row, replicated
+    axis: Optional[str],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-shard shard_map body of :func:`restore_row`: the shard owning
+    the global row writes the snapshot at its local index; every other
+    shard round-trips the addressed slot's current bytes (a masked
+    read-merge-write, so no branch and no cross-shard traffic)."""
+    L, b_loc, cap, Hkv, Dh = kv_k.shape
+    T = k_row.shape[1]
+    local, mine = _local_rows(row.reshape(1), b_loc, axis)
+    li = jnp.minimum(local[0], b_loc - 1)  # clamp the foreign scratch index
+    own = mine[0]
+    zero = jnp.int32(0)
+    cur_k = jax.lax.dynamic_slice(
+        kv_k, (zero, li, zero, zero, zero), (L, 1, T, Hkv, Dh)
+    )
+    cur_v = jax.lax.dynamic_slice(
+        kv_v, (zero, li, zero, zero, zero), (L, 1, T, Hkv, Dh)
+    )
+    new_k = jnp.where(own, k_row[:, None].astype(kv_k.dtype), cur_k)
+    new_v = jnp.where(own, v_row[:, None].astype(kv_v.dtype), cur_v)
+    kv_k = jax.lax.dynamic_update_slice(kv_k, new_k, (zero, li, zero, zero, zero))
+    kv_v = jax.lax.dynamic_update_slice(kv_v, new_v, (zero, li, zero, zero, zero))
+    length = length.at[li].set(jnp.where(own, jnp.int32(T), length[li]))
+    return kv_k, kv_v, length
+
+
+def reset_rows_local(
+    kv_k: jnp.ndarray,  # (L, B/S, cap, Hkv, Dh) this shard's cache slice
+    kv_v: jnp.ndarray,
+    length: jnp.ndarray,  # (B/S,) int32
+    rows: jnp.ndarray,  # (R,) int32 *global* rows to recycle, replicated
+    axis: Optional[str],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-shard shard_map body of :func:`reset_rows`: each shard zeroes
+    the recycled rows it owns; foreign rows map to the out-of-range scratch
+    index and their scatter updates are dropped."""
+    b_loc = kv_k.shape[1]
+    local, _ = _local_rows(rows, b_loc, axis)
+    kv_k = kv_k.at[:, local].set(jnp.zeros((), kv_k.dtype), mode="drop")
+    kv_v = kv_v.at[:, local].set(jnp.zeros((), kv_v.dtype), mode="drop")
+    length = length.at[local].set(0, mode="drop")
     return kv_k, kv_v, length
 
 

@@ -99,6 +99,20 @@ admission — or a session entering its generation phase — immediately
 inflates every other session's projected compute (Algorithm-1 adaptation
 sees decode pressure), and a completion immediately relaxes it.
 
+Mesh sharding (shard-aware row addressing).  Both schedulers run unchanged
+on a ``serving.mesh_engine.ShardedEngine``, whose batch-of-requests cache
+splits its row axis over S mesh devices in blocked ranges — global row
+``r`` lives on shard ``r // (B/S)``.  The schedulers see global row ids
+throughout (the engine's shard_map kernels translate); what changes is
+capacity and pricing: caches round up to whole row shards
+(``Engine.cache_rows``), the continuous pool becomes a
+:class:`ShardedRowPool` that balances admissions across shards, contention
+reads the measured curves at the per-shard width (``factor_sharded`` —
+each shard is its own compute domain; a stacked generation step charges
+the busiest shard's width), and optional ``shard_transports`` give every
+shard its own fetch-bandwidth domain.  At S=1 each of these degenerates
+exactly, keeping the unsharded behavior bit-identical.
+
 Failure isolation (ISSUE 6).  When a request's session carries a
 ``retry_policy``, every fetch fault is absorbed *inside* its own
 ``SessionTask`` — classified, retried with backoff charged to that task's
@@ -131,7 +145,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -157,6 +171,7 @@ __all__ = [
     "SchedulerResult",
     "ConcurrentScheduler",
     "RowPool",
+    "ShardedRowPool",
     "PreemptionPolicy",
     "RequestTimeline",
     "ContinuousResult",
@@ -375,6 +390,13 @@ class ConcurrentScheduler:
     (e.g. ``ContentionModel({})`` for the conservative fully-serialized
     model, or ``ContentionModel({1: 1.0, 8: 1.0})`` for an idealized
     perfectly-batching engine).
+
+    On a mesh-sharded engine (``engine.n_shards > 1``) the wave prices
+    contention per shard — N live loads spread over S row shards read the
+    measured curve at ``ceil(N/S)`` — and ``shard_transports`` (one
+    Transport per shard) gives each shard its own fetch bandwidth domain:
+    a request without its own transport fetches through its row's shard
+    transport.  On an unsharded engine both are exact no-ops.
     """
 
     def __init__(
@@ -382,11 +404,21 @@ class ConcurrentScheduler:
         engine: Engine,
         *,
         contention: Optional[ContentionModel] = None,
+        shard_transports: Optional[Sequence[object]] = None,
     ):
         self.engine = engine
         self.contention = (
             contention if contention is not None else ContentionModel.measured()
         )
+        self.shard_transports = (
+            list(shard_transports) if shard_transports is not None else None
+        )
+        n_shards = max(int(getattr(engine, "n_shards", 1)), 1)
+        if self.shard_transports is not None and len(self.shard_transports) != n_shards:
+            raise ValueError(
+                f"shard_transports carries {len(self.shard_transports)} "
+                f"transports for a {n_shards}-shard engine — one per shard"
+            )
         self._n_active = 1
 
     # ------------------------------------------------------------------
@@ -396,13 +428,28 @@ class ConcurrentScheduler:
             raise ValueError("ConcurrentScheduler.run needs at least one request")
         _validate_requests(self.engine, requests)
         n = len(requests)
-        caches = self.engine.empty_caches(n)
+        # a sharded engine's cache rounds up to whole row shards; the extra
+        # rows stay inactive (width 0 / never decoded) for the whole wave
+        n_cache = self.engine.cache_rows(n)
+        caches = self.engine.empty_caches(n_cache)
         if caches.kv_k is None:
             raise ValueError(
                 f"scheduler needs a KV-cache family, got {self.engine.cfg.family}"
             )
-        scale = lambda: self.contention.factor(self._n_active)  # noqa: E731
-        tscale = lambda: self.contention.text_factor(self._n_active)  # noqa: E731
+        n_shards = max(int(getattr(self.engine, "n_shards", 1)), 1)
+        rows_per_shard = n_cache // n_shards
+        scale = lambda: self.contention.factor_sharded(  # noqa: E731
+            self._n_active, n_shards
+        )
+        tscale = lambda: self.contention.text_factor_sharded(  # noqa: E731
+            self._n_active, n_shards
+        )
+
+        def _transport(i: int, r: SessionRequest):
+            if r.transport is not None or self.shard_transports is None:
+                return r.transport
+            return self.shard_transports[i // rows_per_shard]
+
         tasks = [
             SessionTask(
                 r.session,
@@ -414,7 +461,7 @@ class ConcurrentScheduler:
                 start_t=r.start_t,
                 compute_scale=scale,
                 text_scale=tscale,
-                transport=r.transport,
+                transport=_transport(i, r),
                 label=_req_label(i, r),
             )
             for i, r in enumerate(requests)
@@ -490,16 +537,35 @@ class RowPool:
     are zeroed).  Misuse raises with the request id and the pool state
     named: double allocation beyond capacity, releasing an unallocated row,
     releasing another request's row.
+
+    Shard-aware row addressing: the base pool is one shard — every row maps
+    to shard 0.  :class:`ShardedRowPool` partitions the row space into
+    blocked per-shard ranges matching the sharded engine's cache layout and
+    balances allocation across them.
     """
+
+    n_shards: int = 1
 
     def __init__(self, n_rows: int):
         if n_rows < 1:
             raise ValueError(f"RowPool needs at least one row, got {n_rows}")
         self.n_rows = int(n_rows)
+        self.rows_per_shard = self.n_rows
         self._free = list(range(self.n_rows))  # heap, ascending
         self._owner: Dict[int, str] = {}
         self._free_since = {r: 0.0 for r in range(self.n_rows)}
         self._dirty: set = set()
+
+    def shard_of(self, row: int) -> int:
+        """Shard owning ``row`` under the blocked layout (always 0 here)."""
+        return 0
+
+    def _peek_next(self) -> int:
+        """The row :meth:`allocate` would hand out next (lowest free)."""
+        return self._free[0]
+
+    def _pop_next(self) -> int:
+        return heapq.heappop(self._free)
 
     @property
     def n_free(self) -> int:
@@ -507,12 +573,12 @@ class RowPool:
 
     @property
     def next_free_since(self) -> float:
-        """Free instant of the row :meth:`allocate` would hand out next
-        (the lowest free row) — the admission-policy frontier when nothing
-        is live: every waiter arrived by then is an EDF candidate."""
+        """Free instant of the row :meth:`allocate` would hand out next —
+        the admission-policy frontier when nothing is live: every waiter
+        arrived by then is an EDF candidate."""
         if not self._free:
             raise RuntimeError(f"no free rows ({self.describe()})")
-        return self._free_since[self._free[0]]
+        return self._free_since[self._peek_next()]
 
     def describe(self) -> str:
         occupied = ", ".join(
@@ -524,7 +590,8 @@ class RowPool:
         )
 
     def allocate(self, owner: str) -> Tuple[int, float, bool]:
-        """Take the lowest free row for ``owner``.
+        """Take the next free row (lowest; sharded pools balance shard load
+        first) for ``owner``.
 
         Returns ``(row, free_since_t, needs_reset)``; the caller must zero
         the row (``Engine.reset_rows``) when ``needs_reset`` — it carries a
@@ -535,7 +602,7 @@ class RowPool:
                 f"admitting request {owner!r} beyond row-pool capacity: "
                 f"{self.describe()}"
             )
-        row = heapq.heappop(self._free)
+        row = self._pop_next()
         if row in self._owner:  # internal invariant, should be unreachable
             raise RuntimeError(
                 f"row pool corrupt: free row {row} already owned by "
@@ -563,6 +630,47 @@ class RowPool:
         self._free_since[row] = float(now_t)
         self._dirty.add(row)
         heapq.heappush(self._free, row)
+
+
+class ShardedRowPool(RowPool):
+    """Row pool over a mesh-sharded cache: rows map to shards in blocked
+    ranges (row ``r`` → shard ``r // rows_per_shard``, the layout of
+    ``serving.mesh_engine.ShardedEngine``), and allocation balances *load*
+    across shards — the free row on the least-occupied shard, lowest row
+    breaking ties — so stacked decode steps and per-shard transports see
+    even per-shard widths instead of piling the first arrivals onto
+    shard 0.  On one shard this degenerates to the base pool's
+    lowest-free-row order exactly."""
+
+    def __init__(self, n_rows: int, *, n_shards: int):
+        if n_shards < 1:
+            raise ValueError(
+                f"ShardedRowPool needs n_shards >= 1, got {n_shards}"
+            )
+        if n_rows % n_shards:
+            raise ValueError(
+                f"ShardedRowPool: {n_rows} rows do not split over "
+                f"{n_shards} shards (whole shards required — size the cache "
+                f"with Engine.cache_rows)"
+            )
+        super().__init__(n_rows)
+        self.n_shards = int(n_shards)
+        self.rows_per_shard = self.n_rows // self.n_shards
+
+    def shard_of(self, row: int) -> int:
+        return int(row) // self.rows_per_shard
+
+    def _peek_next(self) -> int:
+        load = [0] * self.n_shards
+        for r in self._owner:
+            load[self.shard_of(r)] += 1
+        return min(self._free, key=lambda r: (load[self.shard_of(r)], r))
+
+    def _pop_next(self) -> int:
+        row = self._peek_next()
+        self._free.remove(row)
+        heapq.heapify(self._free)
+        return row
 
 
 # ---------------------------------------------------------------------------
@@ -594,12 +702,29 @@ class PreemptionPolicy:
       state suspends losslessly (bit-exact row snapshot + host-side next
       token) — but since their realized work includes the whole context
       plus emitted tokens, they are evicted only when no cheaper doomed
-      loader exists.
+      loader exists.  Under either rule a generating candidate must have
+      emitted at least one token since it (re)started — a freshly resumed
+      (or just-transitioned) generation is not instantly re-evictable,
+      which is what keeps two generating rows from livelocking by swapping
+      one row back and forth at a single virtual instant (the multi-row
+      pools of the mesh-sharded engine make this case the norm).
+
+    ``gen_slo`` additionally makes a *generating* session eligible (under
+    either victim rule) once it has already missed its per-token SLO
+    (``GenerationSpec.gen_slo_s``, realized TPOT over the limit) on a token
+    emitted since its last resume — it is demonstrably not meeting its
+    latency target, so a ready waiter may take its row rather than convoy.
+    The since-resume gate stops a freshly restored task from being
+    re-evicted for pre-suspension misses before it takes a single step.
+    Such rows carry an infinite ``end_t``, so the straggler rule prefers
+    them over any doomed loader (a fetch that lands late still lands; a
+    missed gen-SLO never un-misses).
     """
 
     margin_s: float = 0.0
     require_waiting_headroom: bool = True
     victim: str = "straggler"
+    gen_slo: bool = False
 
     def __post_init__(self):
         if self.victim not in ("straggler", "least_work"):
@@ -652,6 +777,9 @@ class RequestTimeline:
     request generates, ``tokens_out`` / ``token_ts`` record each emitted
     token and its virtual emission instant, and ``gen_finish_t`` the last
     token's — so TPOT and end-to-end latency both read off the timeline.
+    ``gen_slo_miss`` counts emitted tokens whose realized TPOT exceeded the
+    request's ``GenerationSpec.gen_slo_s`` (0 when no per-token SLO was
+    set).
     """
 
     index: int
@@ -664,6 +792,7 @@ class RequestTimeline:
     tokens_out: List[int] = dataclasses.field(default_factory=list)
     token_ts: List[float] = dataclasses.field(default_factory=list)
     gen_finish_t: float = float("nan")
+    gen_slo_miss: int = 0
 
     @property
     def queue_wait_s(self) -> float:
@@ -732,6 +861,12 @@ class ContinuousResult:
         raised): their rows were recycled and no batch was poisoned."""
         return sum(1 for s in self.sessions if s.status != "ok")
 
+    @property
+    def n_gen_slo_miss(self) -> int:
+        """Emitted tokens (across all requests) whose realized TPOT missed
+        the request's per-token generation SLO."""
+        return sum(t.gen_slo_miss for t in self.timeline)
+
 
 class ContinuousScheduler:
     """Open-loop serving: arrivals feed a row pool; rows recycle on finish.
@@ -750,6 +885,17 @@ class ContinuousScheduler:
     is the virtual duration of one uncontended generation decode step;
     stacked steps of M rows charge ``gen_step_s ×
     contention.gen_factor(M)``.
+
+    On a mesh-sharded engine (``engine.n_shards > 1``) the pool rounds up
+    to whole row shards and balances admissions across them
+    (:class:`ShardedRowPool`), contention prices per shard (the measured
+    curves read at the even-spread per-shard width, and a stacked step at
+    the *busiest shard's* participant count — shards step in lockstep, so
+    the widest shard sets the step's duration), and ``shard_transports``
+    (one Transport per shard) fans fetch bandwidth out per shard: a request
+    without its own transport fetches through whichever shard its current
+    row lives on, re-bound on every resume.  At one shard every one of
+    these degenerates exactly to the unsharded behavior.
     """
 
     # hard backstop against a pathological preempt/resume livelock: any
@@ -765,6 +911,7 @@ class ContinuousScheduler:
         preemption: Optional[PreemptionPolicy] = None,
         admission: str = "fifo",
         gen_step_s: float = 2e-3,
+        shard_transports: Optional[Sequence[object]] = None,
     ):
         if rows is not None and rows < 1:
             raise ValueError(f"ContinuousScheduler needs rows >= 1, got {rows}")
@@ -785,6 +932,15 @@ class ContinuousScheduler:
         self.preemption = preemption
         self.admission = admission
         self.gen_step_s = float(gen_step_s)
+        self.shard_transports = (
+            list(shard_transports) if shard_transports is not None else None
+        )
+        n_shards = max(int(getattr(engine, "n_shards", 1)), 1)
+        if self.shard_transports is not None and len(self.shard_transports) != n_shards:
+            raise ValueError(
+                f"shard_transports carries {len(self.shard_transports)} "
+                f"transports for a {n_shards}-shard engine — one per shard"
+            )
         self._n_active = 1
 
     # ------------------------------------------------------------------
@@ -793,15 +949,27 @@ class ContinuousScheduler:
         if not requests:
             raise ValueError("ContinuousScheduler.run needs at least one request")
         _validate_requests(self.engine, requests)
+        n_shards = max(int(getattr(self.engine, "n_shards", 1)), 1)
         n_rows = self.rows if self.rows is not None else len(requests)
+        # sharded caches allocate whole row shards; the rounded-up rows are
+        # real pool capacity (admittable), not dead padding
+        n_rows = self.engine.cache_rows(n_rows)
         caches = self.engine.empty_caches(n_rows)
         if caches.kv_k is None:
             raise ValueError(
                 f"scheduler needs a KV-cache family, got {self.engine.cfg.family}"
             )
-        pool = RowPool(n_rows)
-        scale = lambda: self.contention.factor(self._n_active)  # noqa: E731
-        tscale = lambda: self.contention.text_factor(self._n_active)  # noqa: E731
+        pool = (
+            ShardedRowPool(n_rows, n_shards=n_shards)
+            if n_shards > 1
+            else RowPool(n_rows)
+        )
+        scale = lambda: self.contention.factor_sharded(  # noqa: E731
+            self._n_active, n_shards
+        )
+        tscale = lambda: self.contention.text_factor_sharded(  # noqa: E731
+            self._n_active, n_shards
+        )
 
         tasks: List[Optional[SessionTask]] = [None] * len(requests)
         snaps: Dict[int, object] = {}  # request idx -> RowSnapshot
@@ -853,6 +1021,14 @@ class ContinuousScheduler:
                 return best
             return heapq.heappop(waiting)
 
+        def row_transport(row: int, r: SessionRequest):
+            """The transport a session on ``row`` fetches through: its own
+            if the request pinned one, else its row shard's transport (the
+            per-shard fetch-bandwidth domain), else the session fallback."""
+            if r.transport is not None or self.shard_transports is None:
+                return r.transport
+            return self.shard_transports[pool.shard_of(row)]
+
         def admit(idx: int, ready_t: float) -> None:
             nonlocal caches, n_resume
             r = requests[idx]
@@ -888,7 +1064,7 @@ class ContinuousScheduler:
                     start_t=r.start_t,
                     compute_scale=scale,
                     text_scale=tscale,
-                    transport=r.transport,
+                    transport=row_transport(row, r),
                     label=_req_label(idx, r),
                 )
                 t.begin_at(admit_t)
@@ -896,6 +1072,10 @@ class ContinuousScheduler:
                 timeline[idx].admit_t = admit_t
             else:
                 t.resume(row, admit_t)
+                if r.transport is None and self.shard_transports is not None:
+                    # the resumed row may live on a different shard: fetches
+                    # from here on go through that shard's transport
+                    t.transport = self.shard_transports[pool.shard_of(row)]
                 caches = self.engine.restore_row(caches, snaps.pop(idx), row)
                 timeline[idx].resume_ts.append(admit_t)
                 n_resume += 1
@@ -931,6 +1111,9 @@ class ContinuousScheduler:
             # rides host-side, so the resumed decode is bit-exact
             snaps[idx] = self.engine.save_row(caches, row, g.realized_tokens)
             g.suspend(now_t)
+            # surface the running miss count while parked (the completion
+            # handler writes the final one)
+            timeline[idx].gen_slo_miss = g.slo_misses
             generating.remove(g)
             parked_gen[idx] = g
             del row_owner[row]
@@ -990,7 +1173,16 @@ class ContinuousScheduler:
             last = np.asarray(logits[:, -1], np.float32)
             dt = time.perf_counter() - t0
             m = len(part)
-            end_t = step_t + self.gen_step_s * self.contention.gen_factor(m)
+            # the shards step in lockstep, so the step's virtual duration is
+            # the busiest shard's stacked width (== m on one shard)
+            if n_shards > 1:
+                per_shard = [0] * n_shards
+                for g in part:
+                    per_shard[pool.shard_of(g.row)] += 1
+                width = max(per_shard)
+            else:
+                width = m
+            end_t = step_t + self.gen_step_s * self.contention.gen_factor(width)
             stats.gen_s += dt
             stats.n_gen_steps += 1
             stats.n_gen_tokens += m
@@ -1003,6 +1195,7 @@ class ContinuousScheduler:
                 timeline[idx].tokens_out = list(g.tokens_out)
                 timeline[idx].token_ts = list(g.token_ts)
                 timeline[idx].gen_finish_t = end_t
+                timeline[idx].gen_slo_miss = g.slo_misses
                 generating.remove(g)
                 del row_owner[g.row]
                 del acct_by_row[g.row]
@@ -1057,21 +1250,33 @@ class ContinuousScheduler:
                             obj=t, is_gen=False, end_t=end,
                             preempt_t=preempt_t, work=t.realized_tokens,
                         ))
-                    if policy.victim == "least_work":
-                        # generating rows are eligible under the cost-aware
-                        # rule: TTFT already served, residual work suspends
-                        # losslessly — no doomed-fetch test applies
-                        for g in generating:
-                            preempt_t = max(head_ready, g.ready_t)
-                            if (
-                                policy.require_waiting_headroom
-                                and preempt_t >= head_deadline
-                            ):
-                                continue
-                            cands.append(_VictimCandidate(
-                                obj=g, is_gen=True, end_t=float("inf"),
-                                preempt_t=preempt_t, work=g.realized_tokens,
-                            ))
+                    # generating rows are eligible under the cost-aware rule
+                    # (TTFT already served, residual work suspends
+                    # losslessly — no doomed-fetch test applies), and under
+                    # either rule with ``gen_slo`` once they have missed
+                    # their per-token SLO on a post-resume token
+                    for g in generating:
+                        # anti-thrash guard: a generation that has not
+                        # emitted a token since it (re)started is not
+                        # evictable — without this, two generating rows
+                        # under ``least_work`` livelock (the evicted task
+                        # re-enters as head waiter and evicts the other at
+                        # the same virtual instant, forever)
+                        if g.tokens_since_resume <= 0:
+                            continue
+                        slo_doomed = policy.gen_slo and g.slo_missed
+                        if policy.victim != "least_work" and not slo_doomed:
+                            continue
+                        preempt_t = max(head_ready, g.ready_t)
+                        if (
+                            policy.require_waiting_headroom
+                            and preempt_t >= head_deadline
+                        ):
+                            continue
+                        cands.append(_VictimCandidate(
+                            obj=g, is_gen=True, end_t=float("inf"),
+                            preempt_t=preempt_t, work=g.realized_tokens,
+                        ))
                     victim = _select_victim(policy, cands)
                     if victim is None:
                         break

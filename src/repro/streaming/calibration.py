@@ -42,6 +42,7 @@ __all__ = [
     "measured_generation_contention_factors",
     "measured_level_priorities",
     "measured_text_contention_factors",
+    "sharded_contention_factors",
 ]
 
 DEFAULT_DECODE_BYTES_PER_S = 4e9
@@ -325,3 +326,26 @@ def measured_generation_contention_factors(
 
     sig = tuple(_file_sig(p) for p in cands)
     return dict(_memoized(("gen_contention", cands, backend), sig, compute))
+
+
+def sharded_contention_factors(
+    n_shards: int, path: Optional[str] = None
+) -> Dict[int, float]:
+    """Effective decode slowdown per live-session count on an S-shard mesh.
+
+    The mesh-sharded serving engine splits its cache rows over ``n_shards``
+    contention domains, so N live sessions see the measured single-device
+    curve at the even-spread per-shard width ``ceil(N / S)``.  Returns the
+    measured curve's support re-read through that mapping — what the mesh
+    benchmark records as each shard count's effective contention curve.
+    At ``n_shards=1`` this is exactly :func:`measured_contention_factors`.
+    """
+    if n_shards < 1:
+        raise ValueError(f"sharded_contention_factors needs n_shards >= 1, got {n_shards}")
+    from repro.streaming.pipeline import ContentionModel  # lazy: avoid cycle
+
+    base = measured_contention_factors(path)
+    cm = ContentionModel(base)
+    return {
+        int(m): cm.factor_sharded(int(m), n_shards) for m in sorted(base)
+    }

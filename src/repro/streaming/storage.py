@@ -381,6 +381,13 @@ class TieredKVStore(KVStore):
     surcharge ``SimTransport`` folds into a fetch's modeled timing so the
     session's throughput estimator sees tier misses; wall-real transports
     (local/tcp) pay the cold tier's actual read time instead.
+
+    ``probation`` (2Q-style read-path admission) gates promotion: a cold
+    read is admitted hot only on its *second* cold touch within the last
+    ``probation`` cold reads — the first touch just records a ghost entry
+    (key only, no bytes).  One-shot scans then cannot flush the hot tier's
+    re-read working set.  ``None`` (default) keeps the legacy
+    promote-on-first-read behavior bit-identically.
     """
 
     def __init__(
@@ -394,8 +401,14 @@ class TieredKVStore(KVStore):
         cold_latency_s: float = 0.002,
         cold_gbps: float = 2.0,
         promote_on_read: bool = True,
+        probation: Optional[int] = None,
         namespace: Optional[str] = None,
     ):
+        if probation is not None and probation < 1:
+            raise ValueError(
+                f"TieredKVStore probation window must be >= 1 cold reads "
+                f"(or None to disable), got {probation}"
+            )
         cold = cold if cold is not None else MemoryBackend()
         super().__init__(tables, backend=cold)
         self.cold = cold  # self.backend aliases the durable tier
@@ -426,6 +439,14 @@ class TieredKVStore(KVStore):
         self.n_evictions = 0
         self.n_dedup_chunks = 0
         self.n_encoded_chunks = 0
+        # 2Q probation ghost table: (hash, level) -> cold-read sequence of
+        # the first touch; entries older than the window expire unpromoted
+        self.probation = int(probation) if probation is not None else None
+        self._probation: "OrderedDict[Tuple[str, int], int]" = OrderedDict()
+        self._cold_read_seq = 0
+        self.n_probation_adds = 0
+        self.n_probation_promotes = 0
+        self.n_probation_expired = 0
 
     # -- hashing -------------------------------------------------------------
 
@@ -608,6 +629,33 @@ class TieredKVStore(KVStore):
 
     # -- read path -----------------------------------------------------------
 
+    def _probation_pass(self, h: str, lvl: int) -> bool:
+        """2Q admission gate for one cold read (lock held by the caller).
+
+        True when the blob may be promoted hot: probation is off, or this
+        is the key's second cold touch within the last ``probation`` cold
+        reads.  A first touch records a ghost entry and answers False;
+        ghosts untouched for a full window expire unpromoted.
+        """
+        if self.probation is None:
+            return True
+        self._cold_read_seq += 1
+        seq = self._cold_read_seq
+        while self._probation:  # expire ghosts that fell out of the window
+            _, first_seq = next(iter(self._probation.items()))
+            if seq - first_seq <= self.probation:
+                break
+            self._probation.popitem(last=False)
+            self.n_probation_expired += 1
+        key = (h, lvl)
+        if key in self._probation:
+            del self._probation[key]
+            self.n_probation_promotes += 1
+            return True
+        self._probation[key] = seq
+        self.n_probation_adds += 1
+        return False
+
     def _read_blob(self, h: str, lvl: int, cid: str, ci: int) -> bytes:
         with self._lock:
             try:
@@ -636,7 +684,7 @@ class TieredKVStore(KVStore):
             # verify-before-promote: a rotten cold blob must never become
             # a hot replica that re-serves the corruption
             with self._lock:
-                if self._admit_hot(h, lvl, blob):
+                if self._probation_pass(h, lvl) and self._admit_hot(h, lvl, blob):
                     self.n_promotions += 1
         return blob
 
@@ -668,6 +716,7 @@ class TieredKVStore(KVStore):
         size = self._hot_lru.pop((h, lvl), None)
         if size is not None:
             self._hot_used -= size
+        self._probation.pop((h, lvl), None)
         self.hot.delete(h, 0, lvl)
         self.cold.delete(h, 0, lvl)
 
@@ -753,4 +802,8 @@ class TieredKVStore(KVStore):
                 "hot_used_bytes": self._hot_used,
                 "hot_capacity_bytes": self.hot_bytes,
                 "unique_bytes": self.unique_storage_bytes(),
+                "probation_adds": self.n_probation_adds,
+                "probation_promotes": self.n_probation_promotes,
+                "probation_expired": self.n_probation_expired,
+                "probation_pending": len(self._probation),
             }

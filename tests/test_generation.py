@@ -25,7 +25,12 @@ Invariants (ISSUE 9):
     least-realized-work candidate under ``least_work`` and the latest
     fetch-end straggler (first-wins ties) under the default policy;
   * calibration — ``stacked_decode_step`` parses into gen contention
-    factors and ``ContentionModel.gen_factor`` interpolates/falls back.
+    factors and ``ContentionModel.gen_factor`` interpolates/falls back;
+  * gen-SLO (ISSUE 10) — realized TPOT over ``GenerationSpec.gen_slo_s``
+    accumulates per-token misses (suspension gaps included) that surface on
+    ``RequestTimeline.gen_slo_miss``, and ``PreemptionPolicy(gen_slo=True)``
+    makes an SLO-missing generating row evictable under the straggler rule
+    with token-exact resumption.
 """
 import json
 
@@ -498,3 +503,78 @@ def test_generation_serving_bench_acceptance(tmp_path):
     assert acc["load_only_bit_identical"] is True
     assert acc["generation_interleaved_with_loads"] is True
     assert report["batched_vs_drain"]["speedup"] >= 1.5
+
+
+# ---------------------------------------------------------------------------
+# per-token generation SLO (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+
+def test_generation_spec_validates_gen_slo():
+    with pytest.raises(ValueError, match="gen_slo_s"):
+        GenerationSpec(4, 0, gen_slo_s=0.0)
+
+
+def test_generation_task_gen_slo_accounting():
+    """Realized TPOT over the SLO bumps slo_misses (suspension gaps count);
+    resume() resets the since-resume progress counter, not the misses."""
+    spec = GenerationSpec(5, 7, gen_slo_s=0.1)
+    g = GenerationTask(spec, index=0, label="g", row=0, start_t=1.0,
+                       context_tokens=10, capacity=64)
+    g.record(3, 1.05)  # 0.05 <= 0.1: on time (measured from start_t)
+    assert g.slo_misses == 0 and not g.slo_missed
+    g.record(4, 1.30)  # 0.25 > 0.1: miss
+    assert g.slo_misses == 1 and g.slo_missed
+    assert g.tokens_since_resume == 2
+    g.suspend(1.3)
+    g.resume(1, 2.0)
+    assert g.tokens_since_resume == 0 and g.slo_misses == 1
+    g.record(5, 2.75)  # the 1.45 s gap includes the suspension: miss
+    assert g.slo_misses == 2 and g.tokens_since_resume == 1
+
+
+def test_gen_slo_misses_surface_on_timeline(gfix):
+    """N=1 with the default 2e-3 step: a 1.5e-3 per-token SLO misses on
+    every token; a loose one misses on none — and the counts land on the
+    RequestTimeline and the result aggregate."""
+    u, first = gfix["u"], gfix["first"]
+    for slo, want in ((1.5e-3, GEN), (1.0, 0)):
+        out = ContinuousScheduler(gfix["eng"], contention=IDEAL).run(
+            _requests(gfix, [BandwidthTrace.constant(3 * u)],
+                      sess_kw=[dict(fixed_level=0)],
+                      specs=[GenerationSpec(GEN, first, gen_slo_s=slo)])
+        )
+        assert out.timeline[0].gen_slo_miss == want
+        assert out.n_gen_slo_miss == want
+        assert out.timeline[0].n_tokens_out == GEN  # flagged, never truncated
+
+
+def test_gen_slo_makes_straggler_policy_preempt_generation(gfix):
+    """Under the default straggler victim a generating row is untouchable —
+    unless ``gen_slo`` is set and the row has already missed its per-token
+    SLO: then the waiting load evicts it, and the resumed stream is still
+    token-exact."""
+    u, first = gfix["u"], gfix["first"]
+    spec = GenerationSpec(10, first, gen_slo_s=1e-3)  # 0.05 step: all miss
+    mk = lambda policy: ContinuousScheduler(  # noqa: E731
+        gfix["eng"], rows=1, contention=IDEAL, gen_step_s=0.05,
+        preemption=policy,
+    ).run(_requests(
+        gfix,
+        [BandwidthTrace.constant(3 * u), BandwidthTrace.constant(50 * u)],
+        sess_kw=[dict(fixed_level=0), dict(fixed_level=0)],
+        arrivals=[0.0, 0.55],
+        specs=[spec, None],
+    ))
+
+    keep = mk(PreemptionPolicy())  # straggler, gen_slo off: no candidates
+    assert keep.n_preemptions == 0
+
+    out = mk(PreemptionPolicy(gen_slo=True))
+    t0 = out.timeline
+    assert out.n_preemptions >= 1 and out.n_resumes >= 1
+    assert t0[0].preempt_ts[0] > t0[0].finish_t  # evicted mid-generation
+    assert t0[0].gen_slo_miss == 10  # every token's TPOT over the 1 ms SLO
+    want = _oracle_tokens(gfix, out.sessions[0].caches, first, 10)
+    assert t0[0].tokens_out == want  # bit-exact continuation
+    assert out.sessions[1].ttft_s < 1.25  # the waiter met its SLO

@@ -16,6 +16,11 @@ Covers the :class:`~repro.streaming.storage.TieredKVStore` stack:
     demotion writes through to cold before dropping the last hot replica,
     and ``SimTransport`` folds ``tier_penalty`` into fetch timing so an
     all-cold store reports slower fetches (and a higher TTFT) than all-hot;
+  * 2Q probation (ISSUE 10): with ``probation=N`` a cold read promotes hot
+    only on its second touch within the last N cold reads — first touches
+    leave ghosts, scans expire them unpromoted, ``probation=None`` is the
+    legacy first-touch behavior, and clearing probation never overrides
+    hot-capacity admission; all four ``probation_*`` counters reconcile;
   * eviction x faults: a fetch landing on an entry evicted/deleted behind
     the reader classifies as ``missing`` and takes the PR 6 degrade ladder;
     tier counters reconcile exactly with ``FaultPlan`` injection counts;
@@ -661,3 +666,80 @@ def test_tcp_flat_store_has_no_tier_stats(sfix):
         assert server.tier_stats() == {}
     finally:
         server.close()
+
+
+# ---------------------------------------------------------------------------
+# 2Q probation gate on the hot-tier read path (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+
+def test_probation_window_validates(sfix):
+    with pytest.raises(ValueError, match="probation"):
+        TieredKVStore(sfix["ctab"], probation=0)
+
+
+def test_probation_admits_hot_on_second_touch_only(sfix):
+    ts = TieredKVStore(sfix["ctab"], probation=8)
+    ts.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                tokens=sfix["tokens"][0].tolist())
+    ts.evict_hot(1000)  # demote everything: every read now lands cold
+    assert ts.n_hot_hits == 0
+
+    b1 = ts.get_kv("ctx", 0, 1)  # first cold touch: ghost only, no promote
+    c = ts.tier_counters()
+    assert c["promotions"] == 0
+    assert c["probation_adds"] == 1 and c["probation_pending"] == 1
+
+    b2 = ts.get_kv("ctx", 0, 1)  # second touch within the window: promote
+    c = ts.tier_counters()
+    assert c["promotions"] == 1 and c["probation_promotes"] == 1
+    assert c["probation_pending"] == 0
+    assert b2 == b1  # the gate never changes the bytes served
+
+    ts.get_kv("ctx", 0, 1)  # now hot
+    assert ts.n_hot_hits == 1 and ts.n_cold_hits == 2
+
+
+def test_probation_ghosts_expire_outside_window(sfix):
+    """probation=2 with a scan of distinct chunks between touches: the
+    first touch's ghost falls out of the window, so the re-touch is a
+    fresh first touch again — scans cannot populate the hot tier."""
+    ts = TieredKVStore(sfix["ctab"], probation=2)
+    ts.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                tokens=sfix["tokens"][0].tolist())
+    ts.evict_hot(1000)
+    for ci in (0, 1, 2, 3, 0):  # the scan evicts chunk 0's ghost
+        ts.get_kv("ctx", ci, 1)
+    c = ts.tier_counters()
+    assert c["promotions"] == 0 and c["probation_promotes"] == 0
+    assert c["probation_adds"] == 5  # chunk 0 re-entered as a first touch
+    assert c["probation_expired"] == 2
+    ts.get_kv("ctx", 0, 1)  # this one is a second touch within the window
+    c = ts.tier_counters()
+    assert c["promotions"] == 1 and c["probation_promotes"] == 1
+
+
+def test_probation_none_is_legacy_first_touch_promotion(sfix):
+    ts = TieredKVStore(sfix["ctab"])  # probation off (default)
+    ts.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                tokens=sfix["tokens"][0].tolist())
+    ts.evict_hot(1000)
+    ts.get_kv("ctx", 0, 1)
+    c = ts.tier_counters()
+    assert c["promotions"] == 1  # promoted on the very first cold read
+    assert c["probation_adds"] == c["probation_promotes"] == 0
+    assert c["probation_expired"] == c["probation_pending"] == 0
+
+
+def test_probation_pass_does_not_force_admission(sfix):
+    """Clearing probation and fitting in the hot tier are independent
+    gates: with zero hot capacity the second touch clears probation but
+    still cannot promote."""
+    ts = TieredKVStore(sfix["ctab"], hot_bytes=0, probation=4)
+    ts.store_kv("ctx", sfix["kv"], chunk_tokens=CHUNK,
+                tokens=sfix["tokens"][0].tolist())
+    ts.get_kv("ctx", 0, 1)
+    ts.get_kv("ctx", 0, 1)
+    c = ts.tier_counters()
+    assert c["probation_promotes"] == 1 and c["promotions"] == 0
+    assert ts.n_hot_hits == 0 and ts.n_cold_hits == 2
